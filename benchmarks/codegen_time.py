@@ -1,0 +1,126 @@
+"""Fig. 8 reproduction: hierarchical vs monolithic code generation.
+
+The paper's claim: compiling each task *definition* once (and in parallel)
+instead of once per *instance* accelerates RTL codegen 6.8x on a 32-thread
+host.  The XLA analogue measured here, in two forms:
+
+1. **Stage-graph compilation** (core/hier_compile.py): a dataflow graph of
+   N instances stamped from K definitions (systolic-array shape, like the
+   paper's gaussian with 564 instances of 15 tasks).  ``monolithic``
+   lower+compiles every instance; ``hierarchical`` deduplicates by
+   (definition, shape signature) and compiles the K unique ones through a
+   thread pool.  Expected speedup ~ N/K x pool-parallelism; this container
+   has 1 core, so the measured number isolates the dedup factor.
+
+2. **In-program form**: an L-layer transformer compiled as ``lax.scan``
+   over stacked weights (body traced/optimized once — TAPA's
+   compile-once) versus a Python-unrolled loop (XLA re-optimizes L inlined
+   copies — the monolithic baseline).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hier_compile import StageInstance, compile_stages
+
+OUT = Path(__file__).parent / "out"
+
+
+# --- 1. stage-graph dedup ----------------------------------------------------
+
+def _make_defs():
+    """Three stage definitions (feeder / PE / reducer shapes)."""
+    def feeder(x):
+        return jnp.tanh(x) * 1.5
+
+    def pe(x):
+        return jnp.tanh(x @ x.T) @ x
+
+    def reducer(x):
+        return jnp.cumsum(x, axis=0) / (1.0 + jnp.abs(x))
+
+    return [feeder, pe, reducer]
+
+
+def stage_graph_bench(n_instances: int = 24, dim: int = 256) -> dict:
+    defs = _make_defs()
+    x = jnp.ones((dim, dim), jnp.float32)
+
+    def instances():
+        return [StageInstance(fn=defs[i % len(defs)], args=(x,),
+                              name=f"inst{i}")
+                for i in range(n_instances)]
+
+    out = {}
+    for mode in ("monolithic", "hierarchical"):
+        jax.clear_caches()
+        rep = compile_stages(instances(), mode=mode)
+        out[mode] = {"wall_s": round(rep.wall_s, 3),
+                     "n_instances": rep.n_instances,
+                     "n_unique": rep.n_unique}
+    out["speedup"] = round(out["monolithic"]["wall_s"] /
+                           out["hierarchical"]["wall_s"], 2)
+    out["dedup_factor"] = n_instances / len(defs)
+    return out
+
+
+# --- 2. scan vs unroll -------------------------------------------------------
+
+def scan_vs_unroll_bench(n_layers: int = 12, d: int = 128,
+                         batch: int = 4, seq: int = 64) -> dict:
+    def layer(h, w):
+        a = jnp.tanh(h @ w["w1"])
+        return h + a @ w["w2"], None
+
+    ws = {"w1": jnp.ones((n_layers, d, 4 * d)),
+          "w2": jnp.ones((n_layers, 4 * d, d))}
+    x = jnp.ones((batch, seq, d))
+
+    def f_scan(ws, x):
+        h, _ = jax.lax.scan(layer, x, ws)
+        return h.sum()
+
+    def f_unroll(ws, x):
+        h = x
+        for i in range(n_layers):
+            h, _ = layer(h, jax.tree.map(lambda v: v[i], ws))
+        return h.sum()
+
+    out = {}
+    for name, f in (("scan", f_scan), ("unroll", f_unroll)):
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        jax.jit(jax.grad(f)).lower(ws, x).compile()
+        out[name] = {"compile_s": round(time.perf_counter() - t0, 3)}
+    out["speedup"] = round(out["unroll"]["compile_s"] /
+                           out["scan"]["compile_s"], 2)
+    out["n_layers"] = n_layers
+    return out
+
+
+def main() -> dict:
+    res = {"stage_graph": stage_graph_bench(),
+           "scan_vs_unroll": scan_vs_unroll_bench()}
+    OUT.mkdir(exist_ok=True)
+    (OUT / "codegen_time.json").write_text(json.dumps(res, indent=1))
+    sg, su = res["stage_graph"], res["scan_vs_unroll"]
+    print(f"stage graph : monolithic {sg['monolithic']['wall_s']}s "
+          f"({sg['monolithic']['n_instances']} compiles) vs hierarchical "
+          f"{sg['hierarchical']['wall_s']}s ({sg['hierarchical']['n_unique']}"
+          f" compiles) -> {sg['speedup']}x")
+    print(f"scan/unroll : unroll {su['unroll']['compile_s']}s vs scan "
+          f"{su['scan']['compile_s']}s ({su['n_layers']} layers) -> "
+          f"{su['speedup']}x")
+    print("paper claim : 6.8x (32 hyper-threads; dedup x parallel-HLS)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

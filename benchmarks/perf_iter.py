@@ -1,0 +1,310 @@
+"""S:Perf — hypothesis-driven hillclimbing on the three chosen cells.
+
+Cell selection (from the S:Roofline baseline table):
+  * qwen3-0.6b | train_4k   — worst roofline fraction among trains; memory-
+    bound on materialized [S, S] attention scores.
+  * granite-moe-1b-a400m | train_4k — most collective-bound train (GSPMD
+    lowers the MoE scatter/gather dispatch into pod-wide all-reduces).
+  * grok-1-314b | decode_32k — most collective-bound overall (FSDP weight
+    all-gathers per decoded token) AND an HBM-capacity violation the
+    per-device memory analysis exposes (68 GB/chip of batch-sharded KV).
+
+Each variant records: hypothesis -> napkin-math prediction -> measured
+before/after -> confirmed/refuted.  Variants are CUMULATIVE within a cell
+(each builds on the previous winner) unless marked independent.
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_iter [--cell name]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from pathlib import Path
+
+OUT = Path(__file__).parent / "out"
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9,
+      "hbm_capacity": 16e9}
+
+
+def _measure_variant(cfg, shape, mesh, *, pol=None, scan_layers=True,
+                     remat=True, opt=None):
+    """Full fit-corrected terms + per-device memory for one build."""
+    import jax
+    from benchmarks import roofline as RL
+    from repro.launch.dryrun import collective_bytes
+    from repro.launch.steps import input_specs
+
+    # fit-corrected flops/bytes/coll (handles the scan single-count)
+    def meas(c, scan):
+        spec = input_specs(c, shape, mesh, pol=pol, scan_layers=scan,
+                           remat=remat, opt=opt)
+        with mesh:
+            compiled = jax.jit(
+                spec["fn"], in_shardings=spec["in_shardings"],
+                out_shardings=spec["out_shardings"],
+                donate_argnums=spec["donate_argnums"]).lower(
+                    *spec["args"]).compile()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        mem = compiled.memory_analysis()
+        return {"flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "coll": float(coll["total_bytes"]),
+                "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0))}
+
+    keys = ("flops", "bytes", "coll")
+    L = cfg.n_layers
+    p_small = 2 if cfg.hybrid is not None else None
+    s2 = meas(RL._variant_cfg(cfg, 2, period=p_small), True)
+    s4 = meas(RL._variant_cfg(cfg, 4, period=p_small), True)
+    m_scan = meas(cfg, True)
+    full = {}
+    for k in keys:
+        if s4[k] > 1.6 * max(s2[k], 1.0):
+            full[k] = m_scan[k]                       # trip-accounted
+        else:
+            u2 = meas(RL._variant_cfg(cfg, 2, period=p_small), False)
+            u4 = meas(RL._variant_cfg(cfg, 4, period=p_small), False)
+            per = (u4[k] - u2[k]) / 2.0
+            full[k] = max(u2[k] - 2 * per + L * per, 0.0)
+    return {
+        "compute_s": full["flops"] / HW["peak_flops"],
+        "memory_s": full["bytes"] / HW["hbm_bw"],
+        "collective_s": full["coll"] / HW["ici_bw"],
+        "hbm_per_dev_gb": (m_scan["arg_bytes"] + m_scan["temp_bytes"]) / 1e9,
+        "raw": full,
+    }
+
+
+def _dominant(t):
+    return max(("compute", t["compute_s"]), ("memory", t["memory_s"]),
+               ("collective", t["collective_s"]), key=lambda x: x[1])[0]
+
+
+# ---------------------------------------------------------------------------
+# variant definitions
+# ---------------------------------------------------------------------------
+
+def cell_qwen3_train():
+    """qwen3-0.6b train_4k: memory-bound."""
+    from repro.configs import SHAPES, get_config
+    from repro.distributed.sharding import ShardingPolicy
+    cfg = get_config("qwen3_0_6b")
+    shape = SHAPES["train_4k"]
+    return cfg, shape, [
+        dict(name="baseline",
+             hypothesis="naive attention materializes fp32 [S,S] scores "
+                        "per head per layer; expect memory-dominated",
+             predict="memory >> compute"),
+        dict(name="chunked_attention",
+             cfg_kw={"attn_impl": "chunked"},
+             hypothesis="online-softmax over 1024-wide KV chunks removes "
+                        "the [4096,4096] score materialization; per-device "
+                        "score traffic drops ~Sk/chunk = 4x on the "
+                        "attention part of HBM bytes",
+             predict="memory_s down >=2x; flops slightly down "
+                     "(no masked-lane waste); collective unchanged"),
+        dict(name="chunked+dp_over_both_axes",
+             cfg_kw={"attn_impl": "chunked"},
+             pol=ShardingPolicy(tp_axis=None,
+                                dp_axes=("data", "model"),
+                                batch_axes=("data", "model")),
+             hypothesis="0.6B params (1.2 GB bf16) fit replicated; "
+                        "256-way pure-DP removes every per-layer TP "
+                        "activation collective, leaving one 2.4GB/dev "
+                        "gradient all-reduce",
+             predict="collective_s down >5x; memory/compute about flat"),
+        dict(name="kernel_attention(analytic)",
+             cfg_kw={"attn_impl": "noscore"},
+             pol=ShardingPolicy(tp_axis=None,
+                                dp_axes=("data", "model"),
+                                batch_axes=("data", "model")),
+             analytic_attn_bytes=True,
+             hypothesis="XLA's chunked attention still streams score "
+                        "blocks through HBM (dot outputs are real "
+                        "buffers); the Pallas flash kernel holds them in "
+                        "VMEM, so attention HBM traffic collapses to "
+                        "q/k/v/o (+bwd recompute).  Model it as the "
+                        "score-free build + analytic qkvo traffic",
+             predict="memory_s down 2-4x vs chunked; memory stops "
+                     "dominating"),
+    ]
+
+
+def cell_granite_train():
+    """granite-moe train_4k: collective-bound (MoE dispatch)."""
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("granite_moe_1b_a400m")
+    shape = SHAPES["train_4k"]
+    return cfg, shape, [
+        dict(name="baseline",
+             hypothesis="MoE routing's slot-assignment cumsum over 8.4M "
+                        "token-copies lowers to a QUADRATIC reduce-window "
+                        "(measured 1.4e14 counted flops for the routing "
+                        "alone) and the scatter dispatch through the "
+                        "EP-sharded [E,C,d] buffer adds pod-wide "
+                        "all-reduces",
+             predict="compute- and collective-heavy, tiny MODEL/HLO"),
+        dict(name="assoc_scan_routing",
+             cfg_kw={"moe_impl": "scatter_fast"},
+             hypothesis="log-depth associative_scan replaces the "
+                        "quadratic cumsum: routing flops drop ~75,000x "
+                        "(1.4e14 -> 1.9e9 measured in isolation); "
+                        "dispatch collectives unchanged",
+             predict="compute_s down >5x; collective_s roughly flat"),
+        dict(name="dense_gshard_dispatch",
+             cfg_kw={"moe_impl": "dense"},
+             hypothesis="einsum dispatch with batch-grouped [B,S,E,C] "
+                        "masks keeps routing local to the data shard; "
+                        "no scatter/gather left for GSPMD to mis-shard",
+             predict="collective_s down >=2x vs assoc_scan; dispatch "
+                     "einsum flops up but stay non-dominant"),
+        dict(name="dense+chunked_attention",
+             cfg_kw={"moe_impl": "dense", "attn_impl": "chunked"},
+             hypothesis="with dispatch fixed, memory dominates via "
+                        "attention scores; chunked attention removes them "
+                        "as in the qwen3 cell",
+             predict="memory_s down ~2x vs previous variant"),
+    ]
+
+
+def cell_grok_decode():
+    """grok-1-314b decode_32k: collective catastrophe + HBM violation."""
+    from repro.configs import SHAPES, get_config
+    from repro.distributed.sharding import ShardingPolicy
+    cfg = get_config("grok_1_314b")
+    shape = SHAPES["decode_32k"]
+    return cfg, shape, [
+        dict(name="baseline",
+             hypothesis="param_count > 5e10 triggers FSDP; decode then "
+                        "all-gathers ~2.4GB/dev of weights EVERY token; "
+                        "also KV cache is only batch-sharded (16-way): "
+                        "1.1TB/16 = 69GB/dev >> 16GB HBM — infeasible",
+             predict="collective-dominated AND over HBM capacity"),
+        dict(name="resident_2d_weights",
+             pol=ShardingPolicy(two_d=True, fsdp=False, batch_axes=()),
+             hypothesis="shard every large weight over all 256 chips "
+                        "(('data','model') combined axis): 628GB bf16 -> "
+                        "2.5GB/dev RESIDENT, no per-token gathers; decode "
+                        "batch (128 tokens) replicated: activation "
+                        "all-reduces are ~MB-scale; KV cache sequence-"
+                        "sharded 256-way: 1.1TB -> 4.3GB/dev",
+             predict="collective_s down >20x; hbm_per_dev under 16GB"),
+        dict(name="resident_2d+int8_kv",
+             cfg_kw={"kv_quant": True},
+             pol=ShardingPolicy(two_d=True, fsdp=False, batch_axes=()),
+             hypothesis="int8 KV with per-(pos,head) fp16 scales halves "
+                        "both the cache footprint (4.3 -> 2.2 GB/dev) and "
+                        "the attention's cache-read bytes; dequant fuses "
+                        "into the score dot's operand load",
+             predict="memory_s down ~1.5-2x; hbm_per_dev down ~2GB"),
+    ]
+
+
+def cell_grok_train():
+    """BONUS cell: grok-1-314b train_4k — the worst absolute cell in the
+    table (450 s collective term).  The granite fixes should transfer."""
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("grok_1_314b")
+    shape = SHAPES["train_4k"]
+    return cfg, shape, [
+        dict(name="baseline",
+             hypothesis="314B params force FSDP (param all-gathers per "
+                        "layer fwd+bwd) on top of the MoE scatter "
+                        "dispatch and quadratic routing cumsum",
+             predict="collective >> all; compute inflated by routing"),
+        dict(name="assoc_scan+dense_dispatch",
+             cfg_kw={"moe_impl": "dense"},
+             hypothesis="granite's two MoE fixes transfer: log-depth "
+                        "routing + batch-grouped einsum dispatch; FSDP "
+                        "weight gathers remain (they are needed at 314B)",
+             predict="collective down 2-5x (dispatch share), compute "
+                     "drops to real expert flops"),
+        dict(name="dense+chunked_attention",
+             cfg_kw={"moe_impl": "dense", "attn_impl": "chunked"},
+             hypothesis="removes the [4096,4096] score materialization "
+                        "from the memory term (48 heads, 8 kv)",
+             predict="memory_s down >=1.5x"),
+    ]
+
+
+CELLS = {
+    "qwen3_train": cell_qwen3_train,
+    "granite_train": cell_granite_train,
+    "grok_decode": cell_grok_decode,
+    "grok_train": cell_grok_train,
+}
+
+
+def run_cell(name: str, builder) -> dict:
+    from repro.launch.mesh import make_production_mesh
+    cfg0, shape, variants = builder()
+    mesh = make_production_mesh()
+    rows = []
+    prev = None
+    for v in variants:
+        cfg = dataclasses.replace(cfg0, **v.get("cfg_kw", {}))
+        print(f"[perf:{name}] {v['name']} ...", flush=True)
+        try:
+            t = _measure_variant(cfg, shape, mesh, pol=v.get("pol"),
+                                 remat=v.get("remat", True))
+            if v.get("analytic_attn_bytes"):
+                # add the flash kernel's own HBM/flop footprint on top of
+                # the score-free build (q/k/v/o streamed once fwd + ~2x in
+                # the bwd recompute; scores stay in VMEM)
+                nd = mesh.size
+                tloc = shape.tokens / nd
+                hd, nh, nkv, L = cfg.hd, cfg.n_heads, cfg.n_kv_heads, \
+                    cfg.n_layers
+                attn_bytes = L * tloc * hd * (2 * nh + 2 * nkv) * 2 * 3
+                attn_flops = (L * 3 * 0.5 * 2 * 2
+                              * tloc * shape.seq_len * nh * hd)
+                t["memory_s"] += attn_bytes / HW["hbm_bw"]
+                t["compute_s"] += attn_flops / HW["peak_flops"]
+                t["analytic_attn"] = {"bytes": attn_bytes,
+                                      "flops": attn_flops}
+            row = {"variant": v["name"], "hypothesis": v["hypothesis"],
+                   "prediction": v["predict"], **t,
+                   "dominant": _dominant(t)}
+            if prev is not None:
+                row["delta_vs_prev"] = {
+                    k: round(prev[k] / t[k], 2) if t[k] else None
+                    for k in ("compute_s", "memory_s", "collective_s")}
+            prev = t
+            print(f"  comp={t['compute_s']*1e3:.1f}ms "
+                  f"mem={t['memory_s']*1e3:.1f}ms "
+                  f"coll={t['collective_s']*1e3:.1f}ms "
+                  f"hbm={t['hbm_per_dev_gb']:.1f}GB dom={row['dominant']}")
+        except Exception as e:  # noqa: BLE001
+            row = {"variant": v["name"], "error": repr(e)[:500]}
+            print(f"  FAILED: {repr(e)[:200]}")
+        rows.append(row)
+    return {"cell": name, "arch": cfg0.name, "shape": shape.name,
+            "variants": rows}
+
+
+def main(argv=None):
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all", choices=["all", *CELLS])
+    args = ap.parse_args(argv)
+    OUT.mkdir(exist_ok=True)
+    path = OUT / "perf_iter.json"
+    results = json.loads(path.read_text()) if path.exists() else {}
+    for name, builder in CELLS.items():
+        if args.cell not in ("all", name):
+            continue
+        results[name] = run_cell(name, builder)
+        path.write_text(json.dumps(results, indent=1))
+    path.write_text(json.dumps(results, indent=1))
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Benchmark harness entry point — one section per paper table/figure plus
+the roofline/dry-run reports.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast suite
+    PYTHONPATH=src python -m benchmarks.run --full     # + recompute
+                                                       #   roofline sweep
+
+Sections:
+  Fig. 5/6  lines-of-code with vs without the TAPA APIs   (loc.py)
+  Fig. 7    simulation time, 3 engines x 7 benchmarks     (sim_time.py)
+  Fig. 8    hierarchical vs monolithic code generation    (codegen_time.py)
+  S:Dry-run 80-cell lower+compile summary                 (out/dryrun.json)
+  S:Roofline three-term table                             (roofline.py)
+  S:Perf    hillclimb log                                 (out/perf_iter.json)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+OUT = Path(__file__).parent / "out"
+
+
+def section(title: str) -> None:
+    print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
+
+
+def dryrun_summary() -> None:
+    p = OUT / "dryrun.json"
+    if not p.exists():
+        print("missing out/dryrun.json — run "
+              "`python -m repro.launch.dryrun --arch all --mesh both`")
+        return
+    d = json.loads(p.read_text())
+    ok = sum(1 for v in d.values() if v.get("ok") and "skipped" not in v)
+    skip = sum(1 for v in d.values() if "skipped" in v)
+    fail = [k for k, v in d.items() if not v.get("ok")]
+    print(f"cells: {len(d)}  compiled-ok: {ok}  skipped(by-design): {skip}  "
+          f"failed: {len(fail)} {fail or ''}")
+    for mesh in ("pod16x16", "pod2x16x16"):
+        cells = {k: v for k, v in d.items() if v.get("mesh") == mesh
+                 and v.get("ok") and "skipped" not in v}
+        if cells:
+            worst = max(cells.values(),
+                        key=lambda v: v.get("compile_s", 0))
+            print(f"  {mesh}: {len(cells)} compiled, slowest compile "
+                  f"{worst['compile_s']}s ({worst['arch']}|{worst['shape']})")
+
+
+def roofline_summary() -> None:
+    p = OUT / "roofline.md"
+    if p.exists():
+        print(p.read_text())
+    else:
+        print("missing out/roofline.md — run `python -m benchmarks.roofline`")
+
+
+def perf_summary() -> None:
+    p = OUT / "perf_iter.json"
+    if not p.exists():
+        print("missing out/perf_iter.json — run "
+              "`python -m benchmarks.perf_iter`")
+        return
+    d = json.loads(p.read_text())
+    for cell in d.values():
+        print(f"\n[{cell['cell']}] {cell['arch']} | {cell['shape']}")
+        for v in cell["variants"]:
+            if "error" in v:
+                print(f"  {v['variant']:<28} ERROR {v['error'][:80]}")
+                continue
+            dl = v.get("delta_vs_prev")
+            dl = (f"  dx(prev/this): comp {dl['compute_s']}x "
+                  f"mem {dl['memory_s']}x coll {dl['collective_s']}x"
+                  if dl else "")
+            print(f"  {v['variant']:<28} comp={v['compute_s']*1e3:8.1f}ms "
+                  f"mem={v['memory_s']*1e3:8.1f}ms "
+                  f"coll={v['collective_s']*1e3:8.1f}ms "
+                  f"hbm={v['hbm_per_dev_gb']:5.1f}GB "
+                  f"dom={v['dominant']}{dl}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also (re)compute the roofline sweep (slow)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import codegen_time, loc, sim_time
+
+    section("Fig. 5/6 — lines of code (with vs without TAPA APIs)")
+    loc.main()
+    section("Fig. 7 — software simulation time (3 engines x 7 benchmarks)")
+    sim_time.main()
+    section("Fig. 8 — code generation: hierarchical vs monolithic")
+    codegen_time.main()
+    if args.full:
+        from benchmarks import roofline
+        section("S:Roofline (recomputing)")
+        roofline.main([])
+    section("S:Dry-run — 80-cell multi-pod compile summary")
+    dryrun_summary()
+    section("S:Roofline — per (arch x shape), 16x16 pod")
+    roofline_summary()
+    section("S:Perf — hillclimb log (3 cells)")
+    perf_summary()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,49 @@
+"""Cannon's algorithm on an 8x8 toroidal PE mesh + hierarchical compile.
+
+Run:  PYTHONPATH=src python examples/cannon_systolic.py
+
+The torus wrap-around links are feedback loops: sequential simulation must
+fail (paper Fig. 7), cooperative simulation verifies the matmul in
+milliseconds.  The same PE definition is instantiated 64 times — the
+hierarchical compiler (C3) compiles it ONCE, the monolithic baseline 64
+times.
+"""
+
+import jax.numpy as jnp
+
+from repro.apps import cannon
+from repro.core.hier_compile import StageInstance, compile_stages
+
+
+def main():
+    print("Cannon's algorithm, 8x8 PEs, 64x64 blocks:")
+    for engine in ("coroutine", "sequential"):
+        r = cannon.run(engine=engine, P=8, n=8)
+        if r.report.ok:
+            print(f"  [{engine:10s}] instances={r.report.n_instances} "
+                  f"channels={r.report.n_channels} correct={r.correct} "
+                  f"err={r.max_err:.2e} wall={r.report.wall_s*1e3:.1f}ms")
+        else:
+            print(f"  [{engine:10s}] FAILED as the paper documents "
+                  f"(feedback loops)")
+
+    # C3 on the PE definition: 64 instances, ONE compile
+    def pe_body(a, b, acc):
+        return acc + a @ b
+
+    a = jnp.ones((64, 64), jnp.bfloat16)
+    insts = [StageInstance(fn=pe_body, args=(a, a, a), name=f"PE{i}")
+             for i in range(64)]
+    rep_h = compile_stages(insts, mode="hierarchical")
+    insts2 = [StageInstance(fn=pe_body, args=(a, a, a), name=f"PE{i}")
+              for i in range(64)]
+    rep_m = compile_stages(insts2, mode="monolithic")
+    print(f"\nhierarchical compile: {rep_h.n_unique} compilation(s) for "
+          f"{rep_h.n_instances} instances in {rep_h.wall_s:.3f}s")
+    print(f"monolithic compile:  {len(rep_m.per_key_s)} compilations in "
+          f"{rep_m.wall_s:.3f}s "
+          f"({rep_m.wall_s/max(rep_h.wall_s,1e-9):.1f}x slower)")
+
+
+if __name__ == "__main__":
+    main()

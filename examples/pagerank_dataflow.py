@@ -1,0 +1,35 @@
+"""The paper's motivating example: an edge-centric PageRank accelerator as
+a task graph (Figure 3), numerically verified against numpy power
+iteration.
+
+Run:  PYTHONPATH=src python examples/pagerank_dataflow.py
+
+Demonstrates exactly what Section 2.3 motivates:
+  * EoT transactions delimit each iteration's update stream (Listing 2),
+  * the UpdateHandler accumulates in registers and commits per transaction
+    (Listing 1),
+  * Ctrl <-> VertexHandler is a feedback loop, so the sequential engine
+    FAILS on this program while coroutine/thread simulate it (Fig. 7).
+"""
+
+from repro.apps import page_rank
+
+
+def main():
+    print("PageRank accelerator task graph "
+          "(Ctrl / VertexHandler / ComputeUnit / UpdateHandler)\n")
+    for engine in ("coroutine", "thread", "sequential"):
+        r = page_rank.run(engine=engine, n_vertices=64, n_edges=512,
+                          n_pe=4, n_iters=8)
+        if r.report.ok:
+            print(f"[{engine:10s}] simulated: instances="
+                  f"{r.report.n_instances} channels={r.report.n_channels} "
+                  f"switches={r.report.switches} | verified vs numpy: "
+                  f"correct={r.correct} max_err={r.max_err:.2e}")
+        else:
+            print(f"[{engine:10s}] FAILED (expected for sequential): "
+                  f"{r.report.error[:100]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Serving example: continuous batching with EoT-transaction requests.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b
+
+The admission scheduler peeks the request channel and admits a request
+only when a decode slot is free (the paper's switch pattern); each request
+travels as one EoT-delimited transaction.  Compute is the jit'd
+prefill/decode pair of the selected architecture.
+"""
+
+import sys
+
+from repro.launch.serve import serve
+
+
+if __name__ == "__main__":
+    sys.exit(serve(sys.argv[1:] or ["--requests", "8", "--max-new", "6"]))

@@ -1,0 +1,44 @@
+"""TAPA-JAX: task-parallel dataflow programming, simulation and compilation
+for TPU pods — a JAX reproduction and extension of
+
+    "Extending High-Level Synthesis for Task-Parallel Programs"
+    (Chi, Guo, Choi, Wang, Cong — UCLA, 2020)
+
+Public API mirrors the paper's (Table 2 / Listings 4-5)::
+
+    import repro
+
+    def Producer(out: repro.OStream, n: int):
+        for i in range(n):
+            out.write(i)
+        out.close()                      # end-of-transaction
+
+    def Consumer(inp: repro.IStream, result: list):
+        for v in inp:                    # drains one transaction
+            result.append(v)
+
+    def Top(n, result):
+        ch = repro.channel(capacity=2)
+        repro.task() \
+            .invoke(Producer, ch, n) \
+            .invoke(Consumer, ch, result)
+
+    report = repro.run(Top, 8, [], engine="coroutine")
+"""
+
+from .core import (EOT, Channel, IStream, OStream, channel, select, run,
+                   task, invoke,
+                   elaborate, Graph, SimReport, ENGINES, Deadlock,
+                   SequentialSimulationError, EndOfTransaction,
+                   ChannelMisuse, StageInstance, compile_stages,
+                   DataflowProgram)
+
+__version__ = "1.0.0"
+
+__all__ = [
+    "EOT", "Channel", "IStream", "OStream", "channel", "select", "run",
+    "task", "invoke",
+    "elaborate", "Graph", "SimReport", "ENGINES", "Deadlock",
+    "SequentialSimulationError", "EndOfTransaction", "ChannelMisuse",
+    "StageInstance", "compile_stages", "DataflowProgram", "__version__",
+]

@@ -1,0 +1,101 @@
+"""SODA-style iterative Gaussian-filter dataflow (paper Section 4.1).
+
+A chain of ``iters`` stencil stages; each stage holds a line buffer (two
+rows + two pixels of reuse) and applies the 3x3 Gaussian kernel as soon as
+its window is full — the communication-optimal reuse-buffer
+microarchitecture SODA generates.  Pixels stream through stage by stage,
+one EoT-delimited transaction per image.
+
+Instance count scales with ``iters * width`` when vectorized; the paper's
+build is 564 instances (16 lanes x 8 iterations + forks).  The default here
+is one lane per stage (fast sim); the sim-time benchmark raises ``iters``
+and ``lanes`` to probe scheduler scalability (Fig. 7's gaussian point).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import channel, task
+from .base import AppResult, simulate
+
+K = np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]], np.float32) / 16.0
+
+
+def _stencil_ref(img: np.ndarray) -> np.ndarray:
+    h, w = img.shape
+    out = img.copy()
+    acc = np.zeros_like(img)
+    for dy in range(3):
+        for dx in range(3):
+            acc[1:h-1, 1:w-1] += K[dy, dx] * img[dy:h-2+dy, dx:w-2+dx]
+    out[1:h-1, 1:w-1] = acc[1:h-1, 1:w-1]
+    return out
+
+
+def build(h: int = 12, w: int = 12, iters: int = 4, lanes: int = 1,
+          seed: int = 0):
+    rng = np.random.default_rng(seed)
+    img = rng.standard_normal((h, w)).astype(np.float32)
+    result = np.zeros_like(img)
+
+    def Source(out):
+        for px in img.reshape(-1):
+            out.write(float(px))
+        out.close()
+
+    def Stencil(inp, out):
+        """Line-buffered 3x3 stencil over a row-major pixel stream.
+
+        A centre pixel's window completes when its south-east neighbour
+        (linear index centre + w + 1) arrives, so the stage emits with a
+        fixed latency of w+2 pixels — the SODA reuse-buffer schedule."""
+        buf: list[float] = []
+
+        def emit(cy: int) -> None:
+            y, x = divmod(cy, w)
+            if 1 <= y < h - 1 and 1 <= x < w - 1:
+                win = (K[0, 0] * buf[cy-w-1] + K[0, 1] * buf[cy-w] +
+                       K[0, 2] * buf[cy-w+1] +
+                       K[1, 0] * buf[cy-1] + K[1, 1] * buf[cy] +
+                       K[1, 2] * buf[cy+1] +
+                       K[2, 0] * buf[cy+w-1] + K[2, 1] * buf[cy+w] +
+                       K[2, 2] * buf[cy+w+1])
+                out.write(float(win))
+            else:
+                out.write(buf[cy])
+
+        for px in inp:
+            buf.append(px)
+            cy = len(buf) - w - 2       # centre whose window just completed
+            if cy >= 0:
+                emit(cy)
+        for cy in range(max(len(buf) - w - 1, 0), len(buf)):
+            emit(cy)                    # tail pixels (all boundary)
+        out.close()
+
+    def Sink(inp):
+        flat = [px for px in inp]
+        result[...] = np.array(flat, np.float32).reshape(h, w)
+
+    def Top():
+        chans = [channel(capacity=2 * w + 4, name=f"s{i}")
+                 for i in range(iters + 1)]
+        t = task().invoke(Source, chans[0])
+        for i in range(iters):
+            t = t.invoke(Stencil, chans[i], chans[i + 1], name=f"Stencil{i}")
+        t.invoke(Sink, chans[iters])
+
+    def check():
+        ref = img
+        for _ in range(iters):
+            ref = _stencil_ref(ref)
+        err = float(np.max(np.abs(result - ref)))
+        return err < 1e-4, err
+
+    return Top, (), check
+
+
+def run(engine: str = "coroutine", **kw) -> AppResult:
+    top, args, check = build(**kw)
+    return simulate("gaussian", top, args, engine, check)

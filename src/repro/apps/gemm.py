@@ -1,0 +1,88 @@
+"""PolySA-style systolic GEMM (paper Section 4.1).
+
+Unlike Cannon, PolySA's array avoids feedback: A blocks stream left->right
+through each row, B blocks stream top->bottom through each column, partial
+C stays resident in the PE (output-stationary).  The graph is a DAG, so
+even the sequential simulator handles it — the interesting axis here is
+C3: one PE definition stamped out P^2 times (14 tasks / 207 instances in
+the paper's build).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import channel, task
+from .base import AppResult, simulate
+
+
+def build(P: int = 4, n: int = 8, K: int = 4, seed: int = 0):
+    """(P*n x K*n) @ (K*n x P*n) on a PxP output-stationary array."""
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((P * n, K * n)).astype(np.float32)
+    B = rng.standard_normal((K * n, P * n)).astype(np.float32)
+    C = np.zeros((P * n, P * n), np.float32)
+
+    def AFeeder(out, i: int):
+        for k in range(K):                      # stream row i's K blocks
+            out.write(A[i * n:(i + 1) * n, k * n:(k + 1) * n].copy())
+        out.close()
+
+    def BFeeder(out, j: int):
+        for k in range(K):
+            out.write(B[k * n:(k + 1) * n, j * n:(j + 1) * n].copy())
+        out.close()
+
+    def PE(a_in, b_in, a_out, b_out, c_out):
+        acc = None
+        while not a_in.eot():
+            a = a_in.read()
+            b = b_in.read()
+            acc = a @ b if acc is None else acc + a @ b
+            if a_out is not None:
+                a_out.write(a)
+            if b_out is not None:
+                b_out.write(b)
+        a_in.open()
+        b_in.open()
+        if a_out is not None:
+            a_out.close()
+        if b_out is not None:
+            b_out.close()
+        c_out.write(acc)
+
+    def Collector(c_ins, i: int):
+        for j, ch in enumerate(c_ins):
+            C[i * n:(i + 1) * n, j * n:(j + 1) * n] = ch.read()
+
+    def Top():
+        # horizontal A channels: (P rows) x (P+... one per hop)
+        a_ch = [[channel(2, f"a{i}_{j}") for j in range(P)] for i in range(P)]
+        b_ch = [[channel(2, f"b{i}_{j}") for j in range(P)] for i in range(P)]
+        c_ch = [[channel(1, f"c{i}_{j}") for j in range(P)] for i in range(P)]
+        t = task()
+        for i in range(P):
+            t = t.invoke(AFeeder, a_ch[i][0], i, name=f"AFeeder{i}")
+            t = t.invoke(BFeeder, b_ch[0][i], i, name=f"BFeeder{i}")
+        for i in range(P):
+            for j in range(P):
+                t = t.invoke(
+                    PE, a_ch[i][j], b_ch[i][j],
+                    a_ch[i][j + 1] if j + 1 < P else None,
+                    b_ch[i + 1][j] if i + 1 < P else None,
+                    c_ch[i][j], name=f"PE{i}_{j}")
+        for i in range(P):
+            t = t.invoke(Collector, c_ch[i], i, name=f"Collector{i}")
+
+    def check():
+        ref = A @ B
+        err = float(np.max(np.abs(C - ref)))
+        return err < 1e-3 * K * n, err
+
+    return Top, (), check
+
+
+def run(engine: str = "coroutine", P: int = 4, n: int = 8, K: int = 4,
+        seed: int = 0) -> AppResult:
+    top, args, check = build(P=P, n=n, K=K, seed=seed)
+    return simulate("gemm", top, args, engine, check)

@@ -1,0 +1,113 @@
+"""8x8 Omega network switch (paper Section 4.1).
+
+log2(8) = 3 stages of four 2x2 switch elements route 64-bit packets whose
+top 3 bits are the destination port.  The 2x2 element is the paper's
+showcase for **peek** (Section 2.3 / Listing 1's pattern): the element
+looks at the head packet of each input to decide routing *without
+consuming it*, because the packet can only be consumed once the chosen
+output has space — peek + try_write replaces the manual claim/buffer state
+machine the paper shows in red.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import channel, select, task
+from .base import AppResult, simulate
+
+PORTS = 8
+STAGES = 3
+
+
+def _inv_shuffle(p: int) -> int:
+    """Which wire feeds switch-input position ``p`` after the perfect
+    shuffle (wire w lands on position rotate-left(w), so position p is fed
+    by rotate-right(p))."""
+    return ((p >> 1) | ((p & 1) << (STAGES - 1))) & (PORTS - 1)
+
+
+def build(n_packets: int = 64, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    # packet = (dst << 61) | payload  — modeled as a (dst, payload) tuple
+    dsts = rng.integers(0, PORTS, n_packets)
+    payloads = rng.integers(0, 1 << 32, n_packets)
+    received: dict[int, list] = {p: [] for p in range(PORTS)}
+
+    def Source(outs):
+        for d, pl in zip(dsts, payloads):
+            outs[int(rng.integers(0, PORTS))].write((int(d), int(pl)))
+        for o in outs:
+            o.close()
+
+    def Switch2x2(in0, in1, out0, out1, stage: int):
+        """Route by bit (STAGES-1-stage) of dst.  Peek first; consume only
+        once the destination output accepts the packet — the paper's
+        Listing-1 pattern (no manual claim/buffer state machine).  When
+        neither input can progress, ``select`` parks the task until *any*
+        watched port changes (hardware ready/valid polling)."""
+        bit = STAGES - 1 - stage
+        open_in = [False, False]
+        ins = [in0, in1]
+        outs = [out0, out1]
+        while not all(open_in):
+            progress = False
+            blockers = []       # the ports whose state change can unblock us
+            for s in (0, 1):
+                if open_in[s]:
+                    continue
+                ok, is_eot = ins[s].try_eot()
+                if ok and is_eot:
+                    ins[s].open()
+                    open_in[s] = True
+                    progress = True
+                    continue
+                ok, head = ins[s].try_peek()
+                if not ok:
+                    blockers.append(ins[s])          # waiting for a packet
+                    continue
+                port = (head[0] >> bit) & 1
+                if outs[port].try_write(head):       # output has space?
+                    ins[s].read()                    # now consume
+                    progress = True
+                else:
+                    blockers.append(outs[port])      # waiting for space
+            if not progress and blockers:
+                select(*blockers)
+        out0.close()
+        out1.close()
+
+    def Sink(inp, port: int):
+        for (d, pl) in inp:
+            received[port].append((d, pl))
+
+    def Top():
+        # stage wiring: lines[s][i] carries packets entering stage s on
+        # wire i (after the perfect-shuffle permutation)
+        lines = [[channel(4, f"l{s}_{i}") for i in range(PORTS)]
+                 for s in range(STAGES + 1)]
+        t = task().invoke(Source, lines[0])
+        for s in range(STAGES):
+            for e in range(PORTS // 2):      # four 2x2 elements
+                i0 = _inv_shuffle(2 * e)
+                i1 = _inv_shuffle(2 * e + 1)
+                t = t.invoke(Switch2x2, lines[s][i0], lines[s][i1],
+                             lines[s + 1][2 * e], lines[s + 1][2 * e + 1],
+                             s, name=f"SW{s}_{e}")
+        for p in range(PORTS):
+            t = t.invoke(Sink, lines[STAGES][p], p, name=f"Sink{p}")
+
+    def check():
+        total = sum(len(v) for v in received.values())
+        if total != n_packets:
+            return False, float(n_packets - total)
+        bad = sum(1 for p, v in received.items()
+                  for (d, _) in v if d != p)
+        return bad == 0, float(bad)
+
+    return Top, (), check
+
+
+def run(engine: str = "coroutine", **kw) -> AppResult:
+    top, args, check = build(**kw)
+    return simulate("network", top, args, engine, check)

@@ -1,0 +1,30 @@
+"""repro.core — the paper's contribution as a composable module.
+
+C1: channels with peek/EoT/transactions + hierarchical task instantiation
+C2: universal software simulation (sequential / thread / coroutine engines)
+C3: hierarchical (definition-deduplicated, parallel) compilation
+"""
+
+from .channel import (EOT, Channel, IStream, OStream, channel, select,
+                      READABLE, WRITABLE)
+from .engines import (ENGINES, CoroutineEngine, EngineBase, SequentialEngine,
+                      SimReport, ThreadEngine, run)
+from .errors import (ChannelMisuse, Deadlock, EndOfTransaction,
+                     GraphValidationError, ReproError,
+                     SequentialSimulationError, TaskKilled)
+from .graph import DefinitionInfo, Graph, elaborate, extract_graph
+from .hier_compile import (CompileReport, DataflowProgram, StageInstance,
+                           compile_stages)
+from .invoke import invoke
+from .task import TaskBuilder, TaskInstance, task
+
+__all__ = [
+    "EOT", "Channel", "IStream", "OStream", "channel", "select", "READABLE",
+    "WRITABLE", "ENGINES", "CoroutineEngine", "EngineBase",
+    "SequentialEngine", "SimReport", "ThreadEngine", "run", "ChannelMisuse",
+    "Deadlock", "EndOfTransaction", "GraphValidationError", "ReproError",
+    "SequentialSimulationError", "TaskKilled", "DefinitionInfo", "Graph",
+    "elaborate", "extract_graph", "CompileReport", "DataflowProgram",
+    "StageInstance", "compile_stages", "TaskBuilder", "TaskInstance", "task",
+    "invoke",
+]

@@ -1,0 +1,345 @@
+"""Channels and the TAPA communication interface (paper Section 3.1.2).
+
+A :class:`Channel` is a bounded FIFO connecting exactly one producer task to
+one consumer task.  The producer holds an :class:`OStream` view, the consumer
+an :class:`IStream` view; together they expose the full interface of the
+paper's Table 2:
+
+    ostream:  full()  write()  try_write()  close()  try_close()
+    istream:  empty() peek()  try_peek()   read()   try_read()
+              eot()  try_eot()  open()  try_open()
+
+End-of-transaction (EoT) tokens are out-of-band: they carry no data, occupy
+one slot of channel capacity, and let a consumer terminate a pipelined loop
+without extending the data type (paper Listing 2).
+
+Blocking semantics are engine-mediated: a blocking operation calls
+``runtime.wait(channel, side)`` which either waits (thread engine), performs
+a cooperative hand-off (coroutine engine), or raises
+:class:`~repro.core.errors.SequentialSimulationError` (sequential engine,
+reproducing the paper's documented failure mode).  In the coroutine engine
+exactly one task runs at a time, so the channel needs **no locking** there —
+this is the paper's "collaborative instead of preemptive" insight showing up
+as the absence of synchronization cost.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from typing import Any, Generic, Optional, TypeVar
+
+from .context import current_runtime
+from .errors import ChannelMisuse, EndOfTransaction
+
+T = TypeVar("T")
+
+_uid = itertools.count()
+
+
+class _EotType:
+    """Singleton end-of-transaction token."""
+
+    _instance: Optional["_EotType"] = None
+
+    def __new__(cls) -> "_EotType":
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return "<EoT>"
+
+
+EOT = _EotType()
+
+# Sides, used by engines to know which waiters to wake.
+READABLE = "readable"
+WRITABLE = "writable"
+
+
+class Channel(Generic[T]):
+    """Bounded FIFO channel (paper Section 3.1.1/3.1.3).
+
+    ``capacity`` bounds the number of in-flight tokens exactly as in TAPA's
+    ``tapa::channel<T, capacity>``; the simulator reserves enough state to
+    honor it precisely (Section 3.2).
+    """
+
+    __slots__ = (
+        "name", "capacity", "dtype", "_q", "uid",
+        "producer", "consumer", "parent",
+        "total_written", "total_read", "max_occupancy",
+    )
+
+    def __init__(self, capacity: int = 2, name: Optional[str] = None,
+                 dtype: Any = None):
+        if capacity < 1:
+            raise ValueError("channel capacity must be >= 1")
+        self.uid = next(_uid)
+        self.name = name or f"ch{self.uid}"
+        self.capacity = capacity
+        self.dtype = dtype
+        self._q: deque = deque()
+        # Endpoint bookkeeping for graph metadata extraction (Section 3.4).
+        self.producer = None   # task instance acting as producer
+        self.consumer = None   # task instance acting as consumer
+        self.parent = None     # parent task that instantiated this channel
+        # Statistics (used by the simulator report and the PP scheduler).
+        self.total_written = 0
+        self.total_read = 0
+        self.max_occupancy = 0
+
+    # -- raw state ---------------------------------------------------------
+    def is_empty(self) -> bool:
+        return not self._q
+
+    def is_full(self) -> bool:
+        return len(self._q) >= self.capacity
+
+    def size(self) -> int:
+        return len(self._q)
+
+    # -- endpoint registration (one producer + one consumer, Section 3.1.1)
+    def _bind(self, side: str, task: Any) -> None:
+        if task is None:
+            return
+        cur = getattr(self, side)
+        if cur is None:
+            setattr(self, side, task)
+        elif cur is not task:
+            raise ChannelMisuse(
+                f"channel {self.name!r} already has a {side} "
+                f"({cur!r}); cannot also bind {task!r}")
+
+    # -- raw queue ops (no blocking; engines guarantee exclusivity or hold
+    #    the engine lock around these) ------------------------------------
+    def _push(self, tok: Any) -> None:
+        self._q.append(tok)
+        self.total_written += 1
+        if len(self._q) > self.max_occupancy:
+            self.max_occupancy = len(self._q)
+
+    def _pop(self) -> Any:
+        self.total_read += 1
+        return self._q.popleft()
+
+    def _head(self) -> Any:
+        return self._q[0]
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"Channel({self.name!r}, cap={self.capacity}, "
+                f"size={len(self._q)})")
+
+
+def _rt():
+    rt = current_runtime()
+    if rt is None:
+        raise RuntimeError(
+            "stream operation outside a running task; run the program via "
+            "repro.run(...)/an engine, or use Channel._push/_pop directly")
+    return rt
+
+
+class IStream(Generic[T]):
+    """Consumer-side view of a channel (paper Table 2)."""
+
+    __slots__ = ("_chan",)
+
+    def __init__(self, chan: Channel):
+        self._chan = chan
+
+    @property
+    def channel(self) -> Channel:
+        return self._chan
+
+    # -- non-blocking state tests -----------------------------------------
+    def empty(self) -> bool:
+        return self._chan.is_empty()
+
+    # -- blocking ops ------------------------------------------------------
+    def read(self) -> T:
+        """Blocking read of a data token.
+
+        Reading an EoT token is a protocol error (EoT carries no data);
+        use ``eot()``/``open()`` to handle transaction boundaries.
+        """
+        c = self._chan
+        rt = _rt()
+        while c.is_empty():
+            rt.wait(c, READABLE)
+        if c._head() is EOT:
+            # do not consume: the channel state is unchanged, so the caller
+            # can recover with open()/eot() after handling the error
+            raise EndOfTransaction(
+                f"read() reached EoT on channel {c.name!r}")
+        return rt.pop(c)
+
+    def peek(self) -> T:
+        """Blocking peek: return the head token without consuming it.
+
+        The channel state is unchanged (paper Section 3.1.2)."""
+        c = self._chan
+        rt = _rt()
+        while c.is_empty():
+            rt.wait(c, READABLE)
+        tok = c._head()
+        if tok is EOT:
+            raise EndOfTransaction(
+                f"peek() found EoT on channel {c.name!r}")
+        return tok
+
+    def eot(self) -> bool:
+        """Blocking: wait for a token, return whether it is EoT (no consume)."""
+        c = self._chan
+        rt = _rt()
+        while c.is_empty():
+            rt.wait(c, READABLE)
+        return c._head() is EOT
+
+    def open(self) -> None:
+        """Blocking read of an EoT token ("open" the channel for the next
+        transaction).  Errors if the head token carries data."""
+        c = self._chan
+        rt = _rt()
+        while c.is_empty():
+            rt.wait(c, READABLE)
+        tok = rt.pop(c)
+        if tok is not EOT:
+            raise ChannelMisuse(
+                f"open() expected EoT on channel {c.name!r}, got data")
+
+    # -- non-blocking ops --------------------------------------------------
+    def try_read(self) -> tuple[bool, Optional[T]]:
+        c = self._chan
+        rt = _rt()
+        if c.is_empty() or c._head() is EOT:
+            return False, None
+        return True, rt.pop(c)
+
+    def try_peek(self) -> tuple[bool, Optional[T]]:
+        c = self._chan
+        if c.is_empty() or c._head() is EOT:
+            return False, None
+        return True, c._head()
+
+    def try_eot(self) -> tuple[bool, bool]:
+        """Returns (token_available, head_is_eot)."""
+        c = self._chan
+        if c.is_empty():
+            return False, False
+        return True, c._head() is EOT
+
+    def try_open(self) -> bool:
+        c = self._chan
+        rt = _rt()
+        if c.is_empty() or c._head() is not EOT:
+            return False
+        rt.pop(c)
+        return True
+
+    # -- iteration sugar: drain one transaction ----------------------------
+    def __iter__(self):
+        """Iterate over the tokens of one transaction, then consume its EoT.
+
+        ``for x in stream: ...`` is the idiomatic replacement for the
+        paper's Listing-2 loop ``while (!in.eot()) { v = in.read(); ... }``.
+        """
+        while not self.eot():
+            yield self.read()
+        self.open()
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"IStream({self._chan.name!r})"
+
+
+class OStream(Generic[T]):
+    """Producer-side view of a channel (paper Table 2)."""
+
+    __slots__ = ("_chan",)
+
+    def __init__(self, chan: Channel):
+        self._chan = chan
+
+    @property
+    def channel(self) -> Channel:
+        return self._chan
+
+    def full(self) -> bool:
+        return self._chan.is_full()
+
+    def write(self, v: T) -> None:
+        """Blocking write of a data token."""
+        if v is EOT:
+            raise ChannelMisuse("use close() to send EoT")
+        c = self._chan
+        rt = _rt()
+        while c.is_full():
+            rt.wait(c, WRITABLE)
+        rt.push(c, v)
+
+    def close(self) -> None:
+        """Blocking write of an EoT token ("close" the transaction)."""
+        c = self._chan
+        rt = _rt()
+        while c.is_full():
+            rt.wait(c, WRITABLE)
+        rt.push(c, EOT)
+
+    def try_write(self, v: T) -> bool:
+        c = self._chan
+        rt = _rt()
+        if c.is_full():
+            return False
+        rt.push(c, v)
+        return True
+
+    def try_close(self) -> bool:
+        c = self._chan
+        rt = _rt()
+        if c.is_full():
+            return False
+        rt.push(c, EOT)
+        return True
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"OStream({self._chan.name!r})"
+
+
+def channel(capacity: int = 2, name: Optional[str] = None,
+            dtype: Any = None) -> Channel:
+    """Instantiate a channel — ``tapa::channel<T, capacity>`` (Listing 5)."""
+    return Channel(capacity=capacity, name=name, dtype=dtype)
+
+
+def select(*streams) -> None:
+    """Block until at least one stream can make progress.
+
+    IStream arguments wait for a readable token (data *or* EoT); OStream
+    arguments wait for writable space.  This is the multi-port polling
+    primitive hardware switch elements have for free (combinational
+    ready/valid over all ports) and that strict KPN forbids — the paper's
+    "we are not limited to KPN" extension point (Section 2.2).  Without it,
+    a cooperative simulator livelocks on availability-routed designs such
+    as the Omega switch: a task that must watch two inputs and two outputs
+    cannot commit to blocking on any single one.
+
+    Returns immediately if any stream is already ready.
+    """
+    keys = []
+    for s in streams:
+        if isinstance(s, IStream):
+            keys.append((s.channel, READABLE))
+        elif isinstance(s, OStream):
+            keys.append((s.channel, WRITABLE))
+        else:   # AutoStream or raw channel: direction by bound view
+            chan = getattr(s, "channel", s)
+            view = getattr(s, "_view", None)
+            side = WRITABLE if isinstance(view, OStream) else READABLE
+            keys.append((chan, side))
+    for chan, side in keys:
+        ok = (not chan.is_empty()) if side == READABLE else \
+            (not chan.is_full())
+        if ok:
+            return
+    _rt().wait_many(keys)

@@ -1,0 +1,784 @@
+"""Simulation engines (paper Section 3.2).
+
+Three interchangeable engines run the same task bodies:
+
+* :class:`SequentialEngine` — the Vivado-HLS-dataflow baseline: each task
+  runs to completion at its invocation point.  Fast, but (a) channel
+  capacity is not honored (writes never block — violations are *recorded*)
+  and (b) a blocking read from a channel whose producer has not run yet
+  fails.  This reproduces the paper's finding that sequential simulators
+  cannot simulate feedback loops (cannon, page_rank).
+
+* :class:`ThreadEngine` — the multi-thread baseline: one preemptive OS
+  thread per task instance, condition-variable blocking.  Correct, but pays
+  lock contention and OS/GIL context switches on every token.
+
+* :class:`CoroutineEngine` — the paper's contribution: collaborative
+  scheduling.  Exactly one task runs at a time; a task runs until *no
+  progress can be made* (a channel op blocks), then control is handed to
+  the next ready task (run-to-block).  Channel data structures need **no
+  locking**, scheduling is deterministic (FIFO ready queue), and switches
+  happen only at genuine dataflow stalls instead of at arbitrary
+  preemption points.
+
+All engines implement the runtime protocol used by streams::
+
+    wait(chan, side)   block current task until side may be satisfiable
+    push(chan, tok)    enqueue + wake readers
+    pop(chan)          dequeue + wake writers
+    spawn(inst)        launch a child task instance
+    join(insts)        wait for non-detached children
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from .channel import Channel, READABLE, WRITABLE
+from .context import clear_context, set_context
+from .errors import Deadlock, SequentialSimulationError, TaskKilled
+from .task import (TaskInstance, bind_streams, builder_stack_depth,
+                   join_pending_builders)
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimReport:
+    """Outcome of one simulation run (consumed by benchmarks/sim_time.py)."""
+    engine: str
+    ok: bool
+    wall_s: float
+    switches: int
+    n_instances: int
+    n_channels: int
+    tokens: int
+    capacity_violations: int = 0
+    error: Optional[str] = None
+    instances: list = field(default_factory=list)
+    channels: list = field(default_factory=list)
+    result: Any = None      # return value of the top-level task body
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        s = "ok" if self.ok else f"FAILED({self.error})"
+        return (f"<SimReport {self.engine} {s} wall={self.wall_s*1e3:.2f}ms "
+                f"switches={self.switches} insts={self.n_instances} "
+                f"tokens={self.tokens}>")
+
+
+def _find_channels(obj: Any, acc: set) -> None:
+    if isinstance(obj, Channel):
+        acc.add(obj)
+    elif isinstance(obj, (list, tuple)):
+        for v in obj:
+            _find_channels(v, acc)
+    elif isinstance(obj, dict):
+        for v in obj.values():
+            _find_channels(v, acc)
+
+
+class EngineBase:
+    name = "base"
+
+    def __init__(self):
+        self.instances: list[TaskInstance] = []
+        self.channel_set: set[Channel] = set()
+        self.switches = 0
+        self.capacity_violations = 0
+
+    # -- runtime protocol (overridden) --------------------------------------
+    def wait(self, chan: Channel, side: str) -> None:
+        raise NotImplementedError
+
+    def wait_many(self, keys: list) -> None:
+        """Block until any (chan, side) in keys may be satisfiable —
+        the engine-side primitive behind ``repro.select`` (multi-port
+        polling, Section 2.2's KPN extension)."""
+        raise NotImplementedError
+
+    def push(self, chan: Channel, tok: Any) -> None:
+        raise NotImplementedError
+
+    def pop(self, chan: Channel) -> Any:
+        raise NotImplementedError
+
+    def spawn(self, inst: TaskInstance) -> None:
+        raise NotImplementedError
+
+    def join(self, insts: list[TaskInstance]) -> None:
+        raise NotImplementedError
+
+    # -- shared helpers ------------------------------------------------------
+    def _register(self, inst: TaskInstance) -> None:
+        self.instances.append(inst)
+        _find_channels(inst.args, self.channel_set)
+        _find_channels(inst.kwargs, self.channel_set)
+
+    def _report(self, ok: bool, wall: float, err: Optional[str],
+                result: Any = None) -> SimReport:
+        chans = sorted(self.channel_set, key=lambda c: c.uid)
+        return SimReport(
+            engine=self.name, ok=ok, wall_s=wall, switches=self.switches,
+            n_instances=len(self.instances), n_channels=len(chans),
+            tokens=sum(c.total_written for c in chans),
+            capacity_violations=self.capacity_violations,
+            error=err,
+            instances=[(i.name, i.state) for i in self.instances],
+            channels=[(c.name, c.total_written, c.max_occupancy)
+                      for c in chans],
+            result=result,
+        )
+
+    def run(self, top: Callable, *args, **kwargs) -> SimReport:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# sequential engine (Vivado-HLS dataflow baseline)
+# ---------------------------------------------------------------------------
+
+class SequentialEngine(EngineBase):
+    """Run each task to completion at its invocation point (paper S3.2)."""
+
+    name = "sequential"
+
+    def __init__(self):
+        super().__init__()
+        self._cur: Optional[TaskInstance] = None
+
+    # blocking ops ----------------------------------------------------------
+    def wait(self, chan: Channel, side: str) -> None:
+        if side is WRITABLE or side == WRITABLE:
+            # Sequential simulation cannot honor capacity: grow the channel
+            # and record the violation (paper: "cannot correctly simulate
+            # the capacity of channels").
+            self.capacity_violations += 1
+            chan.capacity = chan.size() + 1
+            return
+        # Blocking read from an empty channel: the producer either already
+        # finished (true starvation) or is invoked later (the feedback /
+        # invocation-order failure the paper documents).
+        inst = self._cur
+        if inst is not None and inst.detach:
+            raise TaskKilled()
+        raise SequentialSimulationError(
+            f"sequential simulation cannot make progress: "
+            f"{inst.name if inst else '?'} blocked reading "
+            f"{chan.name!r} (feedback loop or invocation-order dependence)")
+
+    def wait_many(self, keys: list) -> None:
+        # Sequential execution cannot poll: nothing can change while this
+        # task holds the (only) thread.  A writable side can be "satisfied"
+        # by growing the channel (the capacity-violation fallback); a pure
+        # read-wait is the documented failure mode.
+        for chan, side in keys:
+            if side == WRITABLE:
+                return self.wait(chan, side)
+        return self.wait(keys[0][0], keys[0][1])
+
+    def push(self, chan: Channel, tok: Any) -> None:
+        chan._push(tok)
+
+    def pop(self, chan: Channel) -> Any:
+        return chan._pop()
+
+    # task management --------------------------------------------------------
+    def spawn(self, inst: TaskInstance) -> None:
+        self._register(inst)
+        self._exec(inst)
+
+    def join(self, insts: list[TaskInstance]) -> None:
+        # children already ran to completion at spawn
+        for i in insts:
+            if i.state == "failed" and i.error is not None:
+                raise i.error
+
+    def _exec(self, inst: TaskInstance) -> Any:
+        prev = self._cur
+        self._cur = inst
+        set_context(self, inst)
+        self.switches += 1
+        depth = builder_stack_depth()
+        inst.state = "running"
+        out = None
+        try:
+            a, k = bind_streams(inst)
+            out = inst.fn(*a, **k)
+            join_pending_builders(depth)
+            inst.state = "finished"
+        except TaskKilled:
+            inst.state = "finished"   # detached task ran out of input
+        except BaseException as e:
+            inst.state = "failed"
+            inst.error = e
+            raise
+        finally:
+            self._cur = prev
+            set_context(self, prev)
+        return out
+
+    def run(self, top: Callable, *args, **kwargs) -> SimReport:
+        t0 = time.perf_counter()
+        root = TaskInstance(top, args, kwargs, detach=False, parent=None,
+                            name=getattr(top, "__name__", "top"))
+        self._register(root)
+        try:
+            result = self._exec(root)
+            return self._report(True, time.perf_counter() - t0, None, result)
+        except SequentialSimulationError as e:
+            return self._report(False, time.perf_counter() - t0, str(e))
+        finally:
+            clear_context()
+
+
+# ---------------------------------------------------------------------------
+# preemptive thread engine (multi-thread baseline)
+# ---------------------------------------------------------------------------
+
+class ThreadEngine(EngineBase):
+    """One OS thread per task instance; preemptive scheduling (paper S3.2)."""
+
+    name = "thread"
+
+    def __init__(self):
+        super().__init__()
+        self._lock = threading.Lock()
+        self._conds: dict[tuple[int, str], threading.Condition] = {}
+        self._finish_cond = threading.Condition(self._lock)
+        self._threads: dict[int, threading.Thread] = {}
+        self._started = 0          # threads whose body began executing
+        self._blocked = 0          # tasks currently inside a wait
+        self._chan_waiters: dict[tuple[int, str], Channel] = {}
+        self._multi_waiters: dict[int, list] = {}     # uid -> [(chan, side)]
+        self._any_cond = threading.Condition(self._lock)
+        self._join_waiters: dict[int, list[TaskInstance]] = {}
+        self._deadlocked = False
+        self._stopping = False
+        self._failure: Optional[BaseException] = None
+
+    def _cond(self, chan: Channel, side: str) -> threading.Condition:
+        key = (chan.uid, side)
+        c = self._conds.get(key)
+        if c is None:
+            c = self._conds[key] = threading.Condition(self._lock)
+        return c
+
+    @staticmethod
+    def _satisfied(chan: Channel, side: str) -> bool:
+        return (not chan.is_empty()) if side == READABLE else \
+               (not chan.is_full())
+
+    def _live_unfinished(self) -> int:
+        return sum(1 for i in self.instances
+                   if i.state in ("running", "blocked"))
+
+    def _any_nondetached_unfinished(self) -> bool:
+        return any(i.state not in ("finished", "failed")
+                   for i in self.instances if not i.detach)
+
+    def _no_progress_possible(self) -> bool:
+        """True iff every blocked task waits on an unsatisfiable condition.
+
+        A task that was *notified* but has not yet re-acquired the lock is
+        still counted blocked; checking condition satisfiability instead of
+        raw counts avoids declaring a false deadlock in that window.
+        """
+        for (uid, side), chan in self._chan_waiters.items():
+            if self._satisfied(chan, side):
+                return False
+        for keys in self._multi_waiters.values():
+            if any(self._satisfied(c, s) for c, s in keys):
+                return False
+        for _, kids in self._join_waiters.items():
+            if all(k.state in ("finished", "failed") for k in kids):
+                return False
+        return True
+
+    def _maybe_end(self) -> None:
+        """Called with the lock held whenever a task becomes blocked."""
+        if self._blocked >= self._live_unfinished() and \
+                self._started >= len(self.instances) and \
+                self._no_progress_possible():
+            if self._any_nondetached_unfinished():
+                self._trigger_deadlock()
+            else:
+                self._trigger_stop()
+
+    def wait(self, chan: Channel, side: str) -> None:
+        cond = self._cond(chan, side)
+        key = (chan.uid, side)
+        with self._lock:
+            self._check_abort()
+            if self._satisfied(chan, side):
+                return                      # lost-wakeup guard
+            inst = _thread_inst.inst
+            inst.state = "blocked"
+            self._blocked += 1
+            self._chan_waiters[key] = chan
+            try:
+                self._maybe_end()
+                self._check_abort()
+                self.switches += 1
+                cond.wait()
+                self._check_abort()
+            finally:
+                self._blocked -= 1
+                self._chan_waiters.pop(key, None)
+                if inst.state == "blocked":
+                    inst.state = "running"
+
+    def wait_many(self, keys: list) -> None:
+        with self._lock:
+            self._check_abort()
+            if any(self._satisfied(c, s) for c, s in keys):
+                return
+            inst = _thread_inst.inst
+            inst.state = "blocked"
+            self._blocked += 1
+            self._multi_waiters[inst.uid] = keys
+            try:
+                self._maybe_end()
+                self._check_abort()
+                self.switches += 1
+                while not any(self._satisfied(c, s) for c, s in keys):
+                    self._any_cond.wait()
+                    self._check_abort()
+            finally:
+                self._blocked -= 1
+                self._multi_waiters.pop(inst.uid, None)
+                if inst.state == "blocked":
+                    inst.state = "running"
+
+    def _check_abort(self) -> None:
+        if self._deadlocked:
+            raise Deadlock("all tasks blocked; no progress possible")
+        if self._stopping:
+            raise TaskKilled()
+
+    def _trigger_deadlock(self) -> None:
+        self._deadlocked = True
+        self._notify_everything()
+
+    def _trigger_stop(self) -> None:
+        self._stopping = True
+        self._notify_everything()
+
+    def _notify_everything(self) -> None:
+        for c in self._conds.values():
+            c.notify_all()
+        self._any_cond.notify_all()
+        self._finish_cond.notify_all()
+
+    def push(self, chan: Channel, tok: Any) -> None:
+        with self._lock:
+            chan._push(tok)
+            self._cond(chan, READABLE).notify()
+            if self._multi_waiters:
+                self._any_cond.notify_all()
+
+    def pop(self, chan: Channel) -> Any:
+        with self._lock:
+            tok = chan._pop()
+            self._cond(chan, WRITABLE).notify()
+            if self._multi_waiters:
+                self._any_cond.notify_all()
+            return tok
+
+    def spawn(self, inst: TaskInstance) -> None:
+        with self._lock:
+            self._register(inst)
+        th = threading.Thread(target=self._body, args=(inst,),
+                              name=inst.name, daemon=True)
+        self._threads[inst.uid] = th
+        th.start()
+
+    def join(self, insts: list[TaskInstance]) -> None:
+        with self._lock:
+            inst = _thread_inst.inst
+            while any(i.state not in ("finished", "failed") for i in insts):
+                self._check_abort()
+                inst.state = "blocked"
+                self._blocked += 1
+                self._join_waiters[inst.uid] = insts
+                try:
+                    self._maybe_end()
+                    self._check_abort()
+                    self.switches += 1
+                    self._finish_cond.wait()
+                finally:
+                    self._blocked -= 1
+                    self._join_waiters.pop(inst.uid, None)
+                    if inst.state == "blocked":
+                        inst.state = "running"
+            self._check_abort()
+            for i in insts:
+                if i.state == "failed" and i.error is not None and \
+                        not isinstance(i.error, TaskKilled):
+                    raise Deadlock(f"child task {i.name} failed: {i.error!r}")
+
+    def _body(self, inst: TaskInstance) -> None:
+        _thread_inst.inst = inst
+        set_context(self, inst)
+        with self._lock:
+            self._started += 1
+            inst.state = "running"
+        depth = builder_stack_depth()
+        try:
+            a, k = bind_streams(inst)
+            out = inst.fn(*a, **k)
+            join_pending_builders(depth)
+            with self._lock:
+                inst.state = "finished"
+                if inst.parent is None:
+                    self._root_result = out
+        except TaskKilled:
+            with self._lock:
+                inst.state = "finished"
+        except Deadlock:
+            with self._lock:
+                inst.state = "failed"
+        except BaseException as e:  # noqa: BLE001 - report any task failure
+            with self._lock:
+                inst.state = "failed"
+                inst.error = e
+                if self._failure is None:
+                    self._failure = e
+                self._trigger_deadlock()   # abort everything
+        finally:
+            with self._lock:
+                if not self._any_nondetached_unfinished() and \
+                        not self._deadlocked:
+                    self._trigger_stop()
+                else:
+                    # a finishing producer may leave consumers permanently
+                    # starved — re-run the end-state check
+                    self._maybe_end()
+                self._finish_cond.notify_all()
+            clear_context()
+
+    def run(self, top: Callable, *args, **kwargs) -> SimReport:
+        t0 = time.perf_counter()
+        self._root_result = None
+        root = TaskInstance(top, args, kwargs, detach=False, parent=None,
+                            name=getattr(top, "__name__", "top"))
+        self.spawn(root)
+        # wait for every non-detached task, then reap detached ones
+        while True:
+            with self._lock:
+                if self._deadlocked or \
+                        not self._any_nondetached_unfinished():
+                    break
+                self._finish_cond.wait(timeout=0.5)
+        for uid, th in list(self._threads.items()):
+            th.join(timeout=5.0)
+        wall = time.perf_counter() - t0
+        if self._failure is not None:
+            return self._report(False, wall, f"task error: {self._failure!r}")
+        if self._deadlocked:
+            return self._report(False, wall, "deadlock")
+        return self._report(True, wall, None, self._root_result)
+
+
+_thread_inst = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# coroutine engine (the paper's contribution)
+# ---------------------------------------------------------------------------
+
+class _Fiber:
+    """A cooperatively-scheduled execution context.
+
+    Implemented over an OS thread that is *suspended at launch* and runs
+    only when handed the baton — the pure-Python analogue of the paper's
+    stackful coroutines ("a coroutine is launched but suspended
+    immediately", S3.2).  Exactly one fiber (or the scheduler) is runnable
+    at any instant, so channel state needs no locks.
+
+    Switching is **symmetric**: a blocking fiber resumes the next ready
+    fiber *directly* (one event signal per switch) instead of bouncing
+    through the scheduler thread (two signals).  This is the user-level
+    hand-off cost the paper contrasts with preemptive OS scheduling —
+    the scheduler thread participates only at start, deadlock/termination
+    detection and teardown.
+    """
+
+    __slots__ = ("inst", "engine", "sema", "thread", "killed", "done",
+                 "wake_epoch")
+
+    def __init__(self, inst: TaskInstance, engine: "CoroutineEngine"):
+        self.inst = inst
+        self.engine = engine
+        # a counting semaphore is the cheapest exact-once baton in CPython
+        # (C-level fast path, no condition-variable bookkeeping); the
+        # epoch discipline in the engine guarantees single-resume, so the
+        # count can never exceed one
+        self.sema = threading.Semaphore(0)
+        self.killed = False
+        self.done = False
+        self.wake_epoch = 0     # invalidates stale multi-wait queue entries
+        self.thread = threading.Thread(target=self._main, name=inst.name,
+                                       daemon=True)
+        self.thread.start()
+
+    # -- switching -----------------------------------------------------------
+    def _handoff(self) -> None:
+        """Pass the baton to the next ready fiber (or the scheduler when
+        none is ready), without suspending self."""
+        eng = self.engine
+        nxt = eng._next_ready()
+        if nxt is None:
+            eng._sched_sema.release()  # scheduler: terminate/deadlock/kill
+        else:
+            eng.switches += 1
+            nxt.sema.release()
+
+    def _yield(self) -> None:
+        """Block self: hand the baton off, then wait to be resumed."""
+        self._handoff()
+        self.sema.acquire()
+        if self.killed:
+            raise TaskKilled()
+
+    def resume_from_scheduler(self) -> None:
+        """Scheduler-side: run this fiber until control returns."""
+        self.engine.switches += 1
+        self.sema.release()
+        self.engine._sched_sema.acquire()
+
+    # -- body ----------------------------------------------------------------
+    def _main(self) -> None:
+        self.sema.acquire()      # suspended immediately at launch
+        inst = self.inst
+        set_context(self.engine, inst)
+        _fiber_tls.fiber = self
+        inst.state = "running"
+        depth = builder_stack_depth()
+        try:
+            if self.killed:
+                raise TaskKilled()
+            a, k = bind_streams(inst)
+            out = inst.fn(*a, **k)
+            join_pending_builders(depth)
+            inst.state = "finished"
+            if inst.parent is None:
+                self.engine._root_result = out
+        except TaskKilled:
+            inst.state = "finished"
+        except BaseException as e:  # noqa: BLE001
+            inst.state = "failed"
+            inst.error = e
+            if self.engine._failure is None:
+                self.engine._failure = e
+        finally:
+            self.done = True
+            clear_context()
+            self.engine._on_fiber_finished(self)
+            if self.engine._failure is not None:
+                self.engine._sched_sema.release()  # abort: scheduler's baton
+            else:
+                self._handoff()                # pass baton; thread exits
+
+
+_fiber_tls = threading.local()
+
+
+class CoroutineEngine(EngineBase):
+    """Collaborative run-to-block scheduler (paper Section 3.2).
+
+    Determinism: the ready queue is FIFO over spawn/wake order, wake order
+    is FIFO per channel side, and only one fiber runs at a time, so a given
+    program produces the identical schedule on every run.
+    """
+
+    name = "coroutine"
+
+    def __init__(self):
+        super().__init__()
+        self._ready: deque[_Fiber] = deque()
+        self._waiters: dict[tuple[int, str], deque[_Fiber]] = {}
+        self._fibers: dict[int, _Fiber] = {}
+        self._join_pending: dict[int, int] = {}     # fiber uid -> #children
+        self._child_to_joiner: dict[int, _Fiber] = {}
+        self._sched_sema = threading.Semaphore(0)
+        self._failure: Optional[BaseException] = None
+        self._root_result: Any = None
+        self._tearing = False
+
+    def _next_ready(self) -> Optional["_Fiber"]:
+        if self._tearing:
+            return None                   # teardown: baton -> scheduler
+        while self._ready:
+            f = self._ready.popleft()
+            if not f.done:
+                return f
+        return None
+
+    # -- runtime protocol ----------------------------------------------------
+    def wait(self, chan: Channel, side: str) -> None:
+        fiber: _Fiber = _fiber_tls.fiber
+        fiber.inst.state = "blocked"
+        self._waiters.setdefault((chan.uid, side), deque()).append(
+            (fiber, fiber.wake_epoch))
+        fiber._yield()
+        fiber.inst.state = "running"
+
+    def wait_many(self, keys: list) -> None:
+        """Multi-port wait: register in every key's waiter queue; the first
+        event on any of them wakes the fiber and the epoch stamp marks the
+        other registrations stale."""
+        fiber: _Fiber = _fiber_tls.fiber
+        fiber.inst.state = "blocked"
+        e = fiber.wake_epoch
+        for chan, side in keys:
+            self._waiters.setdefault((chan.uid, side), deque()).append(
+                (fiber, e))
+        fiber._yield()
+        fiber.inst.state = "running"
+
+    def push(self, chan: Channel, tok: Any) -> None:
+        chan._push(tok)              # no lock: exclusivity by construction
+        self._wake(chan, READABLE)
+
+    def pop(self, chan: Channel) -> Any:
+        tok = chan._pop()
+        self._wake(chan, WRITABLE)
+        return tok
+
+    def _schedule(self, fiber: "_Fiber") -> None:
+        """The single wake path: bumping the epoch here marks every other
+        outstanding waiter-queue registration of this fiber stale, so a
+        fiber can never be double-resumed (which would desynchronize the
+        evt/_sched_evt handshake)."""
+        fiber.wake_epoch += 1
+        self._ready.append(fiber)
+
+    def _wake(self, chan: Channel, side: str) -> None:
+        q = self._waiters.get((chan.uid, side))
+        if q:
+            while q:
+                fiber, epoch = q.popleft()
+                if fiber.wake_epoch == epoch and not fiber.done:
+                    self._schedule(fiber)
+
+    def spawn(self, inst: TaskInstance) -> None:
+        self._register(inst)
+        fiber = _Fiber(inst, self)
+        self._fibers[inst.uid] = fiber
+        self._ready.append(fiber)
+
+    def join(self, insts: list[TaskInstance]) -> None:
+        fiber: _Fiber = _fiber_tls.fiber
+        pending = [i for i in insts if i.state not in ("finished", "failed")]
+        for i in insts:
+            if i.state == "failed" and i.error is not None:
+                raise Deadlock(f"child task {i.name} failed: {i.error!r}")
+        if not pending:
+            return
+        self._join_pending[fiber.inst.uid] = len(pending)
+        for c in pending:
+            self._child_to_joiner[c.uid] = fiber
+        fiber.inst.state = "blocked"
+        fiber._yield()
+        fiber.inst.state = "running"
+        for i in insts:
+            if i.state == "failed" and i.error is not None:
+                raise Deadlock(f"child task {i.name} failed: {i.error!r}")
+
+    def _on_fiber_finished(self, fiber: _Fiber) -> None:
+        joiner = self._child_to_joiner.pop(fiber.inst.uid, None)
+        if joiner is not None:
+            self._join_pending[joiner.inst.uid] -= 1
+            if self._join_pending[joiner.inst.uid] == 0:
+                del self._join_pending[joiner.inst.uid]
+                self._schedule(joiner)
+
+    # -- scheduler -----------------------------------------------------------
+    def _any_nondetached_unfinished(self) -> bool:
+        return any(i.state not in ("finished", "failed")
+                   for i in self.instances if not i.detach)
+
+    def _kill_blocked_fibers(self) -> None:
+        """Tear down fibers that are permanently blocked (detached tasks at
+        normal termination, or everything on deadlock)."""
+        for q in self._waiters.values():
+            while q:
+                f, epoch = q.popleft()
+                if f.done or f.killed or f.wake_epoch != epoch:
+                    continue
+                f.killed = True
+                f.resume_from_scheduler()
+        for f in self._fibers.values():
+            if not f.done and not f.killed and \
+                    f.inst.state in ("created", "blocked"):
+                f.killed = True
+                f.resume_from_scheduler()
+
+    def run(self, top: Callable, *args, **kwargs) -> SimReport:
+        t0 = time.perf_counter()
+        root = TaskInstance(top, args, kwargs, detach=False, parent=None,
+                            name=getattr(top, "__name__", "top"))
+        set_context(self, None)    # so top-level spawn() is routed at us
+        self.spawn(root)
+        deadlock = False
+        # Direct-handoff scheduling: the scheduler thread starts the first
+        # fiber and regains control only when no fiber is ready (normal
+        # termination, deadlock) or on failure-abort; all other switches
+        # are fiber-to-fiber.
+        while True:
+            if self._failure is not None:
+                break
+            nxt = self._next_ready()
+            if nxt is not None:
+                nxt.resume_from_scheduler()
+                continue
+            if self._any_nondetached_unfinished():
+                deadlock = True
+            break
+        blocked_names = [i.name for i in self.instances
+                         if i.state == "blocked" and not i.detach]
+        self._tearing = True
+        self._kill_blocked_fibers()
+        for f in self._fibers.values():
+            f.thread.join(timeout=5.0)
+        clear_context()
+        wall = time.perf_counter() - t0
+        if self._failure is not None:
+            return self._report(False, wall,
+                                f"task error: {self._failure!r}")
+        if deadlock:
+            return self._report(
+                False, wall, f"deadlock; blocked tasks: {blocked_names}")
+        return self._report(True, wall, None, self._root_result)
+
+
+# ---------------------------------------------------------------------------
+# front door
+# ---------------------------------------------------------------------------
+
+ENGINES = {
+    "sequential": SequentialEngine,
+    "thread": ThreadEngine,
+    "coroutine": CoroutineEngine,
+}
+
+
+def run(top: Callable, *args, engine: str = "coroutine",
+        **kwargs) -> SimReport:
+    """Simulate a task-parallel program.
+
+    This is the software-simulation half of the paper's unified
+    system-integration interface: the same top-level task function is later
+    accepted by the compiled runners (``repro.launch``).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; "
+                         f"choose from {sorted(ENGINES)}")
+    eng = ENGINES[engine]()
+    return eng.run(top, *args, **kwargs)

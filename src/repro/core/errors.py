@@ -1,0 +1,47 @@
+"""Exception types for the TAPA-JAX core runtime."""
+
+
+class ReproError(Exception):
+    """Base class for all repro errors."""
+
+
+class Deadlock(ReproError):
+    """No task can make progress, yet non-detached tasks remain unfinished.
+
+    Raised by ThreadEngine/CoroutineEngine when every live task is blocked on
+    a channel operation that can never be satisfied.
+    """
+
+
+class SequentialSimulationError(Deadlock):
+    """The sequential engine cannot simulate this program.
+
+    Reproduces the paper's finding (Section 3.2 / Fig. 7) that sequential
+    simulators fail on programs with feedback loops in the data paths
+    (e.g. Cannon's algorithm, PageRank).
+    """
+
+
+class ChannelMisuse(ReproError):
+    """A channel is wired to something other than exactly one producer and
+    one consumer instantiated in the same parent task (Section 3.1.1)."""
+
+
+class GraphValidationError(ReproError):
+    """Task-graph metadata failed validation."""
+
+
+class TaskKilled(BaseException):
+    """Internal control-flow signal used to tear down detached tasks once all
+    non-detached tasks have finished.  Derives from BaseException so that
+    user-level ``except Exception`` blocks inside tasks do not swallow it.
+    """
+
+
+class EndOfTransaction(ReproError):
+    """A blocking data read/peek encountered an EoT token.
+
+    Matches TAPA semantics: an EoT token carries no data, so ``read()`` of a
+    closed transaction is a programming error that must be surfaced, not
+    silently returned.  Use ``eot()`` / ``try_read()`` to test first.
+    """

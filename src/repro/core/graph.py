@@ -1,0 +1,139 @@
+"""Task-graph metadata extraction (paper Section 3.4, Table 3).
+
+After elaboration/simulation the engine holds every :class:`TaskInstance`
+and :class:`Channel`.  This module turns that into a queryable IR:
+
+* the set of task *definitions* vs task *instances* (the distinction that
+  drives hierarchical code generation, Section 3.3),
+* the communication topology (which instance produces/consumes which
+  channel, token "types", capacities),
+* validation of the one-producer/one-consumer/same-parent rule
+  (Section 3.1.1),
+* a Graphviz/DOT export for inspection.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from .channel import Channel
+from .engines import EngineBase, SimReport, ENGINES
+from .errors import GraphValidationError
+from .task import TaskInstance
+
+
+@dataclass(frozen=True)
+class DefinitionInfo:
+    """One task definition and all instances stamped out from it."""
+    fn: Callable
+    name: str
+    n_instances: int
+    instance_names: tuple
+
+
+@dataclass
+class Graph:
+    """Elaborated task graph."""
+    instances: list[TaskInstance]
+    channels: list[Channel]
+    report: Optional[SimReport] = None
+    _defs: dict = field(default_factory=dict, repr=False)
+
+    # ------------------------------------------------------------------
+    @property
+    def definitions(self) -> list[DefinitionInfo]:
+        """Unique task definitions (paper Table 3 "#Tasks")."""
+        if not self._defs:
+            by_fn: dict[Any, list[TaskInstance]] = {}
+            for i in self.instances:
+                by_fn.setdefault(i.fn, []).append(i)
+            self._defs = {
+                fn: DefinitionInfo(
+                    fn=fn, name=getattr(fn, "__name__", repr(fn)),
+                    n_instances=len(insts),
+                    instance_names=tuple(x.name for x in insts))
+                for fn, insts in by_fn.items()
+            }
+        return list(self._defs.values())
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.definitions)
+
+    @property
+    def n_instances(self) -> int:
+        return len(self.instances)
+
+    @property
+    def n_channels(self) -> int:
+        return len(self.channels)
+
+    def dedup_factor(self) -> float:
+        """instances / definitions — the repetition hierarchical codegen
+        exploits (e.g. gaussian: 564/15 in the paper's Table 3)."""
+        return self.n_instances / max(1, self.n_tasks)
+
+    # ------------------------------------------------------------------
+    def validate(self) -> None:
+        """Enforce Section 3.1.1: every channel has exactly one producer and
+        one consumer, both instantiated under the same parent task."""
+        errs = []
+        for c in self.channels:
+            if c.producer is None:
+                errs.append(f"channel {c.name!r} has no producer")
+            if c.consumer is None:
+                errs.append(f"channel {c.name!r} has no consumer")
+            if c.producer is not None and c.consumer is not None:
+                if c.producer is c.consumer:
+                    errs.append(f"channel {c.name!r} loops back to "
+                                f"{c.producer.name}")
+                elif c.producer.parent is not c.consumer.parent:
+                    errs.append(
+                        f"channel {c.name!r} connects tasks from different "
+                        f"parents ({c.producer.name} / {c.consumer.name})")
+        if errs:
+            raise GraphValidationError("; ".join(errs))
+
+    # ------------------------------------------------------------------
+    def to_dot(self) -> str:
+        lines = ["digraph G {", "  rankdir=LR;"]
+        for i in self.instances:
+            shape = "box" if i.children else "ellipse"
+            lines.append(f'  t{i.uid} [label="{i.name}", shape={shape}];')
+        for c in self.channels:
+            if c.producer is not None and c.consumer is not None:
+                lines.append(
+                    f'  t{c.producer.uid} -> t{c.consumer.uid} '
+                    f'[label="{c.name}/{c.capacity}"];')
+        lines.append("}")
+        return "\n".join(lines)
+
+    def summary(self) -> str:
+        return (f"tasks={self.n_tasks} instances={self.n_instances} "
+                f"channels={self.n_channels} "
+                f"dedup={self.dedup_factor():.1f}x")
+
+
+def extract_graph(engine: EngineBase,
+                  report: Optional[SimReport] = None) -> Graph:
+    """Build the metadata IR from a finished engine run (Section 3.4)."""
+    chans = sorted(engine.channel_set, key=lambda c: c.uid)
+    return Graph(instances=list(engine.instances), channels=chans,
+                 report=report)
+
+
+def elaborate(top: Callable, *args, engine: str = "coroutine",
+              validate: bool = True, **kwargs) -> Graph:
+    """Run the program once in simulation and return its task graph.
+
+    TAPA extracts metadata with a Clang pass over source; the Python-native
+    equivalent is an elaboration run.  Simulation doubles as the
+    correctness-verification cycle (Fig. 2), so nothing is wasted.
+    """
+    eng = ENGINES[engine]()
+    report = eng.run(top, *args, **kwargs)
+    g = extract_graph(eng, report)
+    if validate and report.ok:
+        g.validate()
+    return g

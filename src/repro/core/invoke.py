@@ -1,0 +1,67 @@
+"""Unified system-integration interface (paper Section 3.1.4).
+
+TAPA's host-side insight: offloading to the accelerator should be *one
+function call* — the same source line runs software simulation, hardware
+simulation, and on-board execution, selected by the target argument.  The
+OpenCL boilerplate ("platform", "context", "queue", "kernel", buffer
+migration, ...) is synthesized from kernel metadata, not written by hand.
+
+The TPU-pod analogue::
+
+    result = repro.invoke(Top, args...,                 # one call
+                          target="sim")                 # run-to-block sim
+    result = repro.invoke(Top, args..., target="compiled",
+                          mesh=mesh)                    # XLA execution
+
+``target="sim"`` runs the task graph under a simulation engine (the
+correctness-verification cycle, seconds).  ``target="compiled"`` elaborates
+the graph once, hierarchically compiles every unique stage definition
+(Section 3.3), and executes the dataflow program on the mesh.  Metadata
+(graph topology, shape signatures) is extracted automatically from the
+elaboration run — the analogue of TAPA's Clang pass over kernel source.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+from .engines import ENGINES
+from .errors import Deadlock
+from .graph import elaborate
+from .hier_compile import StageInstance, compile_stages
+
+
+def invoke(top: Callable, *args, target: str = "sim",
+           engine: str = "coroutine", mesh: Any = None,
+           compile_mode: str = "hierarchical", **kwargs) -> Any:
+    """Call a top-level task as a plain function (paper Listing: "a single
+    function invocation of the synthesized FPGA bitstream").
+
+    Returns the top-level task's return value.  Raises
+    :class:`~repro.core.errors.Deadlock` (and friends) on simulation
+    failure instead of returning a report — this *is* the host API, not the
+    debugging API (use :func:`repro.run` for the full SimReport).
+    """
+    if target == "sim":
+        rep = ENGINES[engine]().run(top, *args, **kwargs)
+        if not rep.ok:
+            raise Deadlock(f"simulation failed: {rep.error}")
+        return rep.result
+
+    if target == "compiled":
+        # Elaborate (extract metadata), then compile each unique stage
+        # definition once and run the dataflow program on the mesh.
+        graph = elaborate(top, *args, engine=engine, **kwargs)
+        if graph.report is not None and not graph.report.ok:
+            raise Deadlock(f"elaboration failed: {graph.report.error}")
+        stages = [StageInstance(fn=i.fn, args=i.args, kwargs=i.kwargs,
+                                name=i.name)
+                  for i in graph.instances if not i.children]
+        if mesh is not None:
+            with mesh:
+                compile_stages(stages, mode=compile_mode)
+        else:
+            compile_stages(stages, mode=compile_mode)
+        return graph.report.result
+
+    raise ValueError(f"unknown target {target!r}; use 'sim' or 'compiled'")

@@ -1,0 +1,257 @@
+"""Task instantiation interface (paper Section 3.1.3, Listing 5).
+
+A *task* is a plain Python function.  A *parent* task instantiates channels
+and child tasks::
+
+    def PageRank(...):
+        vertex_req = repro.channel(capacity=2)
+        repro.task() \
+            .invoke(VertexHandler, vertex_req, ..., detach=True) \
+            .invoke(Ctrl, vertex_req, ...)
+
+mirroring ``tapa::task().invoke<tapa::detach>(...)``.  Children are spawned
+immediately on ``invoke`` by the active engine; the parent joins all
+non-detached children when its body returns (TAPA joins at the destructor of
+the ``tapa::task()`` temporary — end-of-body is the Python analogue and is
+also what ``with repro.task() as t:`` gives explicitly).
+
+Stream-direction binding: a ``Channel`` argument is converted to an
+:class:`IStream` or :class:`OStream` view according to the callee's
+parameter annotation; unannotated parameters receive a lazy ``AutoStream``
+that binds its direction on first use.  Either way the channel's
+producer/consumer endpoints are registered for graph metadata extraction
+(Section 3.4) and validated to the one-producer/one-consumer rule
+(Section 3.1.1).
+"""
+
+from __future__ import annotations
+
+import inspect
+import itertools
+from typing import Any, Callable, Optional
+
+from .channel import Channel, IStream, OStream
+from .context import current_builder_stack, current_runtime, current_task
+from .errors import ChannelMisuse
+
+_inst_uid = itertools.count()
+
+
+class TaskInstance:
+    """One instantiation of a task definition (paper Table 3 distinguishes
+    #Tasks from #Task Instances; this is the latter)."""
+
+    __slots__ = ("uid", "fn", "args", "kwargs", "detach", "name", "parent",
+                 "children", "state", "error", "level")
+
+    def __init__(self, fn: Callable, args: tuple, kwargs: dict,
+                 detach: bool, parent: Optional["TaskInstance"],
+                 name: Optional[str] = None):
+        self.uid = next(_inst_uid)
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+        self.detach = detach
+        self.name = name or f"{getattr(fn, '__name__', 'task')}#{self.uid}"
+        self.parent = parent
+        self.children: list[TaskInstance] = []
+        self.state = "created"   # created/running/blocked/finished/failed
+        self.error: Optional[BaseException] = None
+        self.level = 0 if parent is None else parent.level + 1
+
+    @property
+    def definition(self) -> Callable:
+        """The task *definition* this instance stems from.  Hierarchical
+        code generation (Section 3.3) compiles per-definition, not
+        per-instance."""
+        return self.fn
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<TaskInstance {self.name} {self.state}>"
+
+
+class AutoStream:
+    """Direction-unbound stream view; binds to IStream/OStream on first use.
+
+    Used when a child's parameter has no IStream/OStream annotation.
+    """
+
+    def __init__(self, chan: Channel, owner: TaskInstance):
+        self._chan = chan
+        self._owner = owner
+        self._view: Any = None
+
+    def _as(self, cls):
+        if self._view is None:
+            side = "consumer" if cls is IStream else "producer"
+            self._chan._bind(side, self._owner)
+            self._view = cls(self._chan)
+        elif not isinstance(self._view, cls):
+            raise ChannelMisuse(
+                f"task {self._owner.name} uses channel {self._chan.name!r} "
+                f"as both producer and consumer")
+        return self._view
+
+    @property
+    def channel(self) -> Channel:
+        return self._chan
+
+    # consumer ops
+    def empty(self): return self._as(IStream).empty()
+    def read(self): return self._as(IStream).read()
+    def peek(self): return self._as(IStream).peek()
+    def eot(self): return self._as(IStream).eot()
+    def open(self): return self._as(IStream).open()
+    def try_read(self): return self._as(IStream).try_read()
+    def try_peek(self): return self._as(IStream).try_peek()
+    def try_eot(self): return self._as(IStream).try_eot()
+    def try_open(self): return self._as(IStream).try_open()
+    def __iter__(self): return iter(self._as(IStream))
+    # producer ops
+    def full(self): return self._as(OStream).full()
+    def write(self, v): return self._as(OStream).write(v)
+    def close(self): return self._as(OStream).close()
+    def try_write(self, v): return self._as(OStream).try_write(v)
+    def try_close(self): return self._as(OStream).try_close()
+
+
+def _annotation_direction(ann: Any) -> Optional[type]:
+    """Map a parameter annotation to IStream/OStream (handles string
+    annotations from ``from __future__ import annotations``)."""
+    if ann is inspect.Parameter.empty:
+        return None
+    if isinstance(ann, str):
+        if "IStream" in ann:
+            return IStream
+        if "OStream" in ann:
+            return OStream
+        return None
+    origin = getattr(ann, "__origin__", ann)
+    if origin is IStream or (inspect.isclass(origin) and
+                             issubclass(origin, IStream)):
+        return IStream
+    if origin is OStream or (inspect.isclass(origin) and
+                             issubclass(origin, OStream)):
+        return OStream
+    return None
+
+
+def _convert_arg(val: Any, ann: Any, inst: TaskInstance) -> Any:
+    """Convert channel arguments to directed stream views."""
+    if isinstance(val, Channel):
+        d = _annotation_direction(ann)
+        if d is IStream:
+            val._bind("consumer", inst)
+            return IStream(val)
+        if d is OStream:
+            val._bind("producer", inst)
+            return OStream(val)
+        return AutoStream(val, inst)
+    if isinstance(val, (list, tuple)) and any(
+            isinstance(v, Channel) for v in val):
+        conv = [_convert_arg(v, ann, inst) for v in val]
+        return type(val)(conv) if isinstance(val, tuple) else conv
+    return val
+
+
+def bind_streams(inst: TaskInstance) -> tuple[tuple, dict]:
+    """Resolve the instance's channel args into stream views, registering
+    channel endpoints.  Called by engines just before running the body."""
+    fn = inst.fn
+    try:
+        params = list(inspect.signature(fn).parameters.values())
+    except (TypeError, ValueError):
+        params = []
+    args = []
+    for i, a in enumerate(inst.args):
+        ann = inspect.Parameter.empty
+        if i < len(params):
+            p = params[i]
+            if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+                ann = p.annotation
+            elif p.kind is p.VAR_POSITIONAL:
+                ann = p.annotation
+        args.append(_convert_arg(a, ann, inst))
+    by_name = {p.name: p.annotation for p in params}
+    kwargs = {
+        k: _convert_arg(v, by_name.get(k, inspect.Parameter.empty), inst)
+        for k, v in inst.kwargs.items()
+    }
+    return tuple(args), kwargs
+
+
+class TaskBuilder:
+    """``repro.task()`` — collects ``invoke`` calls and joins at body end.
+
+    Children are spawned *immediately* by the active engine (so detached
+    infinite tasks such as the paper's VertexHandler can serve requests
+    while the parent is still invoking siblings).
+    """
+
+    def __init__(self):
+        self._children: list[TaskInstance] = []
+        self._joined = False
+        rt = current_runtime()
+        if rt is None:
+            raise RuntimeError(
+                "repro.task() outside a running program; use repro.run(...)")
+        self._rt = rt
+        self._parent = current_task()
+        current_builder_stack().append(self)
+
+    def invoke(self, fn: Callable, *args, detach: bool = False,
+               name: Optional[str] = None, **kwargs) -> "TaskBuilder":
+        inst = TaskInstance(fn, args, kwargs, detach, self._parent, name)
+        if self._parent is not None:
+            self._parent.children.append(inst)
+        self._children.append(inst)
+        self._rt.spawn(inst)
+        return self
+
+    # ``invoke(fn, ...) * 4`` sugar is intentionally absent: the paper's
+    # interface repeats .invoke once per instance; we keep that shape.
+
+    def join(self) -> None:
+        """Wait for all non-detached children (parent-finishes-last rule,
+        Section 3.1.3)."""
+        if self._joined:
+            return
+        self._joined = True
+        stack = current_builder_stack()
+        if self in stack:
+            stack.remove(self)
+        self._rt.join([c for c in self._children if not c.detach])
+
+    # context-manager form
+    def __enter__(self) -> "TaskBuilder":
+        return self
+
+    def __exit__(self, et, ev, tb) -> None:
+        if et is None:
+            self.join()
+        else:
+            # error path: don't mask the original exception with a join
+            self._joined = True
+            stack = current_builder_stack()
+            if self in stack:
+                stack.remove(self)
+
+
+def task() -> TaskBuilder:
+    """``tapa::task()`` (Listing 5)."""
+    return TaskBuilder()
+
+
+def builder_stack_depth() -> int:
+    """Engines snapshot this before running a task body, so that nested
+    (sequential-engine) elaboration only joins the body's own builders."""
+    return len(current_builder_stack())
+
+
+def join_pending_builders(depth: int = 0) -> None:
+    """Join builders the current task body created but did not join —
+    engines call this when a task body returns, emulating TAPA's
+    end-of-full-expression destructor join."""
+    stack = current_builder_stack()
+    while len(stack) > depth:
+        stack[-1].join()

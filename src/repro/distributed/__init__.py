@@ -1,0 +1,8 @@
+"""Distributed runtime: sharding rules, pipeline parallelism over TAPA
+channels, ZeRO optimizer-state sharding, gradient compression."""
+
+from .sharding import (batch_spec, cache_specs, logical_axis_rules,
+                       param_specs, ShardingPolicy)
+
+__all__ = ["param_specs", "batch_spec", "cache_specs",
+           "logical_axis_rules", "ShardingPolicy"]

@@ -1,0 +1,124 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantized all-reduce: each gradient leaf is quantized to int8
+with a per-leaf fp32 scale before crossing the data-parallel axis, cutting
+DP collective bytes 4x (bf16 grads) at the cost of quantization noise that
+*error feedback* (Seide et al., 1-bit SGD; Karimireddy et al. EF-SGD)
+re-injects on the next step, preserving convergence.
+
+Inside pjit the quantize -> psum(int32) -> dequantize sequence makes the
+all-reduce payload int8-width; XLA keeps the reduction in int32 to avoid
+overflow (512 chips x 127 < 2^31 safe).  The local error accumulator is
+sharded exactly like the gradient leaf, so the state adds no replicated
+memory.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization.  Returns (q, scale)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params: Params) -> Params:
+    """Residual accumulator, one per gradient leaf (sharded like it)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Params, err: Params) -> tuple[Params, Params]:
+    """Apply error feedback + int8 quantization locally.
+
+    Returns (quantized_pairs, new_err).  The caller psums the int32 view of
+    each quantized leaf across DP (XLA emits an int8-payload all-reduce when
+    the dtype allows) and divides by the DP size.
+    """
+    g_leaves, treedef = jax.tree.flatten(grads)
+    e_leaves = jax.tree.leaves(err)
+    q_leaves, ne_leaves = [], []
+    for g, e in zip(g_leaves, e_leaves):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        q_leaves.append((q, scale))
+        ne_leaves.append(corrected - dequantize_int8(q, scale))
+    # (q, scale) pairs ride as opaque leaves: consumers unpack them via the
+    # is_leaf=(tuple of length 2) convention used by compressed_psum
+    qs = _unflatten_pairs(treedef, q_leaves)
+    ne = jax.tree.unflatten(treedef, ne_leaves)
+    return qs, ne
+
+
+def _unflatten_pairs(treedef, pairs: list) -> Params:
+    """Unflatten with (q, scale) tuples kept as leaves (a plain unflatten
+    would splice them in as subtrees)."""
+    wrapped = treedef.unflatten(list(range(len(pairs))))
+    return jax.tree.map(lambda i: pairs[i], wrapped)
+
+
+def ef_compressed_mean(grads: Params, err: Params, axis: str) -> tuple:
+    """Error-feedback int8 gradient mean across a mapped axis (shard_map).
+
+    The quantization scale is shared across the group (a scalar pmax per
+    leaf — negligible traffic), so the int8 payloads sum EXACTLY: the only
+    error is each worker's own rounding, which error feedback re-injects
+    next step.  Returns (mean_grads fp32, new_err).
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        scale = jax.lax.pmax(
+            jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-30), axis) / 127.0
+        q = jnp.clip(jnp.round(corrected / scale), -127, 127)
+        mean = jax.lax.psum(q.astype(jnp.int32), axis) \
+            .astype(jnp.float32) * scale / n
+        new_e = corrected - q * scale
+        return mean, new_e
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    e_leaves = jax.tree.leaves(err)
+    out = [one(g, e) for g, e in zip(g_leaves, e_leaves)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def compressed_psum(qs: Params, axis: str) -> Params:
+    """Mean-reduce quantized gradients across a mapped axis (shard_map
+    context).  q is widened to int32 for the reduction; scales are averaged
+    — equivalent to averaging the dequantized values when scales are equal
+    and a bounded approximation otherwise (the error lands in the feedback
+    accumulator either way)."""
+    n = jax.lax.psum(1, axis)
+
+    def one(pair):
+        q, scale = pair
+        tot = jax.lax.psum(q.astype(jnp.int32), axis)
+        s = jax.lax.psum(scale, axis) / n
+        return tot.astype(jnp.float32) * s / n
+
+    return jax.tree.map(one, qs,
+                        is_leaf=lambda t: isinstance(t, tuple)
+                        and len(t) == 2)
+
+
+def compression_error(g: jax.Array) -> float:
+    """Relative L2 error of one quantize/dequantize round trip (no EF)."""
+    q, s = quantize_int8(g)
+    back = dequantize_int8(q, s)
+    gf = g.astype(jnp.float32)
+    return float(jnp.linalg.norm(gf - back) /
+                 jnp.maximum(jnp.linalg.norm(gf), 1e-30))

@@ -1,0 +1,242 @@
+"""Sharding rules: parameters, batches and decode caches onto the mesh.
+
+Axes
+----
+``model``  tensor parallelism (Megatron-style: attention heads / FFN width /
+           vocab; expert dim for MoE when it divides).
+``data``   data parallelism; also hosts FSDP-style parameter sharding for
+           very large models and sequence sharding for B=1 long-context.
+``pod``    (multi-pod only) an outer data-parallel axis by default; the
+           pipeline schedule may claim it instead (distributed/pipeline.py).
+
+Rules are *path-pattern based* over the parameter pytree so the same table
+covers every architecture family.  Divisibility is checked against the real
+mesh axis sizes; a rule that does not divide falls back to the next
+candidate (or replication), so e.g. grok-1's 8 experts simply don't shard
+over a 16-way model axis — its FFN width does instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import lm
+from ..models.config import ModelConfig
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    tp_axis: str = "model"
+    dp_axes: tuple = ("data",)            # ("pod","data") for multi-pod
+    fsdp: bool = False                    # shard big params over dp too
+    fsdp_min_elems: int = 4_000_000
+    seq_axis: Optional[str] = None        # SP for B=1 long-context caches
+    two_d: bool = False                   # weights sharded over dp+tp and
+                                          # kept RESIDENT (serving: no
+                                          # per-step weight all-gather, the
+                                          # anti-FSDP for decode)
+    batch_axes: Optional[tuple] = None    # override activation batch axes
+                                          # (two_d serving replicates the
+                                          # small decode batch instead of
+                                          # fighting the weights for 'data')
+
+    @property
+    def dp_spec(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    @property
+    def batch_spec_axes(self):
+        ax = self.batch_axes if self.batch_axes is not None else self.dp_axes
+        if not ax:
+            return None
+        return ax if len(ax) > 1 else ax[0]
+
+    @property
+    def wide_axis(self):
+        """The dp+tp combined axis used by two_d weight sharding."""
+        return tuple(self.dp_axes) + (self.tp_axis,)
+
+
+def for_mesh(mesh: Mesh, fsdp: bool = False) -> ShardingPolicy:
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return ShardingPolicy(dp_axes=dp_axes, fsdp=fsdp)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _divides(dim: int, mesh: Mesh, axis) -> bool:
+    return dim % _axis_size(mesh, axis) == 0
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(path: str, shape: tuple, mesh: Mesh,
+               pol: ShardingPolicy, stacked: bool) -> P:
+    """Base spec for a parameter leaf; `stacked` marks a leading layer dim."""
+    tp = pol.wide_axis if pol.two_d else pol.tp_axis
+    dims = list(shape[1:]) if stacked else list(shape)
+
+    def spec(*entries):
+        entries = list(entries) + [None] * (len(dims) - len(entries))
+        # drop shardings that do not divide
+        ent = [a if (a is not None and _divides(dims[i], mesh, a)) else None
+               for i, a in enumerate(entries)]
+        return ent
+
+    if path.endswith("embed"):
+        ent = spec(tp, None)
+    elif path.endswith("lm_head") or path.endswith("patch_proj"):
+        ent = spec(None, tp)
+    elif any(path.endswith(s) for s in ("wq", "wk", "wv", "w1")):
+        ent = spec(None, tp)
+    elif any(path.endswith(s) for s in ("wo", "w2")):
+        ent = spec(tp, None)
+    elif path.endswith("b1"):
+        ent = spec(tp)
+    elif "moe" in path and path[-2:] in ("wg", "wu"):
+        # [E, d, ff]: prefer expert parallelism; else shard ff
+        if _divides(dims[0], mesh, tp):
+            ent = spec(tp, None, None)
+        else:
+            ent = spec(None, None, tp)
+    elif "moe" in path and path.endswith("wd"):
+        if _divides(dims[0], mesh, tp):
+            ent = spec(tp, None, None)
+        else:
+            ent = spec(None, tp, None)
+    elif path.endswith("wg") or path.endswith("wu"):
+        ent = spec(None, tp)
+    elif path.endswith("wd"):
+        ent = spec(tp, None)
+    elif path.endswith("in_proj"):
+        ent = spec(None, tp)
+    elif path.endswith("out_proj"):
+        ent = spec(tp, None)
+    else:
+        # norms, biases, router, conv, A_log, D, dt_bias, enc_pos, ...
+        ent = [None] * len(dims)
+
+    # FSDP: put the dp axis on the largest still-unsharded dim of big leaves
+    if pol.fsdp and int(np.prod(shape)) >= pol.fsdp_min_elems:
+        dp = pol.dp_spec
+        order = sorted(range(len(dims)), key=lambda i: -dims[i])
+        for i in order:
+            if ent[i] is None and _divides(dims[i], mesh, dp):
+                ent[i] = dp
+                break
+
+    if stacked:
+        ent = [None] + ent
+    return P(*ent)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh,
+                pol: Optional[ShardingPolicy] = None) -> Params:
+    """PartitionSpec pytree mirroring ``lm.init_params``."""
+    pol = pol or for_mesh(mesh)
+    abstract = lm.abstract_params(cfg)
+
+    def one(path_tuple, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", "")) for k in path_tuple]
+        path = "/".join(str(k) for k in keys)
+        stacked = keys and keys[0] in ("layers", "enc_layers")
+        return _leaf_spec(path, leaf.shape, mesh, pol, stacked)
+
+    return jax.tree_util.tree_map_with_path(one, abstract)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh,
+                    pol: Optional[ShardingPolicy] = None) -> Params:
+    specs = param_specs(cfg, mesh, pol)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig, mesh: Mesh, batch_size: int,
+               pol: Optional[ShardingPolicy] = None) -> dict:
+    """Specs for a training/prefill batch dict."""
+    pol = pol or for_mesh(mesh)
+    dp = pol.batch_spec_axes
+    bdim = dp if _divides(batch_size, mesh, dp) else (
+        "data" if _divides(batch_size, mesh, "data") else None)
+    d = {"tokens": P(bdim, None), "labels": P(bdim, None)}
+    if cfg.vlm is not None:
+        d["patches"] = P(bdim, None, None)
+    if cfg.encdec is not None:
+        d["frames"] = P(bdim, None, None)
+    return d
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch_size: int,
+                pol: Optional[ShardingPolicy] = None) -> dict:
+    """Specs for the decode cache pytree (mirrors lm.init_decode_cache).
+
+    B >= dp: shard batch over dp; B == 1 (long-context): shard the cache
+    *sequence* dim over the data axis (sequence parallelism) and heads over
+    the model axis.
+    """
+    pol = pol or for_mesh(mesh)
+    tp = pol.tp_axis
+    dp = pol.batch_spec_axes
+    bdim = dp if _divides(batch_size, mesh, dp) else (
+        "data" if _divides(batch_size, mesh, "data") else None)
+    seq_axis = pol.dp_spec if bdim is None else None   # SP fallback for B=1
+    if pol.two_d:
+        # resident-weight serving: batch replicated, cache SEQUENCE sharded
+        # over every axis — each chip owns a contiguous KV window and the
+        # softmax statistics are combined with tiny all-reduces
+        bdim, seq_axis = None, pol.wide_axis
+
+    c: dict = {"len": P()}
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        nkv = cfg.n_kv_heads if cfg.family != "audio" else cfg.n_heads
+        kvdim = tp if (not pol.two_d and _divides(nkv, mesh, tp)) else None
+        c["k"] = P(None, bdim, seq_axis, kvdim, None)
+        c["v"] = P(None, bdim, seq_axis, kvdim, None)
+        if cfg.kv_quant and cfg.family != "audio":
+            c["k_scale"] = P(None, bdim, seq_axis, kvdim)
+            c["v_scale"] = P(None, bdim, seq_axis, kvdim)
+        if cfg.family == "audio":
+            c["xk"] = P(None, bdim, None, kvdim, None)
+            c["xv"] = P(None, bdim, None, kvdim, None)
+    elif cfg.family in ("ssm", "hybrid"):
+        nh = cfg.ssm.n_heads(cfg.d_model)
+        hdim = tp if _divides(nh, mesh, tp) else None
+        c["ssm"] = P(None, bdim, hdim, None, None)
+        c["conv"] = P(None, bdim, None, None)
+        if cfg.family == "hybrid":
+            kvdim = tp if _divides(cfg.n_kv_heads, mesh, tp) else None
+            c["k"] = P(None, bdim, seq_axis, kvdim, None)
+            c["v"] = P(None, bdim, seq_axis, kvdim, None)
+    return c
+
+
+def logical_axis_rules() -> list[tuple]:
+    """Documented axis mapping (for DESIGN.md / debugging)."""
+    return [
+        ("batch", ("pod", "data")),
+        ("vocab", ("model",)),
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("mlp", ("model",)),
+        ("experts", ("model",)),
+        ("cache_seq", ("data",)),
+    ]

@@ -1,0 +1,5 @@
+from .elastic import (ElasticMesh, PreemptionGuard, StragglerDetector,
+                      resume_or_init)
+
+__all__ = ["ElasticMesh", "PreemptionGuard", "StragglerDetector",
+           "resume_or_init"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots (pl.pallas_call + BlockSpec).
+
+Three kernels, each with a pure-jnp oracle in ref.py and a jit'd public
+wrapper in ops.py:
+
+* flash_attention — tiled online-softmax attention (GQA / causal / window)
+* decode_attention — flash-decode for one-token serving against a KV cache
+* ssd_scan — Mamba-2 SSD chunked scan with VMEM-carried inter-chunk state
+
+On non-TPU backends the kernels run under ``interpret=True`` (Python
+execution of the kernel body — the correctness-validation mode).
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,123 @@
+"""Flash-decode kernel: one new token attends to a long KV cache.
+
+The decode shape is the degenerate flash case (Sq = 1), where the GPU
+formulation (FlashDecoding, arXiv:2311.01282) *splits* the KV axis across
+SMs and reduces partials.  On TPU there is one core per chip and the Pallas
+grid is sequential, so the TPU-native formulation keeps the online-softmax
+state in VMEM scratch across sequential KV blocks — no split/reduce pass.
+What we keep from the paper's insight is the *batching over the GQA group*:
+all ``group = nh/nkv`` query heads that share one KV head are processed as
+a single [group, hd] tile, so each KV block is streamed from HBM exactly
+once per kv head (the bandwidth-optimality argument of flash-decode).
+
+The valid-cache-length is data-dependent (it is the running decode
+position), so blocks past ``kv_len`` are skipped with ``pl.when`` on a
+traced predicate — the sequential grid turns that into genuinely skipped
+HBM traffic for the unfilled cache tail.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 256
+STATS_LANES = 128
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref,                     # scalar-prefetch [B] int32
+                   q_ref, k_ref, v_ref,         # inputs
+                   o_ref,                       # output
+                   acc_ref, m_ref, l_ref,       # VMEM scratch
+                   *, scale: float, block_k: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    kv_len = len_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)                   # skip unfilled cache tail
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)      # [group, hd]
+        k = k_ref[0, 0].astype(jnp.float32)      # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)      # [bk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [group, bk]
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = kpos < kv_len
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[...] = jnp.broadcast_to(
+            (l_prev * alpha + jnp.sum(p, axis=1))[:, None], l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array, *,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = True) -> jax.Array:
+    """q: [B, nkv, group, hd]; k/v: [B, nkv, S_max, hd]; kv_len: [B] int32.
+
+    Returns [B, nkv, group, hd].
+    """
+    B, nkv, group, hd = q.shape
+    Sk = k.shape[2]
+    block_k = min(block_k, Sk)
+    assert Sk % block_k == 0, (Sk, block_k)
+    grid = (B, nkv, Sk // block_k)
+
+    kernel = functools.partial(_decode_kernel, scale=1.0 / math.sqrt(hd),
+                               block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, group, hd),
+                             lambda b, h, ki, lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda b, h, ki, lens: (b, h, ki, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda b, h, ki, lens: (b, h, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, hd),
+                                   lambda b, h, ki, lens: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((group, hd), jnp.float32),
+                pltpu.VMEM((group, STATS_LANES), jnp.float32),
+                pltpu.VMEM((group, STATS_LANES), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, nkv, group, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(kv_len, jnp.int32), q, k, v)

@@ -1,0 +1,210 @@
+"""Public jit-friendly wrappers around the Pallas kernels.
+
+Layout conversion (model layout [B, S, heads, hd] <-> kernel head-major
+layout), padding to block multiples, interpret-mode selection (the kernels
+execute in Python on CPU via ``interpret=True``; on a TPU backend they
+lower to Mosaic), and ``jax.custom_vjp`` definitions live here so the
+kernels themselves stay pure forward passes.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention_fwd
+from .flash_attention import flash_attention_fwd
+from .ssd_scan import ssd_scan_fwd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash(q, k, v, causal: bool, window: Optional[int]):
+    out, _ = _flash_fwd_res(q, k, v, causal, window)
+    return out
+
+
+def _flash_fwd_res(q, k, v, causal, window):
+    # model layout [B, S, h, hd] -> head-major [B, h, S, hd]
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out, lse = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                                   interpret=_interpret())
+    return jnp.swapaxes(out, 1, 2), (q, k, v, jnp.swapaxes(out, 1, 2), lse)
+
+
+def _flash_bwd(causal, window, res, dout):
+    """Standard flash backward from saved (q, k, v, out, lse), pure jnp fp32.
+
+    On real hardware this would be its own kernel; training defaults to the
+    XLA path (use_kernel=False), so this keeps the custom_vjp law exact
+    without a second Pallas kernel.
+    """
+    q, k, v, out, lse = res
+    B, Sq, nh, hd = q.shape
+    Sk, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    scale = 1.0 / math.sqrt(hd)
+
+    qf = q.reshape(B, Sq, nkv, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dof = dout.reshape(B, Sq, nkv, g, hd).astype(jnp.float32)
+    of = out.reshape(B, Sq, nkv, g, hd).astype(jnp.float32)
+    lse_g = jnp.swapaxes(lse.reshape(B, nkv, g, Sq), 1, 3)  # [B,Sq,g,nkv]
+    lse_g = jnp.swapaxes(lse_g, 2, 3)                       # [B,Sq,nkv,g]
+
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, kf) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    p = jnp.exp(s - jnp.moveaxis(lse_g, (1, 2, 3), (3, 1, 2))[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+
+    Dv = jnp.sum(dof * of, axis=-1)                          # [B,Sq,nkv,g]
+    dp = jnp.einsum("bqkgh,bskh->bkgqs", dof, vf)
+    ds = p * (dp - jnp.moveaxis(Dv, (1, 2, 3), (3, 1, 2))[..., None])
+    dq = jnp.einsum("bkgqs,bskh->bqkgh", ds, kf) * scale
+    dk = jnp.einsum("bkgqs,bqkgh->bskh", ds, qf) * scale
+    dv = jnp.einsum("bkgqs,bqkgh->bskh", p, dof)
+    return (dq.reshape(B, Sq, nh, hd).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+def _flash_fwd_rule(q, k, v, causal, window):
+    out, res = _flash_fwd_res(q, k, v, causal, window)
+    return out, res
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: Optional[int] = None) -> jax.Array:
+    """Flash attention, model layout.
+
+    q: [B, Sq, nh, hd]; k/v: [B, Sk, nkv, hd].  Falls back to the jnp
+    reference when shapes don't tile (non-128-multiple sequence lengths).
+    """
+    Sq, Sk = q.shape[1], k.shape[1]
+    bq = min(128, Sq)
+    bk = min(128, Sk)
+    if Sq % bq or Sk % bk or (q.shape[-1] % 8):
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal, window)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *,
+                     block_k: int = 256) -> jax.Array:
+    """One-token GQA decode against a cache (no grad path — serving only).
+
+    q: [B, nh, hd] or [B, 1, nh, hd]; k/v: [B, S_max, nkv, hd];
+    kv_len: scalar or [B] int32 valid length.  Returns q-shaped output.
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    B, nh, hd = q.shape
+    Smax, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    bk = min(block_k, Smax)
+    if Smax % bk:
+        out = ref.decode_attention_ref(q, k, v, lens)
+        return out[:, None] if squeeze else out
+    qt = q.reshape(B, nkv, g, hd)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = decode_attention_fwd(qt, kt, vt, lens, block_k=bk,
+                               interpret=_interpret())
+    out = out.reshape(B, nh, hd)
+    return out[:, None] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (Mamba-2)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _ssd(x, dt, A, Bm, Cm, D, chunk, s0):
+    return _ssd_call(x, dt, A, Bm, Cm, D, chunk, s0)
+
+
+def _ssd_call(x, dt, A, Bm, Cm, D, chunk, s0):
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    pad = (-S) % chunk
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # head-major kernel layout + precomputed elementwise terms
+    xdt = jnp.moveaxis(xf * dtf[..., None], (1, 2), (2, 1))   # [B,H,S,P]
+    dA = jnp.moveaxis(dtf * A.astype(jnp.float32), (1, 2),
+                      (2, 1))[:, :, None, :]                  # [B,H,1,S]
+    Bt = jnp.moveaxis(Bm.astype(jnp.float32), 1, 2)           # [B,G,S,N]
+    Ct = jnp.moveaxis(Cm.astype(jnp.float32), 1, 2)
+    y, sfinal = ssd_scan_fwd(xdt, dA, Bt, Ct, s0.astype(jnp.float32),
+                             chunk=chunk, interpret=_interpret())
+    y = jnp.moveaxis(y, 1, 2)[:, :S]                          # [B,S,H,P]
+    y = y + xf[:, :S] * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), sfinal
+
+
+def _ssd_fwd_rule(x, dt, A, Bm, Cm, D, chunk, s0):
+    out = _ssd(x, dt, A, Bm, Cm, D, chunk, s0)
+    return out, (x, dt, A, Bm, Cm, D, s0)
+
+
+def _ssd_bwd(chunk, res, cts):
+    """Recompute-through-reference backward (state cotangent included)."""
+    x, dt, A, Bm, Cm, D, s0 = res
+
+    def f(x, dt, A, Bm, Cm, D, s0):
+        return ref.ssd_scan_ref(x, dt, A, Bm, Cm, D, init_state=s0)
+
+    _, vjp = jax.vjp(f, x, dt, A, Bm, Cm, D, s0)
+    return vjp(cts)
+
+
+_ssd.defvjp(_ssd_fwd_rule, _ssd_bwd)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, D: jax.Array, *, chunk: int = 256,
+             init_state: Optional[jax.Array] = None) -> tuple:
+    """Chunked SSD sequence mixing (kernel-backed).
+
+    Shapes as ref.ssd_scan_ref.  Returns (y, final_state fp32).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[3]
+    s0 = init_state if init_state is not None else \
+        jnp.zeros((B, H, P, N), jnp.float32)
+    return _ssd(x, dt, A, Bm, Cm, D, chunk, s0)

@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).  These are
+*naive* O(S^2)-memory implementations — clarity over speed.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        q_offset: int = 0,
+                        kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Grouped-query attention, fp32 softmax.
+
+    q: [B, Sq, nh, hd]; k/v: [B, Sk, nkv, hd] with nh % nkv == 0.
+    Returns [B, Sq, nh, hd] in q.dtype.
+    """
+    B, Sq, nh, hd = q.shape
+    Sk, nkv = k.shape[1], k.shape[2]
+    group = nh // nkv
+    qg = q.reshape(B, Sq, nkv, group, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kf) / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, nh, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """Single-token decode attention against a KV cache.
+
+    q: [B, nh, hd]; k/v: [B, S_max, nkv, hd]; kv_len: [] or [B] int32 —
+    number of valid cache slots.  Returns [B, nh, hd].
+    """
+    B, nh, hd = q.shape
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    Sk, nkv = k.shape[1], k.shape[2]
+    group = nh // nkv
+    qg = q.reshape(B, nkv, group, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32)) \
+        / math.sqrt(hd)
+    mask = jnp.arange(Sk)[None, :] < kv_len[:, None]          # [B, Sk]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", w, v.astype(jnp.float32))
+    return o.reshape(B, nh, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, D: jax.Array, *,
+                 init_state: Optional[jax.Array] = None) -> tuple:
+    """Sequential (recurrent) reference for the SSD scan — the simplest
+    possible statement of Mamba-2 semantics (arXiv:2405.21060 eq. 1):
+
+        S_t = exp(dt_t * A) S_{t-1} + dt_t B_t x_t^T
+        y_t = C_t . S_t + D x_t
+
+    x: [B, S, H, P]; dt: [B, S, H]; A: [H]; Bm/Cm: [B, S, G, N]; D: [H].
+    Returns (y [B,S,H,P], final_state [B,H,P,N]), both fp32 math.
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)   # [B,S,H,N]
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+    Af = A.astype(jnp.float32)
+
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((B, H, P, N), jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp          # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        dA = jnp.exp(dtt * Af[None])                        # [B,H]
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, :, None, :]
+        state = state * dA[..., None, None] + upd           # [B,H,P,N]
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    final, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                              # [B,S,H,P]
+    y = y + xf * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final

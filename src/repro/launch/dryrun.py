@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell:
+    jax.jit(step, in_shardings=..., out_shardings=...)
+        .lower(*abstract_inputs).compile()
+then record memory_analysis(), cost_analysis() and the collective-transfer
+bytes parsed from the optimized HLO — the inputs to EXPERIMENTS.md
+S:Dry-run and S:Roofline.
+
+The XLA_FLAGS line above MUST run before any other import so the host
+platform exposes 512 placeholder devices; nothing here allocates on them
+(ShapeDtypeStruct stand-ins only).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+        --shape train_4k --mesh single
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+from typing import Optional
+
+import jax
+
+from ..configs import ARCH_IDS, get_config, SHAPES, shape_applicable
+from ..models.config import InputShape, ModelConfig
+from .mesh import make_production_mesh
+from .steps import input_specs
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "out"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+
+
+def _crosses_pod(line: str, pod_size: int) -> Optional[bool]:
+    """Does this collective's replica grouping span a pod boundary?
+    None when no explicit groups are printed (assume worst case)."""
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return None
+    for grp in re.findall(r"\{([^}]*)\}", m.group(1)):
+        ids = [int(x) for x in grp.split(",") if x.strip()]
+        if ids and (min(ids) // pod_size) != (max(ids) // pod_size):
+            return True
+    return False
+
+
+def collective_bytes(hlo_text: str, pod_size: Optional[int] = None) -> dict:
+    """Sum transferred bytes per collective kind from optimized HLO.
+
+    Convention: per-op bytes = result-shape bytes; all-reduce counts 2x
+    (ring AR = reduce-scatter + all-gather).  ``-start`` async forms are
+    counted, ``-done`` skipped.  This is the per-*device* shard size, i.e.
+    bytes crossing that device's links (ring schedules move ~2x(n-1)/n of
+    the shard per hop-sum, absorbed into the constant; we report the raw
+    sum and divide by link bandwidth in the roofline).
+
+    With ``pod_size`` set (e.g. 256), collectives whose replica groups span
+    a pod boundary are additionally summed as ``cross_pod_bytes`` — the
+    traffic that must traverse the (scarcer) inter-pod links.
+    """
+    per_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    cross_pod = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        # result type is between '= ' and the op name
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        ty, op = m.group(1), m.group(2)
+        base = op.removesuffix("-start")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        b = _shape_bytes(ty)
+        if base == "all-reduce":
+            b *= 2
+        per_kind[base] += b
+        counts[base] += 1
+        if pod_size is not None:
+            spans = _crosses_pod(s, pod_size)
+            if spans or spans is None:
+                cross_pod += b
+    per_kind_counts = {f"n_{k}": v for k, v in counts.items() if v}
+    out = {"total_bytes": sum(per_kind.values()),
+           **{k: v for k, v in per_kind.items() if v}, **per_kind_counts}
+    if pod_size is not None:
+        out["cross_pod_bytes"] = cross_pod
+    return out
+
+
+def run_cell(cfg: ModelConfig, shape: InputShape, mesh, mesh_name: str,
+             verbose: bool = True) -> dict:
+    """Lower + compile one (arch, shape, mesh) cell; return its record."""
+    t0 = time.time()
+    spec = input_specs(cfg, shape, mesh)
+    with mesh:
+        jitted = jax.jit(spec["fn"], in_shardings=spec["in_shardings"],
+                         out_shardings=spec["out_shardings"],
+                         donate_argnums=spec["donate_argnums"])
+        lowered = jitted.lower(*spec["args"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    rec: dict = {
+        "arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+        "kind": shape.kind, "ok": True,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "n_devices": mesh.size,
+    }
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        if verbose:
+            print(f"  memory_analysis: {rec['memory']}")
+    except Exception as e:  # pragma: no cover - backend specific
+        rec["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if k in ("flops", "bytes accessed", "transcendentals",
+                                "optimal_seconds")
+                       or k.startswith("bytes accessed")}
+        if verbose:
+            print(f"  cost_analysis: flops={rec['cost'].get('flops', 0):.3e}"
+                  f" bytes={rec['cost'].get('bytes accessed', 0):.3e}")
+    except Exception as e:  # pragma: no cover
+        rec["cost"] = {"error": str(e)}
+    try:
+        rec["collectives"] = collective_bytes(compiled.as_text())
+        if verbose:
+            print(f"  collectives: {rec['collectives']}")
+    except Exception as e:  # pragma: no cover
+        rec["collectives"] = {"error": str(e)}
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(OUT_DIR / "dryrun.json"))
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells already in the output file")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results: dict[str, dict] = {}
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for shp in shapes:
+            shape = SHAPES[shp]
+            ok, why = shape_applicable(cfg, shape)
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                key = f"{cfg.name}|{shape.name}|{mesh_name}"
+                if key in results and results[key].get("ok") \
+                        and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                if not ok:
+                    results[key] = {"arch": cfg.name, "shape": shape.name,
+                                    "mesh": mesh_name, "skipped": why,
+                                    "ok": True}
+                    print(f"[skip]   {key}: {why}")
+                    continue
+                print(f"[run]    {key} ...", flush=True)
+                try:
+                    mesh = make_production_mesh(multi_pod=multi)
+                    rec = run_cell(cfg, shape, mesh, mesh_name)
+                    results[key] = rec
+                    print(f"[ok]     {key} compile={rec['compile_s']}s")
+                except Exception:
+                    n_fail += 1
+                    results[key] = {"arch": cfg.name, "shape": shape.name,
+                                    "mesh": mesh_name, "ok": False,
+                                    "error": traceback.format_exc(-4)}
+                    print(f"[FAIL]   {key}\n{traceback.format_exc(-4)}")
+                out_path.write_text(json.dumps(results, indent=1))
+    out_path.write_text(json.dumps(results, indent=1))
+    print(f"\nwrote {out_path} ({len(results)} cells, {n_fail} failures)")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,151 @@
+"""Step builders shared by train/serve drivers and the dry-run.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input (no device allocation) plus the matching
+PartitionSpecs — the pattern required for .lower()/.compile() dry-runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed import sharding as shd
+from ..models import lm
+from ..models.config import InputShape, ModelConfig, SHAPES
+from ..optim import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def abstract_batch(cfg: ModelConfig, B: int, S: int) -> dict:
+    d: dict = {"tokens": SDS((B, S), jnp.int32),
+               "labels": SDS((B, S), jnp.int32)}
+    if cfg.vlm is not None:
+        d["patches"] = SDS((B, cfg.vlm.n_patches, cfg.vlm.d_patch),
+                           jnp.bfloat16)
+    if cfg.encdec is not None:
+        d["frames"] = SDS((B, cfg.encdec.n_audio_ctx, cfg.d_model),
+                          jnp.bfloat16)
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                pol: Optional[shd.ShardingPolicy] = None,
+                opt: Optional[AdamWConfig] = None,
+                scan_layers: bool = True, remat: bool = True,
+                use_kernel: bool = False) -> dict:
+    """Everything a dry-run needs for one (arch x input-shape) cell:
+
+    returns {"fn", "args" (abstract), "in_shardings", "out_shardings",
+             "donate_argnums"} ready for
+    ``jax.jit(fn, ...).lower(*args).compile()``.
+    """
+    pol = pol or shd.for_mesh(mesh, fsdp=cfg.param_count() > 5e10)
+    opt = opt or AdamWConfig(
+        state_dtype="bfloat16" if cfg.param_count() > 5e10 else "float32")
+    pspec = shd.param_specs(cfg, mesh, pol)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+    aparams = lm.abstract_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        ospec = opt_state_specs(cfg, mesh, pol)
+        oshard = jax.tree.map(lambda s: NamedSharding(mesh, s), ospec)
+        aopt = jax.eval_shape(partial(adamw_init, c=opt), aparams)
+        bspec = shd.batch_spec(cfg, mesh, B, pol)
+        bshard = {k: NamedSharding(mesh, v) for k, v in bspec.items()}
+        abatch = abstract_batch(cfg, B, S)
+        fn = make_train_step(cfg, opt, scan_layers=scan_layers,
+                             remat=remat, use_kernel=use_kernel)
+        return dict(
+            fn=fn, args=(aparams, aopt, abatch),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard,
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        bspec = shd.batch_spec(cfg, mesh, B, pol)
+        abatch = abstract_batch(cfg, B, S)
+        del abatch["labels"], bspec["labels"]
+        bshard = {k: NamedSharding(mesh, v) for k, v in bspec.items()}
+        cspec = shd.cache_specs(cfg, mesh, B, pol)
+        cshard = {k: NamedSharding(mesh, v) for k, v in cspec.items()}
+        fn = make_prefill_step(cfg, use_kernel=use_kernel,
+                               scan_layers=scan_layers)
+        return dict(
+            fn=fn, args=(aparams, abatch),
+            in_shardings=(pshard, bshard),
+            out_shardings=(NamedSharding(
+                mesh,
+                P(pol.batch_spec_axes, None)
+                if pol.batch_spec_axes is not None and
+                B % shd._axis_size(mesh, pol.batch_spec_axes) == 0
+                else P()), cshard),
+            donate_argnums=(),
+        )
+
+    # decode: one new token against a full cache
+    acache = lm.init_decode_cache(cfg, B, S, abstract=True)
+    cspec = shd.cache_specs(cfg, mesh, B, pol)
+    cshard = {k: NamedSharding(mesh, v) for k, v in cspec.items()}
+    atok = SDS((B,), jnp.int32)
+    ba = pol.batch_spec_axes
+    bdim = ba if ba is not None and \
+        B % shd._axis_size(mesh, ba) == 0 else \
+        ("data" if ba is not None and B % mesh.shape["data"] == 0 else None)
+    tshard = NamedSharding(mesh, P(bdim))
+    fn = make_decode_step(cfg, scan_layers=scan_layers)
+    return dict(
+        fn=fn, args=(aparams, atok, acache),
+        in_shardings=(pshard, tshard, cshard),
+        out_shardings=(NamedSharding(mesh, P(bdim, None)), cshard),
+        donate_argnums=(2,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, *,
+                    scan_layers: bool = True, remat: bool = True,
+                    use_kernel: bool = False):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lm.loss_fn)(
+            params, cfg, batch, scan_layers=scan_layers, remat=remat,
+            use_kernel=use_kernel)
+        new_p, new_s, metrics = adamw_update(grads, opt_state, params, opt)
+        metrics["loss"] = loss
+        return new_p, new_s, metrics
+    train_step.__name__ = f"train_step_{cfg.name}"
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, use_kernel: bool = False,
+                      scan_layers: bool = True):
+    def prefill_step(params, batch):
+        extra = {k: v for k, v in batch.items() if k in ("patches", "frames")}
+        return lm.prefill(params, cfg, batch["tokens"], extra=extra,
+                          use_kernel=use_kernel, scan_layers=scan_layers)
+    prefill_step.__name__ = f"prefill_step_{cfg.name}"
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, scan_layers: bool = True):
+    def decode_step(params, token, cache):
+        return lm.decode_step(params, cfg, token, cache,
+                              scan_layers=scan_layers)
+    decode_step.__name__ = f"decode_step_{cfg.name}"
+    return decode_step

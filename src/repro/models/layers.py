@@ -1,0 +1,675 @@
+"""Neural-net building blocks (pure functional JAX).
+
+Every layer is a pair of functions: ``init_*(rng, cfg) -> params-pytree``
+and ``apply(params, x, ...) -> y``.  Parameters are plain nested dicts so
+they shard trivially under pjit and stack trivially for ``lax.scan`` over
+layers (the in-program form of the paper's compile-each-definition-once
+insight — see core/hier_compile.py).
+
+Compute dtype is bf16 by default with fp32 accumulation for softmax, norms
+and SSD state recurrences.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+Params = Any  # nested dict pytree
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _dense_init(rng, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def _embed_init(rng, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.02) \
+        .astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layer_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                     # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]             # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + RoPE + optional qk-norm + optional sliding window)
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ModelConfig, dtype) -> Params:
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": _dense_init(ks[0], d, nh * hd, dtype),
+        "wk": _dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": _dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": _dense_init(ks[3], nh * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _qkv(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+         rope: bool = True):
+    B, S, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, nh, hd)
+    k = (x @ p["wk"]).reshape(B, S, nkv, hd)
+    v = (x @ p["wv"]).reshape(B, S, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+         causal: bool, q_offset: jax.Array | int = 0,
+         kv_len: Optional[jax.Array] = None,
+         window: Optional[int] = None) -> jax.Array:
+    """Grouped-query scaled dot-product attention, fp32 softmax.
+
+    q: [B, Sq, nh, hd]; k/v: [B, Sk, nkv, hd].  ``q_offset`` is the absolute
+    position of q[0] (decode: cache length).  ``kv_len`` masks cache slots
+    >= kv_len.  ``window`` enables sliding-window attention.
+    """
+    B, Sq, nh, hd = q.shape
+    Sk, nkv = k.shape[1], k.shape[2]
+    group = nh // nkv
+    qg = q.reshape(B, Sq, nkv, group, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None] + q_offset       # [Sq, 1]
+    kpos = jnp.arange(Sk)[None, :]                  # [1, Sk]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, nh, hd).astype(q.dtype)
+
+
+def sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 causal: bool, window: Optional[int] = None,
+                 chunk: int = 1024) -> jax.Array:
+    """Memory-efficient attention: online softmax over KV chunks.
+
+    Pure-XLA statement of the flash-attention recurrence (lax.scan over KV
+    blocks, fp32 running max/sum) — the [Sq, Sk] score matrix is never
+    materialized, so peak HBM traffic drops from O(Sq*Sk) to
+    O(Sq*chunk) per head.  Differentiable (scan bwd recomputes per block,
+    flash-style).  This is the beyond-paper memory-term optimization used
+    by the S:Perf hillclimb; the Pallas kernel is its TPU-core twin.
+    """
+    B, Sq, nh, hd = q.shape
+    Sk, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk = k.shape[1] // chunk
+    qg = q.reshape(B, Sq, nkv, g, hd).astype(jnp.float32) / math.sqrt(hd)
+    kb = jnp.moveaxis(k.reshape(B, nblk, chunk, nkv, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nblk, chunk, nkv, hd), 1, 0)
+    qpos = jnp.arange(Sq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kc, vc, bi = blk
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kc.astype(jnp.float32))
+        kpos = bi * chunk + jnp.arange(chunk)
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        mask &= (kpos < Sk)[None, :]                  # padded tail
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nkv, g, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, nkv, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, nkv, g, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nblk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # [B,nkv,g,Sq,hd]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, nh, hd)
+    return out.astype(q.dtype)
+
+
+def attention(p: Params, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array, *, causal: Optional[bool] = None,
+              kv: Optional[tuple] = None, use_kernel: bool = False) -> jax.Array:
+    """Full-sequence attention (train/prefill).  ``kv`` overrides k/v for
+    cross-attention.  ``cfg.attn_impl`` selects naive / chunked / kernel."""
+    causal = cfg.causal if causal is None else causal
+    q, k, v = _qkv(p, cfg, x, positions, rope=kv is None)
+    if kv is not None:
+        k, v = kv
+    if use_kernel or cfg.attn_impl == "kernel":
+        from ..kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal,
+                                   window=cfg.sliding_window)
+    elif cfg.attn_impl == "chunked":
+        out = sdpa_chunked(q, k, v, causal=causal,
+                           window=cfg.sliding_window)
+    elif cfg.attn_impl == "noscore":
+        out = _noscore_attention(q, k, v)
+    else:
+        out = sdpa(q, k, v, causal=causal, window=cfg.sliding_window)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+
+
+def _noscore_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Measurement stand-in (S:Perf only): keeps the q/k/v/o projections
+    alive but removes the O(Sq*Sk) score computation entirely.  The
+    difference (full build − noscore build) isolates the score-path cost;
+    adding the Pallas flash kernel's analytic HBM traffic (q+k+v+o once)
+    on top models the ``attn_impl="kernel"`` roofline on real hardware,
+    where score blocks live in VMEM and never touch HBM."""
+    g = q.shape[2] // k.shape[2]
+    return q + 0.5 * jnp.repeat(k + v, g, axis=2)
+
+
+def quantize_kv(t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-(position, head) symmetric int8 quantization of K or V.
+
+    t: [B, S, n, hd] -> (int8 values, fp16 scales [B, S, n]).  Halves the
+    KV cache's HBM footprint — the decode-capacity lever for pod-scale
+    serving (grok-1: 4.3 -> 2.2 GB/chip at 32k context).
+    """
+    m = jnp.maximum(jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1), 1e-6)
+    scale = m / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]) \
+        .astype(dtype)
+
+
+def attention_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     cache_len: jax.Array,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None) -> tuple:
+    """One-token decode against a KV cache.
+
+    x: [B, 1, d]; cache_k/v: [B, S_max, nkv, hd]; cache_len: [] int32.
+    Returns (out [B,1,d], new_k, new_v[, new_k_scale, new_v_scale]).
+    With ``cfg.kv_quant`` the caches are int8 + per-(pos, head) scales.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    if cfg.kv_quant:
+        qk, sk = quantize_kv(k)
+        qv, sv = quantize_kv(v)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache_k, qk, cache_len, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache_v, qv, cache_len, 1)
+        nks = jax.lax.dynamic_update_slice_in_dim(k_scale, sk, cache_len, 1)
+        nvs = jax.lax.dynamic_update_slice_in_dim(v_scale, sv, cache_len, 1)
+        kd = dequantize_kv(ck, nks, q.dtype)
+        vd = dequantize_kv(cv, nvs, q.dtype)
+        out = sdpa(q, kd, vd, causal=False, q_offset=cache_len,
+                   kv_len=cache_len + 1, window=cfg.sliding_window)
+        return (out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"],
+                ck, cv, nks, nvs)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                             cache_len, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                             cache_len, axis=1)
+    if cfg.attn_impl == "kernel" and cfg.sliding_window is None:
+        # flash-decode Pallas kernel: sequential KV-block grid with
+        # VMEM-carried softmax state; skips the unfilled cache tail via
+        # the scalar-prefetched length (kernels/decode_attention.py)
+        from ..kernels import ops as kops
+        out = kops.decode_attention(q[:, 0], ck, cv, cache_len + 1)[:, None]
+    else:
+        out = sdpa(q, ck, cv, causal=False, q_offset=cache_len,
+                   kv_len=cache_len + 1, window=cfg.sliding_window)
+    return out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"], ck, cv
+
+
+def init_cross_attention(rng, cfg: ModelConfig, dtype) -> Params:
+    # full multi-head (whisper uses MHA); reuse attention params shape
+    return init_attention(rng, dataclasses.replace(
+        cfg, n_kv_heads=cfg.n_heads, qk_norm=False), dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d: int, ff: int, dtype) -> Params:
+    ks = jax.random.split(rng, 3)
+    return {
+        "wg": _dense_init(ks[0], d, ff, dtype),
+        "wu": _dense_init(ks[1], d, ff, dtype),
+        "wd": _dense_init(ks[2], ff, d, dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+def init_mlp2(rng, d: int, ff: int, dtype) -> Params:
+    """Two-matrix GELU MLP (whisper-style)."""
+    ks = jax.random.split(rng, 2)
+    return {"w1": _dense_init(ks[0], d, ff, dtype),
+            "b1": jnp.zeros((ff,), dtype),
+            "w2": _dense_init(ks[1], ff, d, dtype),
+            "b2": jnp.zeros((d,), dtype)}
+
+
+def mlp2(p: Params, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts with capacity-based token dispatch (GShard/Switch style)
+# ---------------------------------------------------------------------------
+
+def init_moe(rng, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.moe
+    d, E, ff = cfg.d_model, m.n_experts, m.d_ff_expert
+    ks = jax.random.split(rng, 4)
+    scale = 1.0 / math.sqrt(d)
+    return {
+        "router": _dense_init(ks[0], d, E, jnp.float32),
+        "wg": (jax.random.normal(ks[1], (E, d, ff), jnp.float32)
+               * scale).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (E, d, ff), jnp.float32)
+               * scale).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (E, ff, d), jnp.float32)
+               * (1.0 / math.sqrt(ff))).astype(dtype),
+    }
+
+
+def moe_layer(p: Params, cfg: ModelConfig, x: jax.Array,
+              capacity_factor: float = 1.25) -> tuple[jax.Array, jax.Array]:
+    """Token-dropping top-k MoE.  Returns (y, aux_load_balance_loss).
+
+    Two dispatch implementations (cfg.moe_impl):
+
+    * ``scatter`` (baseline): tokens scattered into a per-expert buffer
+      ``[E, C, d]`` with ``.at[].add`` and gathered back by index — compact
+      flops, but GSPMD lowers the scatter/gather across the EP-sharded
+      expert axis into expensive all-reduces (measured in S:Perf).
+    * ``dense`` (GShard einsum): a one-hot dispatch mask [T, E, C] turns
+      dispatch/combine into plain einsums — more raw flops but collective-
+      free up to the EP boundary, which is what the MXU wants.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.n_experts, m.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(probs, K)                     # [T, K]
+    topw = topw / jnp.sum(topw, -1, keepdims=True)           # renormalize
+
+    # load-balance aux loss (Switch eq. 4)
+    me = jnp.mean(probs, axis=0)                             # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(tope, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce) * m.load_balance_coef
+
+    if cfg.moe_impl == "dense":
+        return _moe_dense_grouped(p, cfg, x, probs, aux, capacity_factor)
+
+    C = int(math.ceil(T * K / E * capacity_factor))
+    C = max(C, 4)
+    flat_e = tope.reshape(-1)                                # [T*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # [T*K, E]
+    # slot assignment = exclusive prefix sum over the token axis.  The
+    # baseline jnp.cumsum lowers to a quadratic reduce-window on long axes
+    # (measured 1.4e14 counted flops at 8.4M tokens); "scatter_fast" swaps
+    # in the log-depth associative scan (1.9e9) — see S:Perf.
+    if cfg.moe_impl == "scatter_fast":
+        pos = jax.lax.associative_scan(jnp.add, onehot, axis=0) - onehot
+    else:
+        pos = jnp.cumsum(onehot, axis=0) - onehot            # exclusive
+    slot = jnp.take_along_axis(pos, flat_e[:, None], 1)[:, 0]  # [T*K]
+    keep = slot < C
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+
+    disp = jnp.zeros((E, C, d), x.dtype)
+    disp = disp.at[flat_e, jnp.clip(slot, 0, C - 1)].add(
+        jnp.where(keep[:, None], xt[tok_idx], 0).astype(x.dtype))
+
+    h = jnp.einsum("ecd,edf->ecf", disp, p["wg"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", disp, p["wu"])
+    eo = jnp.einsum("ecf,efd->ecd", h, p["wd"])              # [E, C, d]
+
+    gathered = eo[flat_e, jnp.clip(slot, 0, C - 1)]          # [T*K, d]
+    w = (topw.reshape(-1) * keep).astype(jnp.float32)
+    y = jnp.zeros((T, d), jnp.float32).at[tok_idx].add(
+        gathered.astype(jnp.float32) * w[:, None])
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _moe_dense_grouped(p: Params, cfg: ModelConfig, x: jax.Array,
+                       probs: jax.Array, aux: jax.Array,
+                       capacity_factor: float) -> tuple:
+    """GShard einsum dispatch, grouped by batch row (arXiv:2006.16668).
+
+    Tokens are grouped along the batch dimension — the same dimension the
+    data axis shards — so the [B, S, E, C] dispatch/combine masks and every
+    einsum stay local to the data shard; no scatter/gather ops exist for
+    GSPMD to mis-shard.  Capacity is per group: C = ceil(S*K/E * factor).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.n_experts, m.top_k
+    C = max(int(math.ceil(S * K / E * capacity_factor)), 4)
+
+    pr = probs.reshape(B, S, E)
+    topw, tope = jax.lax.top_k(pr, K)                        # [B, S, K]
+    topw = topw / jnp.sum(topw, -1, keepdims=True)
+
+    # slot index of each (token, k) copy within its expert, per group
+    oh = jax.nn.one_hot(tope, E, dtype=jnp.int32)            # [B, S, K, E]
+    # rank tokens per expert in (s, k) order: exclusive prefix-sum over
+    # (S*K), log-depth (see moe_layer for why not jnp.cumsum)
+    flat = oh.reshape(B, S * K, E)
+    pos = jax.lax.associative_scan(jnp.add, flat, axis=1) - flat
+    slot = jnp.sum(pos.reshape(B, S, K, E) * oh, axis=-1)    # [B, S, K]
+    keep = slot < C
+
+    oh_c = jax.nn.one_hot(jnp.clip(slot, 0, C - 1), C,
+                          dtype=jnp.float32)                 # [B, S, K, C]
+    w = jnp.where(keep, topw, 0.0).astype(jnp.float32)
+    combine = jnp.einsum("bske,bskc,bsk->bsec",
+                         oh.astype(jnp.float32), oh_c, w)    # [B, S, E, C]
+    dispatch = (combine > 0).astype(x.dtype)
+
+    disp = jnp.einsum("bsec,bsd->becd", dispatch, x)         # [B, E, C, d]
+    h = jnp.einsum("becd,edf->becf", disp, p["wg"])
+    h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", disp, p["wu"])
+    eo = jnp.einsum("becf,efd->becd", h, p["wd"])            # [B, E, C, d]
+    y = jnp.einsum("bsec,becd->bsd", combine, eo.astype(jnp.float32))
+    return y.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD (state-space duality) — pure-jnp chunked reference
+# ---------------------------------------------------------------------------
+
+def init_mamba2(rng, cfg: ModelConfig, dtype) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    G, N = s.n_groups, s.d_state
+    conv_ch = di + 2 * G * N
+    ks = jax.random.split(rng, 5)
+    return {
+        # fused input projection: [z (di) | x (di) | B (G*N) | C (G*N) | dt (nh)]
+        "in_proj": _dense_init(ks[0], d, 2 * di + 2 * G * N + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": _dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None) -> tuple:
+    """Depthwise causal conv1d.  x: [B, S, C]; w: [W, C].  Returns (y, new
+    conv state = last W-1 inputs)."""
+    W = w.shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # [B, S+W-1, C]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    return jax.nn.silu(y), xp[:, -(W - 1):] if W > 1 else pad
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, D: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                use_kernel: bool = False) -> tuple:
+    """SSD (Mamba-2) sequence mixing.
+
+    x:  [B, S, H, P]   inputs per head
+    dt: [B, S, H]      softplus-ed step sizes
+    A:  [H]            negative decay rates
+    Bm: [B, S, G, N]   input->state projection  (G groups broadcast to H)
+    Cm: [B, S, G, N]   state->output projection
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+
+    Chunked algorithm (arXiv:2405.21060 §6): intra-chunk quadratic attention
+    with decay mask + inter-chunk state recurrence.  fp32 state math.
+    """
+    if use_kernel:
+        from ..kernels import ops as kops
+        return kops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk,
+                             init_state=init_state)
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    pad = (-S) % chunk
+    if pad:
+        # dt=0 on padded steps => exp(0·A)=1 decay and zero input: padding
+        # is state-neutral, so trimming y afterwards is exact
+        y, final = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))), A,
+            jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            D, chunk, init_state)
+        return y[:, :S], final
+    nc = S // chunk
+    rep = H // G
+
+    xf = x.astype(jnp.float32).reshape(B, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, chunk, H)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2) \
+        .reshape(B, nc, chunk, H, N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2) \
+        .reshape(B, nc, chunk, H, N)
+
+    dA = dtf * A[None, None, None, :]              # [B,nc,Q,H] (negative)
+    cum = jnp.cumsum(dA, axis=2)                   # inclusive cumsum
+    # decay from step j (exclusive) to step i (inclusive), i >= j.
+    # Mask the *exponent* (not the exp) so masked entries never produce
+    # inf forward / NaN backward.
+    Lmask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    decay = jnp.exp(jnp.where(Lmask, diff, -jnp.inf))       # [B,nc,Q,Q,H]
+
+    xdt = xf * dtf[..., None]                      # dt-weighted inputs
+    # intra-chunk: y[i] = sum_{j<=i} C_i·B_j decay(i,j) x_j dt_j
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Cf, Bf)  # [B,nc,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcijh,bcjhp->bcihp", cb, decay, xdt)
+
+    # chunk summary states: S_c = sum_j decay(end..j) B_j x_j dt_j
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)        # decay j -> chunk end
+    chunk_state = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", Bf, tail, xdt)
+
+    # inter-chunk recurrence over chunk states
+    total = jnp.exp(cum[:, :, -1, :])              # [B,nc,H] full-chunk decay
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((B, H, P, N), jnp.float32))
+
+    def step(carry, inp):
+        tot, cs = inp                              # [B,H], [B,H,P,N]
+        new = carry * tot[:, :, None, None] + cs
+        return new, carry                          # emit state *entering* chunk
+
+    total_t = jnp.moveaxis(total, 1, 0)            # [nc,B,H]
+    cs_t = jnp.moveaxis(chunk_state, 1, 0)         # [nc,B,H,P,N]
+    final, entering = jax.lax.scan(step, s0, (total_t, cs_t))
+    entering = jnp.moveaxis(entering, 0, 1)        # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y[i] += C_i · (decay(start..i) * state_in)
+    head = jnp.exp(cum)                            # decay start -> i
+    y_inter = jnp.einsum("bcihn,bcih,bchpn->bcihp", Cf, head, entering)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def mamba2_layer(p: Params, cfg: ModelConfig, x: jax.Array,
+                 use_kernel: bool = False) -> jax.Array:
+    """Full Mamba2 block (train/prefill): in_proj -> conv -> SSD -> gate ->
+    out_proj.  x: [B, S, d]."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh = s.d_inner(d), s.n_heads(d)
+    G, N = s.n_groups, s.d_state
+    B, S, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(
+        xin.reshape(B, S, nh, s.head_dim), dtv, A,
+        Bc.reshape(B, S, G, N), Cc.reshape(B, S, G, N), p["D"],
+        chunk=min(s.chunk, S), use_kernel=use_kernel)
+    y = y.reshape(B, S, di)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba2_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                  ssm_state: jax.Array, conv_state: jax.Array) -> tuple:
+    """Single-token recurrent step.  x: [B, 1, d];
+    ssm_state: [B, H, P, N]; conv_state: [B, W-1, conv_ch]."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh = s.d_inner(d), s.n_heads(d)
+    G, N = s.n_groups, s.d_state
+    B = x.shape[0]
+
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)    # [B, 1, C]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      state=conv_state)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dtv * A[None, :])                        # [B, nh]
+    xh = xin[:, 0].reshape(B, nh, s.head_dim).astype(jnp.float32)
+    rep = nh // G
+    Bh = jnp.repeat(Bc[:, 0].reshape(B, G, N), rep, 1).astype(jnp.float32)
+    Ch = jnp.repeat(Cc[:, 0].reshape(B, G, N), rep, 1).astype(jnp.float32)
+
+    upd = (dtv[..., None] * xh)[..., None] * Bh[:, :, None, :]  # [B,nh,P,N]
+    new_state = ssm_state.astype(jnp.float32) * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"], new_state.astype(ssm_state.dtype), new_conv
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 z_loss: float = 0.0) -> jax.Array:
+    """Token-mean cross entropy with optional z-loss, fp32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], -1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss

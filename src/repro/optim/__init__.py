@@ -1,0 +1,5 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, opt_state_specs,
+                    cosine_lr)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "opt_state_specs",
+           "cosine_lr"]

@@ -1,0 +1,3 @@
+from .engine import Request, ServeConfig, ServingEngine, serve_requests
+
+__all__ = ["Request", "ServeConfig", "ServingEngine", "serve_requests"]

@@ -1,0 +1,185 @@
+"""Serving engine: continuous batching built on TAPA channels.
+
+This subsystem uses the paper's two motivating APIs *as motivated*:
+
+* **Transactions (EoT)** — one request's prompt tokens form one transaction
+  on the request channel: the frontend writes the tokens then ``close()``s;
+  the scheduler drains ``for tok in stream`` until EoT.  Variable-length
+  prompts need no length header and no sentinel values inside the token
+  domain (paper Listing 2's exact argument).
+
+* **Peek** — the admission scheduler ``peek``s the request channel to see
+  the *next* request's id without consuming it, admitting it only if a
+  batch slot is free — the network-switch pattern from the paper's
+  introduction (forward based on content *and* availability, no manual
+  buffer-and-state-machine).
+
+The decode loop itself is a jit'd ``decode_step`` over a fixed batch of
+slots (continuous batching: finished slots are refilled without draining
+the batch).  The whole engine runs under the coroutine simulator for tests
+and examples; on a pod the same task graph drives the compiled step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import channel, task
+from ..core.engines import ENGINES
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list          # token ids
+    max_new: int = 8
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 4          # concurrent decode slots
+    max_seq: int = 128
+    eos_token: int = -1           # -1: only stop on max_new
+
+
+class ServingEngine:
+    """Continuous-batching engine over a (prefill_fn, decode_fn) pair.
+
+    ``prefill_fn(tokens[B,S]) -> (logits[B,V], cache)`` and
+    ``decode_fn(token[B], cache) -> (logits[B,V], cache)`` — typically the
+    jit'd model steps; tests may pass toy closures.
+    """
+
+    def __init__(self, scfg: ServeConfig, prefill_fn: Callable,
+                 decode_fn: Callable, pad_token: int = 0):
+        self.scfg = scfg
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.pad = pad_token
+
+    # -- task bodies ---------------------------------------------------------
+
+    def frontend(self, requests: list, req_out) -> None:
+        """Write each request as one EoT-delimited transaction:
+        [rid, max_new, tok0, tok1, ...] <EoT>."""
+        for r in requests:
+            req_out.write(("hdr", r.rid, r.max_new))
+            for t in r.prompt:
+                req_out.write(("tok", t))
+            req_out.close()
+        # final empty transaction marks shutdown
+        req_out.close()
+
+    def scheduler(self, req_in, out_chan) -> None:
+        """Admission + continuous batch decode."""
+        scfg = self.scfg
+        slots: list[Optional[dict]] = [None] * scfg.batch_slots
+        shutdown = False
+
+        while True:
+            # Admit: peek the head of the request stream; only consume when
+            # a slot is actually free (paper's switch pattern).
+            while not shutdown:
+                free = next((i for i, s in enumerate(slots) if s is None),
+                            None)
+                if free is None:
+                    break
+                ok, is_eot = req_in.try_eot()
+                if ok and is_eot:          # empty transaction = shutdown
+                    req_in.open()
+                    shutdown = True
+                    break
+                ok, head = req_in.try_peek()
+                if not ok:
+                    if any(s is not None for s in slots):
+                        break              # keep decoding while we wait
+                    # idle: block until something arrives
+                    if req_in.eot():
+                        req_in.open()
+                        shutdown = True
+                        break
+                    head = req_in.peek()
+                # consume one whole transaction
+                kind, rid, max_new = req_in.read()
+                assert kind == "hdr"
+                prompt = [t for (_, t) in iter(req_in)]
+                slots[free] = {"rid": rid, "prompt": prompt,
+                               "max_new": max_new, "new": []}
+
+            live = [s for s in slots if s is not None]
+            if not live:
+                if shutdown:
+                    break
+                continue
+
+            self._step_batch(slots)
+
+            # retire finished slots (emit one transaction per request)
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                done = len(s["new"]) >= s["max_new"] or (
+                    self.scfg.eos_token >= 0 and s["new"]
+                    and s["new"][-1] == self.scfg.eos_token)
+                if done:
+                    out_chan.write(("hdr", s["rid"]))
+                    for t in s["new"]:
+                        out_chan.write(("tok", int(t)))
+                    out_chan.close()
+                    slots[i] = None
+        out_chan.close()                   # shutdown transaction
+
+    def _step_batch(self, slots: list) -> None:
+        """One prefill-or-decode step over the packed batch."""
+        # prefill any slot that has no cache yet (one at a time keeps the
+        # toy engine simple; batched prefill is a straightforward extension)
+        for s in slots:
+            if s is not None and "cache" not in s:
+                toks = np.asarray(s["prompt"], np.int32)[None, :]
+                logits, cache = self.prefill_fn(toks)
+                s["cache"] = cache
+                s["next"] = int(np.argmax(np.asarray(logits)[0]))
+                s["new"].append(s["next"])
+        # decode all live slots (packed batch; a production engine packs
+        # caches — here each slot decodes its own cache)
+        for s in slots:
+            if s is None or len(s["new"]) >= s["max_new"]:
+                continue
+            tok = np.asarray([s["next"]], np.int32)
+            logits, s["cache"] = self.decode_fn(tok, s["cache"])
+            s["next"] = int(np.argmax(np.asarray(logits)[0]))
+            s["new"].append(s["next"])
+
+    def collector(self, out_in, results: dict) -> None:
+        while True:
+            if out_in.eot():               # shutdown transaction
+                out_in.open()
+                break
+            kind, rid = out_in.read()
+            assert kind == "hdr"
+            results[rid] = [t for (_, t) in iter(out_in)]
+
+    # -- top ------------------------------------------------------------------
+
+    def top(self, requests: list, results: dict) -> None:
+        req = channel(capacity=16, name="requests")
+        out = channel(capacity=16, name="outputs")
+        task() \
+            .invoke(self.frontend, requests, req) \
+            .invoke(self.scheduler, req, out) \
+            .invoke(self.collector, out, results)
+
+
+def serve_requests(engine: ServingEngine, requests: list,
+                   sim_engine: str = "coroutine") -> dict:
+    """One-call host API for serving (paper Section 3.1.4)."""
+    results: dict = {}
+    rep = ENGINES[sim_engine]().run(engine.top, requests, results)
+    if not rep.ok:
+        raise RuntimeError(f"serving failed: {rep.error}")
+    return results

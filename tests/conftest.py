@@ -1,0 +1,12 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real single CPU device; multi-device tests spawn
+subprocesses that set --xla_force_host_platform_device_count themselves.
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed():
+    np.random.seed(0)

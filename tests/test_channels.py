@@ -1,0 +1,251 @@
+"""Channel semantics: the full Table-2 API, EoT protocol, graph rules."""
+
+import pytest
+
+import repro
+from repro.core.errors import (ChannelMisuse, Deadlock, EndOfTransaction,
+                               GraphValidationError)
+
+
+def run_pair(producer, consumer, capacity=2, engine="coroutine"):
+    out = []
+
+    def Top(sink):
+        ch = repro.channel(capacity=capacity)
+        repro.task().invoke(producer, ch).invoke(consumer, ch, sink)
+
+    rep = repro.run(Top, out, engine=engine)
+    return rep, out
+
+
+class TestBasics:
+    def test_fifo_order(self):
+        def P(o):
+            for i in range(10):
+                o.write(i)
+            o.close()
+
+        def C(i, sink):
+            for v in i:
+                sink.append(v)
+
+        rep, out = run_pair(P, C)
+        assert rep.ok and out == list(range(10))
+
+    def test_capacity_respected_in_sim(self):
+        seen = []
+
+        def P(o):
+            for i in range(8):
+                o.write(i)
+                seen.append(o.channel.size())
+            o.close()
+
+        def C(i, sink):
+            for v in i:
+                sink.append(v)
+
+        rep, out = run_pair(P, C, capacity=3)
+        assert rep.ok and max(seen) <= 3
+
+    def test_peek_does_not_consume(self):
+        def P(o):
+            o.write(42)
+            o.close()
+
+        def C(i, sink):
+            sink.append(i.peek())
+            sink.append(i.peek())
+            sink.append(i.read())
+            i.open()
+
+        rep, out = run_pair(P, C)
+        assert rep.ok and out == [42, 42, 42]
+
+    def test_try_ops_when_empty(self):
+        def P(o):
+            o.close()
+
+        def C(i, sink):
+            ok, v = i.try_read()
+            sink.append((ok, v))
+            ok, v = i.try_peek()
+            sink.append((ok, v))
+            i.open()
+
+        rep, out = run_pair(P, C)
+        assert rep.ok and out == [(False, None), (False, None)]
+
+    def test_eot_read_raises(self):
+        def P(o):
+            o.close()
+
+        def C(i, sink):
+            with pytest.raises(EndOfTransaction):
+                i.read()
+            i.open()
+
+        rep, _ = run_pair(P, C)
+        assert rep.ok
+
+    def test_multiple_transactions(self):
+        def P(o):
+            for t in range(3):
+                for i in range(t + 1):
+                    o.write((t, i))
+                o.close()
+
+        def C(i, sink):
+            for t in range(3):
+                sink.append([v for v in i])
+
+        rep, out = run_pair(P, C)
+        assert rep.ok
+        assert out == [[(0, 0)], [(1, 0), (1, 1)], [(2, 0), (2, 1), (2, 2)]]
+
+
+class TestGraphRules:
+    def test_two_producers_rejected(self):
+        def W(o: repro.OStream):
+            o.write(1)
+
+        def R(i: repro.IStream, sink):
+            sink.append(i.read())
+
+        def Top(sink):
+            ch = repro.channel()
+            repro.task().invoke(W, ch).invoke(W, ch).invoke(R, ch, sink)
+
+        rep = repro.run(Top, [], engine="coroutine")
+        assert not rep.ok and "producer" in rep.error
+
+    def test_same_task_both_sides_rejected(self):
+        def Loop(ch, sink):
+            ch.write(1)
+            sink.append(ch.read())
+
+        def Top(sink):
+            ch = repro.channel()
+            repro.task().invoke(Loop, ch, sink)
+
+        rep = repro.run(Top, [], engine="coroutine")
+        assert not rep.ok
+
+    def test_elaborate_extracts_metadata(self):
+        def P(o: repro.OStream, n):
+            for i in range(n):
+                o.write(i)
+            o.close()
+
+        def C(i: repro.IStream, sink):
+            for v in i:
+                sink.append(v)
+
+        def Top(sink):
+            t = repro.task()
+            for _ in range(3):
+                ch = repro.channel(capacity=4)
+                t = t.invoke(P, ch, 5).invoke(C, ch, sink)
+
+        g = repro.elaborate(Top, [])
+        assert g.n_tasks == 3            # Top, P, C definitions
+        assert g.n_instances == 7        # 1 + 3 + 3
+        assert g.n_channels == 3
+        assert g.dedup_factor() == pytest.approx(7 / 3)
+        dot = g.to_dot()
+        assert "digraph" in dot and "->" in dot
+
+
+class TestDeadlockDetection:
+    def test_simple_deadlock_detected(self):
+        def A(i: repro.IStream, o: repro.OStream):
+            v = i.read()                 # waits forever
+            o.write(v)
+
+        def B(i: repro.IStream, o: repro.OStream):
+            v = i.read()
+            o.write(v)
+
+        def Top():
+            c1 = repro.channel()
+            c2 = repro.channel()
+            repro.task().invoke(A, c1, c2).invoke(B, c2, c1)
+
+        for eng in ("coroutine", "thread"):
+            rep = repro.run(Top, engine=eng)
+            assert not rep.ok, eng
+            assert "deadlock" in rep.error.lower() or "blocked" in rep.error
+
+    def test_starved_consumer_detected(self):
+        def P(o):
+            o.write(1)                   # never closes
+
+        def C(i, sink):
+            sink.append(i.read())
+            sink.append(i.read())        # second read starves
+
+        rep, out = run_pair(P, C)
+        assert not rep.ok and out == [1]
+
+
+class TestSelect:
+    def test_select_returns_on_any(self):
+        def P1(o: repro.OStream):
+            o.write("a")
+            o.close()
+
+        def P2(o: repro.OStream):
+            o.write("b")
+            o.close()
+
+        def C(i1: repro.IStream, i2: repro.IStream, sink):
+            done = [False, False]
+            ins = [i1, i2]
+            while not all(done):
+                moved = False
+                for s in (0, 1):
+                    if done[s]:
+                        continue
+                    ok, eot = ins[s].try_eot()
+                    if ok and eot:
+                        ins[s].open()
+                        done[s] = True
+                        moved = True
+                        continue
+                    ok, v = ins[s].try_read()
+                    if ok:
+                        sink.append(v)
+                        moved = True
+                if not moved and not all(done):
+                    repro.select(*(ins[s] for s in (0, 1) if not done[s]))
+
+        def Top(sink):
+            c1 = repro.channel()
+            c2 = repro.channel()
+            repro.task().invoke(P1, c1).invoke(P2, c2).invoke(C, c1, c2, sink)
+
+        for eng in ("coroutine", "thread"):
+            rep = repro.run(Top, [], engine=eng)
+            assert rep.ok
+
+    def test_detached_task_torn_down(self):
+        def Server(i: repro.IStream, o: repro.OStream):
+            while True:                  # infinite server
+                o.write(i.read() * 2)
+
+        def Client(o: repro.OStream, i: repro.IStream, sink):
+            for x in range(5):
+                o.write(x)
+                sink.append(i.read())
+
+        def Top(sink):
+            req = repro.channel()
+            resp = repro.channel()
+            repro.task() \
+                .invoke(Server, req, resp, detach=True) \
+                .invoke(Client, req, resp, sink)
+
+        for eng in ("coroutine", "thread"):
+            sink = []
+            rep = repro.run(Top, sink, engine=eng)
+            assert rep.ok and sink == [0, 2, 4, 6, 8], eng

@@ -1,0 +1,231 @@
+"""Pallas kernel validation: shape/dtype sweeps against the ref.py oracles
+(interpret=True executes the kernel bodies in Python on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, Sq, Sk, nh, nkv, hd, causal, window, dtype
+    (2, 128, 128, 4, 2, 64, True, None, jnp.float32),
+    (1, 256, 256, 8, 8, 32, True, None, jnp.float32),
+    (2, 128, 128, 4, 1, 64, False, None, jnp.float32),
+    (1, 256, 256, 4, 2, 64, True, 96, jnp.float32),
+    (1, 128, 128, 6, 2, 128, True, None, jnp.float32),
+    (2, 128, 128, 4, 2, 64, True, None, jnp.bfloat16),
+    (1, 384, 384, 2, 2, 64, True, 128, jnp.float32),
+]
+
+
+@pytest.mark.parametrize(
+    "B,Sq,Sk,nh,nkv,hd,causal,window,dtype", FLASH_CASES)
+def test_flash_attention_vs_ref(B, Sq, Sk, nh, nkv, hd, causal, window,
+                                dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (B, Sq, nh, hd), dtype)
+    k = rand(ks[1], (B, Sk, nkv, hd), dtype)
+    v = rand(ks[2], (B, Sk, nkv, hd), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_flash_attention_grad_matches_ref():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = rand(ks[0], (1, 128, 4, 32))
+    k = rand(ks[1], (1, 128, 2, 32))
+    v = rand(ks[2], (1, 128, 2, 32))
+
+    def f_k(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v) ** 2)
+
+    def f_r(q, k, v):
+        return jnp.sum(ref.flash_attention_ref(q, k, v) ** 2)
+
+    g1 = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_flash_attention_odd_shape_falls_back():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = rand(ks[0], (1, 100, 4, 64))          # 100 not a block multiple
+    k = rand(ks[1], (1, 100, 2, 64))
+    v = rand(ks[2], (1, 100, 2, 64))
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 4, 2, 64, 512, 100, jnp.float32),
+    (1, 8, 1, 32, 256, 256, jnp.float32),
+    (3, 6, 2, 64, 512, 1, jnp.float32),
+    (2, 8, 4, 64, 512, 300, jnp.bfloat16),
+    (1, 16, 2, 128, 1024, 777, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("B,nh,nkv,hd,Smax,kvlen,dtype", DECODE_CASES)
+def test_decode_attention_vs_ref(B, nh, nkv, hd, Smax, kvlen, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(ks[0], (B, nh, hd), dtype)
+    k = rand(ks[1], (B, Smax, nkv, hd), dtype)
+    v = rand(ks[2], (B, Smax, nkv, hd), dtype)
+    got = ops.decode_attention(q, k, v, jnp.asarray(kvlen))
+    want = ref.decode_attention_ref(q, k, v, jnp.asarray(kvlen))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_decode_attention_per_batch_lengths():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    B, Smax = 3, 256
+    q = rand(ks[0], (B, 4, 64))
+    k = rand(ks[1], (B, Smax, 2, 64))
+    v = rand(ks[2], (B, Smax, 2, 64))
+    lens = jnp.asarray([1, 100, 256], jnp.int32)
+    got = ops.decode_attention(q, k, v, lens)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # B, S, H, P, G, N, chunk, dtype
+    (2, 128, 4, 16, 2, 32, 32, jnp.float32),
+    (1, 64, 2, 64, 1, 128, 16, jnp.float32),
+    (2, 100, 4, 16, 2, 32, 32, jnp.float32),   # pad path (100 % 32 != 0)
+    (1, 128, 4, 64, 1, 64, 64, jnp.bfloat16),
+    (1, 256, 8, 32, 4, 32, 128, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk,dtype", SSD_CASES)
+def test_ssd_scan_vs_ref(B, S, H, P, G, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = rand(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(rand(ks[1], (B, S, H)))
+    A = -jnp.exp(rand(ks[2], (H,), scale=0.5))
+    Bm = rand(ks[3], (B, S, G, N), dtype, scale=0.3)
+    Cm = rand(ks[4], (B, S, G, N), dtype, scale=0.3)
+    D = jnp.ones((H,))
+    y1, s1 = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk)
+    y2, s2 = ref.ssd_scan_ref(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32),
+                               atol=max(tol(dtype), 1e-3), rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=1e-3, rtol=1e-2)
+
+
+def test_ssd_scan_init_state_chaining():
+    """Processing [x1; x2] at once == processing x1 then x2 with the carried
+    state (the chunked-prefill invariant)."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    B, S, H, P, G, N = 1, 64, 2, 16, 1, 32
+    x = rand(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(rand(ks[1], (B, S, H)))
+    A = -jnp.exp(rand(ks[2], (H,), scale=0.5))
+    Bm = rand(ks[3], (B, S, G, N), scale=0.3)
+    Cm = rand(ks[4], (B, S, G, N), scale=0.3)
+    D = jnp.zeros((H,))
+    y_all, s_all = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=16)
+    half = S // 2
+    y1, s1 = ops.ssd_scan(x[:, :half], dt[:, :half], A, Bm[:, :half],
+                          Cm[:, :half], D, chunk=16)
+    y2, s2 = ops.ssd_scan(x[:, half:], dt[:, half:], A, Bm[:, half:],
+                          Cm[:, half:], D, chunk=16, init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_all), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_all),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ssd_scan_grads_vs_ref():
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    B, S, H, P, G, N = 1, 64, 2, 16, 1, 32
+    x = rand(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(rand(ks[1], (B, S, H)))
+    A = -jnp.exp(rand(ks[2], (H,), scale=0.5))
+    Bm = rand(ks[3], (B, S, G, N), scale=0.3)
+    Cm = rand(ks[4], (B, S, G, N), scale=0.3)
+    D = jnp.ones((H,))
+
+    def f_k(*a):
+        return jnp.sum(ops.ssd_scan(*a, chunk=16)[0] ** 2)
+
+    def f_r(*a):
+        return jnp.sum(ref.ssd_scan_ref(*a)[0] ** 2)
+
+    g1 = jax.grad(f_k, argnums=(0, 1, 2, 3, 4))(x, dt, A, Bm, Cm, D)
+    g2 = jax.grad(f_r, argnums=(0, 1, 2, 3, 4))(x, dt, A, Bm, Cm, D)
+    for a, b in zip(g1, g2):
+        scale = max(1.0, float(jnp.max(jnp.abs(b))))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-3 * scale)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps (random small shapes)
+# ---------------------------------------------------------------------------
+
+@given(b=st.integers(1, 2), sq=st.sampled_from([128, 256]),
+       nkv=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2, 3]),
+       hd=st.sampled_from([16, 32, 64]), causal=st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(b, sq, nkv, g, hd, causal):
+    nh = nkv * g
+    ks = jax.random.split(jax.random.PRNGKey(hash((b, sq, nh)) % 2**31), 3)
+    q = rand(ks[0], (b, sq, nh, hd))
+    k = rand(ks[1], (b, sq, nkv, hd))
+    v = rand(ks[2], (b, sq, nkv, hd))
+    got = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+@given(s=st.sampled_from([32, 64, 96]), h=st.sampled_from([1, 2, 4]),
+       p=st.sampled_from([8, 16]), n=st.sampled_from([16, 32]),
+       chunk=st.sampled_from([16, 32]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_scan_property(s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(hash((s, h, p, n)) % 2**31), 5)
+    x = rand(ks[0], (1, s, h, p))
+    dt = jax.nn.softplus(rand(ks[1], (1, s, h)))
+    A = -jnp.exp(rand(ks[2], (h,), scale=0.5))
+    Bm = rand(ks[3], (1, s, 1, n), scale=0.3)
+    Cm = rand(ks[4], (1, s, 1, n), scale=0.3)
+    D = jnp.ones((h,))
+    y1, s1 = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk)
+    y2, s2 = ref.ssd_scan_ref(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-3, rtol=1e-2)

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward
+and one train step on CPU, asserting output shapes and no NaNs; plus
+prefill/decode consistency (the serving path must agree with the training
+forward token-by-token)."""
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _inputs(cfg, B=2, S=32):
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    extra = {}
+    if cfg.vlm is not None:
+        extra["patches"] = jnp.zeros(
+            (B, cfg.vlm.n_patches, cfg.vlm.d_patch), jnp.bfloat16)
+    if cfg.encdec is not None:
+        extra["frames"] = jnp.zeros(
+            (B, cfg.encdec.n_audio_ctx, cfg.d_model), jnp.bfloat16)
+    return toks, extra
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = get_config(arch).with_reduced()
+    params = lm.init_params(cfg, jax.random.key(0))
+    toks, extra = _inputs(cfg)
+    logits, aux = lm.forward(params, cfg, toks, extra=extra)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step_decreases_nothing_nan(arch):
+    cfg = get_config(arch).with_reduced()
+    params = lm.init_params(cfg, jax.random.key(0))
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = adamw_init(params, opt)
+    toks, extra = _inputs(cfg)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1), **extra}
+
+    @jax.jit
+    def step(p, s, b):
+        loss, g = jax.value_and_grad(lm.loss_fn)(p, cfg, b)
+        p2, s2, m = adamw_update(g, s, p, opt)
+        return p2, s2, loss
+
+    p, s, loss0 = step(params, state, batch)
+    for _ in range(3):
+        p, s, loss = step(p, s, batch)
+    assert np.isfinite(float(loss0)) and np.isfinite(float(loss))
+    assert float(loss) < float(loss0)        # same-batch overfit must drop
+
+
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "granite_moe_1b_a400m",
+                                  "mamba2_130m", "zamba2_1_2b",
+                                  "whisper_small", "phi_3_vision_4_2b"])
+def test_prefill_decode_matches_forward(arch):
+    """Greedy continuation computed by (prefill + decode_step) must match
+    the full-sequence forward pass logits at every position."""
+    cfg = get_config(arch).with_reduced()
+    params = lm.init_params(cfg, jax.random.key(0))
+    B, S, S_max = 2, 16, 32
+    toks, extra = _inputs(cfg, B, S)
+
+    last_logits, cache = lm.prefill(params, cfg, toks, extra=extra,
+                                    max_seq=S_max)
+    # decode 4 tokens greedily
+    decoded = [jnp.argmax(last_logits, -1).astype(jnp.int32)]
+    for _ in range(3):
+        lg, cache = lm.decode_step(params, cfg, decoded[-1], cache)
+        decoded.append(jnp.argmax(lg, -1).astype(jnp.int32))
+
+    # reference: run forward on the growing sequence each time
+    seq = toks
+    for t in range(4):
+        logits, _ = lm.forward(params, cfg, seq, extra=extra)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(nxt),
+                                      np.asarray(decoded[t]),
+                                      err_msg=f"token {t}")
+        seq = jnp.concatenate([seq, nxt[:, None]], axis=1)
+
+
+def test_hybrid_shared_attention_weights_are_shared():
+    """zamba2's shared block: ONE parameter set, many applications — the
+    paper's one-definition/many-instances pattern with shared weights."""
+    cfg = get_config("zamba2_1_2b").with_reduced(n_layers=4)
+    params = lm.init_params(cfg, jax.random.key(0))
+    flat = jax.tree_util.tree_leaves_with_path(params)
+    shared = [p for p, _ in flat if "shared_attn" in str(p)]
+    assert shared, "hybrid model must carry a shared attention block"
+    # exactly one copy (no leading layer axis on shared leaves)
+    for path, leaf in flat:
+        if "shared_attn" in str(path) and "wq" in str(path):
+            assert leaf.ndim == 2
+
+
+def test_param_count_analytic_matches_actual():
+    for arch in ("qwen3_0_6b", "yi_6b", "mamba2_130m",
+                 "granite_moe_1b_a400m"):
+        cfg = get_config(arch).with_reduced()
+        params = lm.init_params(cfg, jax.random.key(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        assert actual == pytest.approx(cfg.param_count(), rel=0.05), arch
+
+
+def test_moe_aux_loss_and_capacity():
+    cfg = get_config("granite_moe_1b_a400m").with_reduced()
+    params = lm.init_params(cfg, jax.random.key(0))
+    toks, _ = _inputs(cfg)
+    _, aux = lm.forward(params, cfg, toks)
+    assert float(aux) > 0.0                  # load-balance loss active
+
+
+def test_use_kernel_matches_xla_path():
+    """use_kernel=True (Pallas flash attention + SSD) must agree with the
+    pure-XLA path."""
+    for arch in ("qwen3_0_6b", "mamba2_130m"):
+        cfg = get_config(arch).with_reduced(
+            n_layers=2, max_seq_len=512)
+        params = lm.init_params(cfg, jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (1, 128), 0, cfg.vocab)
+        l1, _ = lm.forward(params, cfg, toks, use_kernel=False)
+        l2, _ = lm.forward(params, cfg, toks, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(l1, np.float32),
+                                   np.asarray(l2, np.float32),
+                                   atol=5e-2, rtol=5e-2)
