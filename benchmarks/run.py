@@ -86,14 +86,17 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="also (re)compute the roofline sweep (slow)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: shrink the simulation/throughput sizes")
     args = ap.parse_args(argv)
 
     from benchmarks import codegen_time, loc, sim_time
 
     section("Fig. 5/6 — lines of code (with vs without TAPA APIs)")
     loc.main()
-    section("Fig. 7 — software simulation time (3 engines x 7 benchmarks)")
-    sim_time.main()
+    section("Fig. 7 + throughput — software simulation (3 engines) and "
+            "burst tokens/sec (emits BENCH_sim_time.json)")
+    sim_res = sim_time.main(["--quick"] if args.quick else [])
     section("Fig. 8 — code generation: hierarchical vs monolithic")
     codegen_time.main()
     if args.full:
@@ -106,7 +109,8 @@ def main(argv=None) -> int:
     roofline_summary()
     section("S:Perf — hillclimb log (3 cells)")
     perf_summary()
-    return 0
+    # propagate the sim_time regression gate through the umbrella runner
+    return 1 if sim_res.get("throughput_regression") else 0
 
 
 if __name__ == "__main__":

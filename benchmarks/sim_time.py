@@ -1,4 +1,5 @@
-"""Fig. 7 reproduction: software-simulation time per engine per benchmark.
+"""Fig. 7 reproduction: software-simulation time per engine per benchmark,
+plus a tokens/sec channel-throughput benchmark for the burst API.
 
 Paper claims validated here:
   * the sequential simulator FAILS on cannon and page_rank (feedback);
@@ -8,19 +9,36 @@ Paper claims validated here:
     with task count because thread scheduling costs OS context switches
     where the coroutine engine pays a user-level handoff).
 
+Throughput section (this repo's extension): a deep Source -> N x Relay ->
+Sink pipeline moves a fixed token volume under three channel-I/O variants:
+
+  seed_scalar   per-token runtime dispatch with per-token stats — the seed
+                implementation's hot path (``track_stats=True``);
+  scalar_fast   per-token ops on the lock-free run-to-block fast path;
+  burst         ``write_burst``/``read_burst`` batched transfers.
+
+Results (engine, variant, tokens/sec, switches, wall) are persisted to
+``BENCH_sim_time.json`` at the repo root so the perf trajectory
+accumulates across PRs.  The acceptance bar: coroutine burst must be
+>= 3x coroutine seed_scalar tokens/sec on the >= 8-stage pipeline.
+
 Sizes are scaled so the full suite simulates in seconds; ``--paper-scale``
-raises instance counts to the paper's Table 3 neighbourhood.
+raises instance counts to the paper's Table 3 neighbourhood; ``--quick``
+shrinks everything for CI smoke runs.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import time
 from pathlib import Path
 
+import repro
 from repro.apps import APPS, FEEDBACK_APPS
 
 OUT = Path(__file__).parent / "out"
+BENCH_JSON = Path(__file__).parent.parent / "BENCH_sim_time.json"
 
 # per-app size overrides: (fast, paper-ish)
 SIZES = {
@@ -82,22 +100,202 @@ def run(paper_scale: bool = False, repeats: int = 3) -> dict:
                            "includes compile+run)"}
 
 
-def main() -> dict:
-    out = run()
-    OUT.mkdir(exist_ok=True)
-    (OUT / "sim_time.json").write_text(json.dumps(out, indent=1))
-    print(f"{'app':<10} {'insts':>5} {'chans':>5} "
-          f"{'seq_ms':>8} {'thread_ms':>9} {'coro_ms':>8} {'coro/thr':>8}")
-    for r in out["rows"]:
-        seq = r["sequential"]
-        fmt = lambda e: f"{e['wall_s']*1e3:8.1f}" if e["ok"] else "    FAIL"
-        print(f"{r['app']:<10} {r['instances']:>5} {r['channels']:>5} "
-              f"{fmt(seq)} {fmt(r['thread']):>9} {fmt(r['coroutine']):>8} "
-              f"{r.get('coroutine_speedup_vs_thread', '-'):>8}")
-    print(f"coroutine vs thread geomean speedup: "
-          f"{out['coroutine_vs_thread_geomean']}x")
+# ---------------------------------------------------------------------------
+# tokens/sec throughput: deep pipeline, scalar vs burst channel I/O
+# ---------------------------------------------------------------------------
+
+def _build_pipeline(n_tokens: int, stages: int, capacity: int, burst: int):
+    """Source -> ``stages`` x Relay -> Sink moving ``n_tokens`` integers.
+
+    ``burst`` == 0 selects the scalar (per-token) API; > 0 moves tokens in
+    bursts of that size.  Returns (Top, sink_total) where sink_total[0]
+    counts tokens that reached the sink (correctness check).
+    """
+    sink_total = [0]
+    if burst:
+        def Source(o):
+            o.write_burst(list(range(n_tokens)))
+            o.close()
+
+        def Relay(i, o):
+            while True:
+                chunk = i.read_burst(burst)
+                if chunk:
+                    o.write_burst(chunk)
+                if len(chunk) < burst:
+                    break
+            i.open()
+            o.close()
+
+        def Sink(i):
+            while True:
+                chunk = i.read_burst(burst)
+                sink_total[0] += len(chunk)
+                if len(chunk) < burst:
+                    break
+            i.open()
+    else:
+        def Source(o):
+            for v in range(n_tokens):
+                o.write(v)
+            o.close()
+
+        def Relay(i, o):
+            for v in i:
+                o.write(v)
+            o.close()
+
+        def Sink(i):
+            for _ in i:
+                sink_total[0] += 1
+
+    def Top():
+        chans = [repro.channel(capacity=capacity) for _ in range(stages + 1)]
+        t = repro.task().invoke(Source, chans[0])
+        for s in range(stages):
+            t = t.invoke(Relay, chans[s], chans[s + 1], name=f"Relay{s}")
+        t.invoke(Sink, chans[stages])
+
+    return Top, sink_total
+
+
+# (variant label, burst?, track_stats?) — seed_scalar reproduces the seed
+# implementation's per-token dispatch + per-token stats hot path.
+VARIANTS = (
+    ("seed_scalar", 0, True),
+    ("scalar_fast", 0, False),
+    ("burst", 1, False),
+)
+
+
+def throughput(n_tokens: int = 20000, stages: int = 8, capacity: int = 64,
+               burst: int = 64, repeats: int = 3,
+               engines: tuple = ("sequential", "thread", "coroutine")) -> dict:
+    """Measure tokens/sec per (engine, variant) on the deep pipeline.
+
+    tokens/sec counts every channel hop: ``n_tokens * (stages + 1)``
+    transfers divided by the best wall time over ``repeats`` runs.
+    """
+    hops = n_tokens * (stages + 1)
+    rows = []
+    for eng in engines:
+        for label, use_burst, stats in VARIANTS:
+            best = None
+            switches = None
+            for _ in range(repeats):
+                top, total = _build_pipeline(
+                    n_tokens, stages, capacity, burst if use_burst else 0)
+                rep = repro.ENGINES[eng](track_stats=stats).run(top)
+                assert rep.ok, (eng, label, rep.error)
+                assert total[0] == n_tokens, (eng, label, total[0])
+                if best is None or rep.wall_s < best:
+                    best = rep.wall_s
+                    switches = rep.switches
+            rows.append({
+                "engine": eng, "variant": label,
+                "tokens_per_sec": round(hops / best, 1),
+                "switches": switches, "wall_s": round(best, 6),
+                "tokens_moved": hops,
+            })
+
+    def tps(engine, variant):
+        for r in rows:
+            if r["engine"] == engine and r["variant"] == variant:
+                return r["tokens_per_sec"]
+        return None
+
+    out = {
+        "config": {"n_tokens": n_tokens, "stages": stages,
+                   "capacity": capacity, "burst": burst,
+                   "repeats": repeats},
+        "rows": rows,
+    }
+    coro_seed = tps("coroutine", "seed_scalar")
+    coro_burst = tps("coroutine", "burst")
+    thr_scalar = tps("thread", "seed_scalar")
+    if coro_seed and coro_burst:
+        out["coroutine_burst_speedup_vs_seed"] = round(
+            coro_burst / coro_seed, 2)
+    if thr_scalar and coro_burst:
+        out["coroutine_burst_speedup_vs_thread_seed"] = round(
+            coro_burst / thr_scalar, 2)
+    return out
+
+
+def write_bench_json(thr: dict) -> None:
+    """Persist the perf trajectory record (consumed by benchmarks/run.py
+    and CI regression checks)."""
+    BENCH_JSON.write_text(json.dumps(thr, indent=1) + "\n")
+
+
+def print_throughput(thr: dict) -> None:
+    cfg = thr["config"]
+    print(f"pipeline: {cfg['stages']} stages x {cfg['n_tokens']} tokens, "
+          f"capacity={cfg['capacity']}, burst={cfg['burst']}")
+    print(f"{'engine':<11} {'variant':<12} {'tokens/s':>12} "
+          f"{'switches':>9} {'wall_ms':>9}")
+    for r in thr["rows"]:
+        print(f"{r['engine']:<11} {r['variant']:<12} "
+              f"{r['tokens_per_sec']:>12.0f} {r['switches']:>9} "
+              f"{r['wall_s']*1e3:>9.1f}")
+    if "coroutine_burst_speedup_vs_seed" in thr:
+        print(f"coroutine burst vs seed per-token path: "
+              f"{thr['coroutine_burst_speedup_vs_seed']}x "
+              f"(acceptance bar: >= 3x)")
+    if "coroutine_burst_speedup_vs_thread_seed" in thr:
+        print(f"coroutine burst vs thread seed path:    "
+              f"{thr['coroutine_burst_speedup_vs_thread_seed']}x")
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny sizes, single repeat")
+    ap.add_argument("--paper-scale", action="store_true",
+                    help="raise app sizes to the paper's Table 3 "
+                         "neighbourhood")
+    ap.add_argument("--skip-apps", action="store_true",
+                    help="only run the throughput section")
+    args = ap.parse_args(argv)
+
+    out: dict = {}
+    if not args.skip_apps:
+        out = run(paper_scale=args.paper_scale,
+                  repeats=1 if args.quick else 3)
+        OUT.mkdir(exist_ok=True)
+        (OUT / "sim_time.json").write_text(json.dumps(out, indent=1))
+        print(f"{'app':<10} {'insts':>5} {'chans':>5} "
+              f"{'seq_ms':>8} {'thread_ms':>9} {'coro_ms':>8} {'coro/thr':>8}")
+        for r in out["rows"]:
+            seq = r["sequential"]
+            fmt = lambda e: f"{e['wall_s']*1e3:8.1f}" if e["ok"] else "    FAIL"
+            print(f"{r['app']:<10} {r['instances']:>5} {r['channels']:>5} "
+                  f"{fmt(seq)} {fmt(r['thread']):>9} {fmt(r['coroutine']):>8} "
+                  f"{r.get('coroutine_speedup_vs_thread', '-'):>8}")
+        print(f"coroutine vs thread geomean speedup: "
+              f"{out['coroutine_vs_thread_geomean']}x")
+
+    print()
+    if args.quick:
+        thr = throughput(n_tokens=4000, stages=8, repeats=1)
+    else:
+        thr = throughput()
+    print_throughput(thr)
+    write_bench_json(thr)
+    print(f"wrote {BENCH_JSON}")
+    out["throughput"] = thr
+
+    # regression gate: the burst path must stay comfortably ahead of the
+    # seed per-token path (quick mode uses a lower bar for CI-host noise)
+    bar = 2.0 if args.quick else 3.0
+    speedup = thr.get("coroutine_burst_speedup_vs_seed", 0.0)
+    if speedup < bar:
+        print(f"THROUGHPUT REGRESSION: coroutine burst speedup {speedup}x "
+              f"< required {bar}x")
+        out["throughput_regression"] = True
     return out
 
 
 if __name__ == "__main__":
-    main()
+    res = main()
+    raise SystemExit(1 if res.get("throughput_regression") else 0)

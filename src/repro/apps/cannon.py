@@ -14,6 +14,15 @@ has 88 instances and 320 channels — same shape, same task definitions.
 
     PE(i,j) round r multiplies A(i, (i+j+r) mod P) x B((i+j+r) mod P, j)
     and forwards A left / B up; after P rounds C(i,j) is complete.
+
+Burst note: cannon is the anti-burst benchmark.  Every rotation token is
+data-dependent on the previous round (the block a PE forwards is the block
+it just received), so the rings are inherently one-token-deep and the
+burst channel API cannot batch them — unlike gemm/gaussian whose DAG
+pipelines burst freely.  Cannon still benefits from the coroutine engine's
+run-to-block fast path (rotation pushes/pops on non-full/non-empty rings
+skip engine dispatch), which is exactly the per-token overhead the paper's
+collaborative scheduling minimizes.
 """
 
 from __future__ import annotations

@@ -40,8 +40,9 @@ def build(h: int = 12, w: int = 12, iters: int = 4, lanes: int = 1,
     result = np.zeros_like(img)
 
     def Source(out):
-        for px in img.reshape(-1):
-            out.write(float(px))
+        # one burst per image row: the line buffers downstream consume in
+        # row-sized chunks anyway, so this is the natural transfer unit
+        out.write_burst([float(px) for px in img.reshape(-1)])
         out.close()
 
     def Stencil(inp, out):
@@ -49,8 +50,12 @@ def build(h: int = 12, w: int = 12, iters: int = 4, lanes: int = 1,
 
         A centre pixel's window completes when its south-east neighbour
         (linear index centre + w + 1) arrives, so the stage emits with a
-        fixed latency of w+2 pixels — the SODA reuse-buffer schedule."""
+        fixed latency of w+2 pixels — the SODA reuse-buffer schedule.
+        Pixels move in row-sized bursts; emitted pixels are staged in a
+        local list and flushed with one ``write_burst`` per input burst.
+        """
         buf: list[float] = []
+        pending: list[float] = []
 
         def emit(cy: int) -> None:
             y, x = divmod(cy, w)
@@ -61,21 +66,31 @@ def build(h: int = 12, w: int = 12, iters: int = 4, lanes: int = 1,
                        K[1, 2] * buf[cy+1] +
                        K[2, 0] * buf[cy+w-1] + K[2, 1] * buf[cy+w] +
                        K[2, 2] * buf[cy+w+1])
-                out.write(float(win))
+                pending.append(float(win))
             else:
-                out.write(buf[cy])
+                pending.append(buf[cy])
 
-        for px in inp:
-            buf.append(px)
-            cy = len(buf) - w - 2       # centre whose window just completed
-            if cy >= 0:
-                emit(cy)
+        while True:
+            chunk = inp.read_burst(w)
+            for px in chunk:
+                buf.append(px)
+                cy = len(buf) - w - 2   # centre whose window just completed
+                if cy >= 0:
+                    emit(cy)
+            if pending:
+                out.write_burst(pending)
+                pending.clear()
+            if len(chunk) < w:          # EoT reached
+                break
+        inp.open()
         for cy in range(max(len(buf) - w - 1, 0), len(buf)):
             emit(cy)                    # tail pixels (all boundary)
+        if pending:
+            out.write_burst(pending)
         out.close()
 
     def Sink(inp):
-        flat = [px for px in inp]
+        flat = inp.read_transaction()
         result[...] = np.array(flat, np.float32).reshape(h, w)
 
     def Top():

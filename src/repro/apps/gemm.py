@@ -24,25 +24,34 @@ def build(P: int = 4, n: int = 8, K: int = 4, seed: int = 0):
     C = np.zeros((P * n, P * n), np.float32)
 
     def AFeeder(out, i: int):
-        for k in range(K):                      # stream row i's K blocks
-            out.write(A[i * n:(i + 1) * n, k * n:(k + 1) * n].copy())
+        # burst write: row i's K blocks move in capacity-sized batches,
+        # one runtime interaction per batch instead of per block
+        out.write_burst([A[i * n:(i + 1) * n, k * n:(k + 1) * n].copy()
+                         for k in range(K)])
         out.close()
 
     def BFeeder(out, j: int):
-        for k in range(K):
-            out.write(B[k * n:(k + 1) * n, j * n:(j + 1) * n].copy())
+        out.write_burst([B[k * n:(k + 1) * n, j * n:(j + 1) * n].copy()
+                         for k in range(K)])
         out.close()
 
-    def PE(a_in, b_in, a_out, b_out, c_out):
+    def PE(a_in, b_in, a_out, b_out, c_out, burst: int = 2):
         acc = None
-        while not a_in.eot():
-            a = a_in.read()
-            b = b_in.read()
-            acc = a @ b if acc is None else acc + a @ b
+        while True:
+            a_blks = a_in.read_burst(burst)
+            if not a_blks:
+                break
+            # the B stream carries exactly as many blocks as the A stream,
+            # so a same-sized burst keeps the pair in lockstep
+            b_blks = b_in.read_burst(len(a_blks))
+            for a, b in zip(a_blks, b_blks):
+                acc = a @ b if acc is None else acc + a @ b
             if a_out is not None:
-                a_out.write(a)
+                a_out.write_burst(a_blks)
             if b_out is not None:
-                b_out.write(b)
+                b_out.write_burst(b_blks)
+            if len(a_blks) < burst:
+                break
         a_in.open()
         b_in.open()
         if a_out is not None:

@@ -70,6 +70,16 @@ def build(n_packets: int = 64, seed: int = 0):
                 if outs[port].try_write(head):       # output has space?
                     ins[s].read()                    # now consume
                     progress = True
+                    # opportunistic burst drain: forward the run of
+                    # consecutive same-destination packets in one batch
+                    # (peek each, stop at the first routed elsewhere)
+                    while True:
+                        ok, nxt = ins[s].try_peek()
+                        if not ok or ((nxt[0] >> bit) & 1) != port:
+                            break
+                        if not outs[port].try_write(nxt):
+                            break
+                        ins[s].read()
                 else:
                     blockers.append(outs[port])      # waiting for space
             if not progress and blockers:
@@ -78,8 +88,7 @@ def build(n_packets: int = 64, seed: int = 0):
         out1.close()
 
     def Sink(inp, port: int):
-        for (d, pl) in inp:
-            received[port].append((d, pl))
+        received[port].extend(inp.read_transaction())
 
     def Top():
         # stage wiring: lines[s][i] carries packets entering stage s on

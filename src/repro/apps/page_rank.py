@@ -50,15 +50,22 @@ def build(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,
 
     def ComputeUnit(ctrl_in, upd_out, vreq, vresp, p: int):
         """Scatter phase for partition p: one update transaction per
-        iteration."""
+        iteration.  Vertex lookups are pipelined in bursts: up to
+        ``resp-capacity`` read requests go out per batch, so the in-flight
+        responses can never exceed the response channel and the handler
+        round-trip cost is amortized across the batch."""
+        edges = pe_edges[p]
+        burst = vresp.channel.capacity
         while True:
             go = ctrl_in.read()
             if go is None:              # shutdown
                 break
-            for (s, d) in pe_edges[p]:
-                vreq.write(("read", s))
-                w = vresp.read()
-                upd_out.write((d, w))
+            for base in range(0, len(edges), burst):
+                chunk = edges[base:base + burst]
+                vreq.write_burst([("read", s) for s, _ in chunk])
+                ws = vresp.read_burst(len(chunk))
+                upd_out.write_burst([(d, w)
+                                     for (_, d), w in zip(chunk, ws)])
             upd_out.close()             # end of this iteration's transaction
 
     def UpdateHandler(upd_in, commit_out, p: int):
@@ -69,10 +76,8 @@ def build(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,
         hi = min(lo + part, n_vertices)
         while True:
             acc = np.zeros(hi - lo, np.float64)
-            while not upd_in.eot():     # transaction-boundary test (peek)
-                d, w = upd_in.read()
+            for d, w in upd_in.read_transaction():
                 acc[d - lo] += w        # register accumulate (Listing 1)
-            upd_in.open()
             commit_out.write((p, acc))
 
     def Ctrl(cu_outs, commit_ins, vreq, vresp):
@@ -84,10 +89,12 @@ def build(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,
             commits = [ci.read() for ci in commit_ins]
             for p, acc in commits:
                 lo = p * part
-                for i, val in enumerate(acc):
-                    vreq.write(("write",
-                                (lo + i,
-                                 (1 - DAMPING) / n_vertices + DAMPING * val)))
+                # rank write-back is fire-and-forget: a single burst moves
+                # the whole partition (chunked by channel capacity)
+                vreq.write_burst(
+                    [("write",
+                      (lo + i, (1 - DAMPING) / n_vertices + DAMPING * val))
+                     for i, val in enumerate(acc)])
             # read-as-fence: the handler serves FIFO, so a round-trip read
             # proves every prior write of this iteration has been applied
             # before the next iteration's scatter starts

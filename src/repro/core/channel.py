@@ -9,6 +9,12 @@ paper's Table 2:
     istream:  empty() peek()  try_peek()   read()   try_read()
               eot()  try_eot()  open()  try_open()
 
+plus the burst extension (hardware FIFOs amortize per-token handshake cost
+with wide/burst transfers; we do the same in software):
+
+    ostream:  write_burst(seq)   try_write_burst(seq)
+    istream:  read_burst(n)  try_read_burst(n)  read_transaction()
+
 End-of-transaction (EoT) tokens are out-of-band: they carry no data, occupy
 one slot of channel capacity, and let a consumer terminate a pipelined loop
 without extending the data type (paper Listing 2).
@@ -17,17 +23,22 @@ Blocking semantics are engine-mediated: a blocking operation calls
 ``runtime.wait(channel, side)`` which either waits (thread engine), performs
 a cooperative hand-off (coroutine engine), or raises
 :class:`~repro.core.errors.SequentialSimulationError` (sequential engine,
-reproducing the paper's documented failure mode).  In the coroutine engine
-exactly one task runs at a time, so the channel needs **no locking** there —
-this is the paper's "collaborative instead of preemptive" insight showing up
-as the absence of synchronization cost.
+reproducing the paper's documented failure mode).
+
+Run-to-block fast path: in the coroutine engine exactly one task runs at a
+time, so channel state needs **no locking** — the paper's "collaborative
+instead of preemptive" insight.  Engines advertise this via
+``runtime.fast_path``; when set, an operation on a channel that can make
+progress *and has no parked waiters on the opposite side* mutates the deque
+directly and never enters the engine at all.  Only a genuine stall (or a
+required wakeup) pays for runtime dispatch.
 """
 
 from __future__ import annotations
 
 import itertools
 from collections import deque
-from typing import Any, Generic, Optional, TypeVar
+from typing import Any, Generic, Optional, Sequence, TypeVar
 
 from .context import current_runtime
 from .errors import ChannelMisuse, EndOfTransaction
@@ -64,12 +75,20 @@ class Channel(Generic[T]):
     ``capacity`` bounds the number of in-flight tokens exactly as in TAPA's
     ``tapa::channel<T, capacity>``; the simulator reserves enough state to
     honor it precisely (Section 3.2).
+
+    ``_rwait``/``_wwait`` are the per-channel waiter lists: fibers parked on
+    this channel's readable/writable side.  Keeping them *on the channel*
+    makes wakeup O(1) (no engine-global dict lookup) and lets the stream
+    fast path test "does anybody need a wakeup?" with one truthiness check.
+    The thread engine keeps its own condition variables and leaves these
+    empty.
     """
 
     __slots__ = (
         "name", "capacity", "dtype", "_q", "uid",
         "producer", "consumer", "parent",
         "total_written", "total_read", "max_occupancy",
+        "_rwait", "_wwait", "_eot_count",
     )
 
     def __init__(self, capacity: int = 2, name: Optional[str] = None,
@@ -81,11 +100,19 @@ class Channel(Generic[T]):
         self.capacity = capacity
         self.dtype = dtype
         self._q: deque = deque()
+        # Per-channel waiter lists (coroutine engine: (fiber, epoch) pairs).
+        self._rwait: deque = deque()
+        self._wwait: deque = deque()
+        # Number of EoT tokens currently in the queue: lets a burst read
+        # size itself in O(1) (no head scan) on the common all-data case.
+        self._eot_count = 0
         # Endpoint bookkeeping for graph metadata extraction (Section 3.4).
         self.producer = None   # task instance acting as producer
         self.consumer = None   # task instance acting as consumer
         self.parent = None     # parent task that instantiated this channel
-        # Statistics (used by the simulator report and the PP scheduler).
+        # Statistics (opt-in: engines update these only under
+        # ``track_stats=True``, at burst granularity; the default hot path
+        # does no bookkeeping).
         self.total_written = 0
         self.total_read = 0
         self.max_occupancy = 0
@@ -112,20 +139,36 @@ class Channel(Generic[T]):
                 f"channel {self.name!r} already has a {side} "
                 f"({cur!r}); cannot also bind {task!r}")
 
-    # -- raw queue ops (no blocking; engines guarantee exclusivity or hold
-    #    the engine lock around these) ------------------------------------
+    # -- raw queue ops (no blocking, no stats; engines guarantee
+    #    exclusivity or hold the engine lock around these) -----------------
     def _push(self, tok: Any) -> None:
+        if tok is EOT:
+            self._eot_count += 1
         self._q.append(tok)
-        self.total_written += 1
-        if len(self._q) > self.max_occupancy:
-            self.max_occupancy = len(self._q)
 
     def _pop(self) -> Any:
-        self.total_read += 1
-        return self._q.popleft()
+        tok = self._q.popleft()
+        if tok is EOT:
+            self._eot_count -= 1
+        return tok
 
     def _head(self) -> Any:
         return self._q[0]
+
+    def _data_run(self, limit: int) -> int:
+        """Length of the run of consecutive *data* tokens at the head,
+        capped at ``limit`` — how many tokens a burst read may consume
+        without crossing an EoT.  O(1) when no EoT is in flight."""
+        q = self._q
+        if not self._eot_count:
+            n = len(q)
+            return n if n < limit else limit
+        k = 0
+        for tok in q:
+            if k >= limit or tok is EOT:
+                break
+            k += 1
+        return k
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (f"Channel({self.name!r}, cap={self.capacity}, "
@@ -142,7 +185,7 @@ def _rt():
 
 
 class IStream(Generic[T]):
-    """Consumer-side view of a channel (paper Table 2)."""
+    """Consumer-side view of a channel (paper Table 2 + burst extension)."""
 
     __slots__ = ("_chan",)
 
@@ -166,6 +209,15 @@ class IStream(Generic[T]):
         """
         c = self._chan
         rt = _rt()
+        q = c._q
+        if q and rt.fast_path and not c._wwait:
+            # run-to-block fast path: token available, no parked writer to
+            # wake — consume without entering the engine
+            tok = q[0]
+            if tok is EOT:
+                raise EndOfTransaction(
+                    f"read() reached EoT on channel {c.name!r}")
+            return q.popleft()
         while c.is_empty():
             rt.wait(c, READABLE)
         if c._head() is EOT:
@@ -174,6 +226,57 @@ class IStream(Generic[T]):
             raise EndOfTransaction(
                 f"read() reached EoT on channel {c.name!r}")
         return rt.pop(c)
+
+    def read_burst(self, n: int) -> list:
+        """Blocking burst read: consume and return ``n`` data tokens.
+
+        Equivalent to ``n`` scalar ``read()`` calls, except that an EoT
+        terminates the burst instead of raising: tokens are consumed from
+        the head in batches as they become available, and the burst stops
+        early — *without* consuming the EoT — if the transaction ends
+        first.  Returns a list of length ``n``, or shorter iff an EoT was
+        reached (empty iff the head token already is EoT).
+
+        One runtime interaction per batch, not per token: this is the
+        software analogue of a hardware FIFO burst transfer.
+        """
+        if n < 0:
+            raise ValueError("read_burst size must be >= 0")
+        c = self._chan
+        rt = _rt()
+        q = c._q
+        out: list = []
+        while len(out) < n:
+            if not q:
+                rt.wait(c, READABLE)
+                continue
+            want = n - len(out)
+            k = c._data_run(want) if rt.fast_path else rt.data_run(c, want)
+            if k == 0:
+                break                       # head is EoT: burst ends early
+            if rt.fast_path and not c._wwait:
+                if k == len(q):             # drain-all: one C-level copy
+                    out.extend(q)
+                    q.clear()
+                else:
+                    out.extend(q.popleft() for _ in range(k))
+            else:
+                out.extend(rt.pop_burst(c, k))
+        return out
+
+    def read_transaction(self) -> list:
+        """Blocking read of one whole transaction: every data token up to
+        the next EoT, *consuming* the EoT.  Equivalent to draining
+        ``for v in stream`` into a list, at burst granularity."""
+        c = self._chan
+        n = max(c.capacity, 32)
+        out: list = []
+        while True:
+            chunk = self.read_burst(n)
+            out.extend(chunk)
+            if len(chunk) < n:              # short burst <=> EoT at head
+                self.open()
+                return out
 
     def peek(self) -> T:
         """Blocking peek: return the head token without consuming it.
@@ -204,7 +307,10 @@ class IStream(Generic[T]):
         rt = _rt()
         while c.is_empty():
             rt.wait(c, READABLE)
-        tok = rt.pop(c)
+        if rt.fast_path and not c._wwait:
+            tok = c._pop()
+        else:
+            tok = rt.pop(c)
         if tok is not EOT:
             raise ChannelMisuse(
                 f"open() expected EoT on channel {c.name!r}, got data")
@@ -213,9 +319,28 @@ class IStream(Generic[T]):
     def try_read(self) -> tuple[bool, Optional[T]]:
         c = self._chan
         rt = _rt()
-        if c.is_empty() or c._head() is EOT:
+        q = c._q
+        if not q or q[0] is EOT:
             return False, None
+        if rt.fast_path and not c._wwait:
+            return True, q.popleft()
         return True, rt.pop(c)
+
+    def try_read_burst(self, n: int) -> list:
+        """Non-blocking burst read: consume and return the up-to-``n`` data
+        tokens available right now (empty list when none, or when the head
+        is EoT)."""
+        if n < 0:
+            raise ValueError("try_read_burst size must be >= 0")
+        c = self._chan
+        rt = _rt()
+        k = c._data_run(n) if rt.fast_path else rt.data_run(c, n)
+        if k == 0:
+            return []
+        q = c._q
+        if rt.fast_path and not c._wwait:
+            return [q.popleft() for _ in range(k)]
+        return rt.pop_burst(c, k)
 
     def try_peek(self) -> tuple[bool, Optional[T]]:
         c = self._chan
@@ -235,7 +360,10 @@ class IStream(Generic[T]):
         rt = _rt()
         if c.is_empty() or c._head() is not EOT:
             return False
-        rt.pop(c)
+        if rt.fast_path and not c._wwait:
+            c._pop()
+        else:
+            rt.pop(c)
         return True
 
     # -- iteration sugar: drain one transaction ----------------------------
@@ -254,7 +382,7 @@ class IStream(Generic[T]):
 
 
 class OStream(Generic[T]):
-    """Producer-side view of a channel (paper Table 2)."""
+    """Producer-side view of a channel (paper Table 2 + burst extension)."""
 
     __slots__ = ("_chan",)
 
@@ -274,31 +402,96 @@ class OStream(Generic[T]):
             raise ChannelMisuse("use close() to send EoT")
         c = self._chan
         rt = _rt()
+        q = c._q
+        if rt.fast_path and len(q) < c.capacity and not c._rwait:
+            # run-to-block fast path: space available, no parked reader to
+            # wake — enqueue without entering the engine
+            q.append(v)
+            return
         while c.is_full():
             rt.wait(c, WRITABLE)
         rt.push(c, v)
+
+    def write_burst(self, seq: Sequence[T]) -> None:
+        """Blocking burst write of every token in ``seq``, in order.
+
+        Equivalent to scalar ``write()`` per token, but tokens move in
+        capacity-sized batches (``deque.extend``) and the runtime is
+        entered once per batch — or not at all when the channel has room
+        and no parked reader.  Capacity is still honored exactly: a batch
+        never exceeds the free slots, and the call blocks between batches
+        when the channel is full.
+        """
+        toks = list(seq)
+        for v in toks:
+            if v is EOT:
+                raise ChannelMisuse("use close() to send EoT")
+        c = self._chan
+        rt = _rt()
+        q = c._q
+        i, n = 0, len(toks)
+        while i < n:
+            room = c.capacity - len(q)
+            if room <= 0:
+                rt.wait(c, WRITABLE)
+                continue
+            j = min(i + room, n)
+            if rt.fast_path and not c._rwait:
+                q.extend(toks[i:j])
+            else:
+                rt.push_burst(c, toks[i:j])
+            i = j
 
     def close(self) -> None:
         """Blocking write of an EoT token ("close" the transaction)."""
         c = self._chan
         rt = _rt()
+        if rt.fast_path and len(c._q) < c.capacity and not c._rwait:
+            c._push(EOT)
+            return
         while c.is_full():
             rt.wait(c, WRITABLE)
         rt.push(c, EOT)
 
     def try_write(self, v: T) -> bool:
+        if v is EOT:
+            raise ChannelMisuse("use close() to send EoT")
         c = self._chan
         rt = _rt()
         if c.is_full():
             return False
+        if rt.fast_path and not c._rwait:
+            c._q.append(v)
+            return True
         rt.push(c, v)
         return True
+
+    def try_write_burst(self, seq: Sequence[T]) -> int:
+        """Non-blocking burst write: enqueue as many leading tokens of
+        ``seq`` as fit right now; returns the number written."""
+        toks = list(seq)
+        for v in toks:
+            if v is EOT:
+                raise ChannelMisuse("use close() to send EoT")
+        c = self._chan
+        rt = _rt()
+        k = min(c.capacity - len(c._q), len(toks))
+        if k <= 0:
+            return 0
+        if rt.fast_path and not c._rwait:
+            c._q.extend(toks[:k])
+        else:
+            rt.push_burst(c, toks[:k])
+        return k
 
     def try_close(self) -> bool:
         c = self._chan
         rt = _rt()
         if c.is_full():
             return False
+        if rt.fast_path and not c._rwait:
+            c._push(EOT)
+            return True
         rt.push(c, EOT)
         return True
 

@@ -23,11 +23,27 @@ Three interchangeable engines run the same task bodies:
 
 All engines implement the runtime protocol used by streams::
 
-    wait(chan, side)   block current task until side may be satisfiable
-    push(chan, tok)    enqueue + wake readers
-    pop(chan)          dequeue + wake writers
-    spawn(inst)        launch a child task instance
-    join(insts)        wait for non-detached children
+    wait(chan, side)        block current task until side may be satisfiable
+    push(chan, tok)         enqueue + wake readers
+    pop(chan)               dequeue + wake writers
+    push_burst(chan, toks)  enqueue a batch + one reader wake
+    pop_burst(chan, n)      dequeue a batch + one writer wake
+    spawn(inst)             launch a child task instance
+    join(insts)             wait for non-detached children
+
+plus two attributes streams read on the hot path:
+
+    fast_path    True iff a stream op on a channel that can make progress
+                 (and has no parked opposite-side waiter) may mutate the
+                 deque directly, skipping engine dispatch entirely.  Safe
+                 exactly when at most one task mutates channels at a time:
+                 coroutine (one fiber runs) and sequential (one thread).
+                 The thread engine must keep its lock, so never.
+    track_stats  opt-in per-channel statistics (``total_written``/
+                 ``total_read``/``max_occupancy``), aggregated at burst
+                 granularity.  Enabling it disables ``fast_path`` so every
+                 token is observed; the default leaves the hot path free of
+                 bookkeeping.
 """
 
 from __future__ import annotations
@@ -51,7 +67,11 @@ from .task import (TaskInstance, bind_streams, builder_stack_depth,
 
 @dataclass
 class SimReport:
-    """Outcome of one simulation run (consumed by benchmarks/sim_time.py)."""
+    """Outcome of one simulation run (consumed by benchmarks/sim_time.py).
+
+    ``tokens`` and the per-channel tuples are only populated when the
+    engine ran with ``track_stats=True``; the default run reports zeros.
+    """
     engine: str
     ok: bool
     wall_s: float
@@ -86,11 +106,13 @@ def _find_channels(obj: Any, acc: set) -> None:
 class EngineBase:
     name = "base"
 
-    def __init__(self):
+    def __init__(self, track_stats: bool = False):
         self.instances: list[TaskInstance] = []
         self.channel_set: set[Channel] = set()
         self.switches = 0
         self.capacity_violations = 0
+        self.track_stats = track_stats
+        self.fast_path = False
 
     # -- runtime protocol (overridden) --------------------------------------
     def wait(self, chan: Channel, side: str) -> None:
@@ -108,6 +130,20 @@ class EngineBase:
     def pop(self, chan: Channel) -> Any:
         raise NotImplementedError
 
+    def push_burst(self, chan: Channel, toks: list) -> None:
+        raise NotImplementedError
+
+    def pop_burst(self, chan: Channel, n: int) -> list:
+        raise NotImplementedError
+
+    def data_run(self, chan: Channel, limit: int) -> int:
+        """How many head tokens a burst read may consume (see
+        Channel._data_run).  Single-task engines read channel state
+        directly; the thread engine overrides this to hold its lock, since
+        the EoT-present path iterates the deque and a concurrent producer
+        append would raise 'deque mutated during iteration'."""
+        return chan._data_run(limit)
+
     def spawn(self, inst: TaskInstance) -> None:
         raise NotImplementedError
 
@@ -115,6 +151,13 @@ class EngineBase:
         raise NotImplementedError
 
     # -- shared helpers ------------------------------------------------------
+    def _stat_push(self, chan: Channel, k: int) -> None:
+        """Burst-granular write statistics (one update per batch)."""
+        chan.total_written += k
+        occ = len(chan._q)
+        if occ > chan.max_occupancy:
+            chan.max_occupancy = occ
+
     def _register(self, inst: TaskInstance) -> None:
         self.instances.append(inst)
         _find_channels(inst.args, self.channel_set)
@@ -148,8 +191,11 @@ class SequentialEngine(EngineBase):
 
     name = "sequential"
 
-    def __init__(self):
-        super().__init__()
+    def __init__(self, track_stats: bool = False):
+        super().__init__(track_stats)
+        # single thread, exclusive by construction: direct deque ops are
+        # safe whenever stats don't need to observe every token
+        self.fast_path = not track_stats
         self._cur: Optional[TaskInstance] = None
 
     # blocking ops ----------------------------------------------------------
@@ -184,9 +230,28 @@ class SequentialEngine(EngineBase):
 
     def push(self, chan: Channel, tok: Any) -> None:
         chan._push(tok)
+        if self.track_stats:
+            self._stat_push(chan, 1)
 
     def pop(self, chan: Channel) -> Any:
+        if self.track_stats:
+            chan.total_read += 1
         return chan._pop()
+
+    def push_burst(self, chan: Channel, toks: list) -> None:
+        chan._q.extend(toks)
+        if self.track_stats:
+            self._stat_push(chan, len(toks))
+
+    def pop_burst(self, chan: Channel, n: int) -> list:
+        q = chan._q
+        if self.track_stats:
+            chan.total_read += n
+        if n == len(q):
+            out = list(q)
+            q.clear()
+            return out
+        return [q.popleft() for _ in range(n)]
 
     # task management --------------------------------------------------------
     def spawn(self, inst: TaskInstance) -> None:
@@ -242,12 +307,17 @@ class SequentialEngine(EngineBase):
 # ---------------------------------------------------------------------------
 
 class ThreadEngine(EngineBase):
-    """One OS thread per task instance; preemptive scheduling (paper S3.2)."""
+    """One OS thread per task instance; preemptive scheduling (paper S3.2).
+
+    ``fast_path`` stays False: preemption means two tasks can touch a
+    channel concurrently, so every op must hold the engine lock — exactly
+    the per-token synchronization cost the coroutine engine avoids.
+    """
 
     name = "thread"
 
-    def __init__(self):
-        super().__init__()
+    def __init__(self, track_stats: bool = False):
+        super().__init__(track_stats)
         self._lock = threading.Lock()
         self._conds: dict[tuple[int, str], threading.Condition] = {}
         self._finish_cond = threading.Condition(self._lock)
@@ -378,6 +448,8 @@ class ThreadEngine(EngineBase):
     def push(self, chan: Channel, tok: Any) -> None:
         with self._lock:
             chan._push(tok)
+            if self.track_stats:
+                self._stat_push(chan, 1)
             self._cond(chan, READABLE).notify()
             if self._multi_waiters:
                 self._any_cond.notify_all()
@@ -385,10 +457,42 @@ class ThreadEngine(EngineBase):
     def pop(self, chan: Channel) -> Any:
         with self._lock:
             tok = chan._pop()
+            if self.track_stats:
+                chan.total_read += 1
             self._cond(chan, WRITABLE).notify()
             if self._multi_waiters:
                 self._any_cond.notify_all()
             return tok
+
+    def push_burst(self, chan: Channel, toks: list) -> None:
+        """Batch enqueue: one lock round-trip and one reader notify per
+        burst instead of per token."""
+        with self._lock:
+            chan._q.extend(toks)
+            if self.track_stats:
+                self._stat_push(chan, len(toks))
+            self._cond(chan, READABLE).notify()
+            if self._multi_waiters:
+                self._any_cond.notify_all()
+
+    def pop_burst(self, chan: Channel, n: int) -> list:
+        with self._lock:
+            q = chan._q
+            if n == len(q):
+                out = list(q)
+                q.clear()
+            else:
+                out = [q.popleft() for _ in range(n)]
+            if self.track_stats:
+                chan.total_read += n
+            self._cond(chan, WRITABLE).notify()
+            if self._multi_waiters:
+                self._any_cond.notify_all()
+            return out
+
+    def data_run(self, chan: Channel, limit: int) -> int:
+        with self._lock:
+            return chan._data_run(limit)
 
     def spawn(self, inst: TaskInstance) -> None:
         with self._lock:
@@ -595,14 +699,25 @@ class CoroutineEngine(EngineBase):
     Determinism: the ready queue is FIFO over spawn/wake order, wake order
     is FIFO per channel side, and only one fiber runs at a time, so a given
     program produces the identical schedule on every run.
+
+    Lock-free fast path: because exactly one fiber is runnable, a channel
+    op that can make progress needs neither a lock nor engine dispatch —
+    streams mutate the deque directly (``fast_path``).  The engine is
+    entered only at genuine stalls (``wait``) and for wakeups, which are
+    O(1): waiters park in per-channel deques (``Channel._rwait``/
+    ``_wwait``), and the one-producer/one-consumer rule means each side
+    holds at most one live entry.  Burst ops wake at most once per batch,
+    and the wake epoch coalesces redundant wakes of an already-scheduled
+    fiber, cutting the switch count to the dataflow-stall minimum.
     """
 
     name = "coroutine"
 
-    def __init__(self):
-        super().__init__()
+    def __init__(self, track_stats: bool = False):
+        super().__init__(track_stats)
+        self.fast_path = not track_stats
         self._ready: deque[_Fiber] = deque()
-        self._waiters: dict[tuple[int, str], deque[_Fiber]] = {}
+        self._parked: set[Channel] = set()   # channels holding waiter entries
         self._fibers: dict[int, _Fiber] = {}
         self._join_pending: dict[int, int] = {}     # fiber uid -> #children
         self._child_to_joiner: dict[int, _Fiber] = {}
@@ -624,8 +739,9 @@ class CoroutineEngine(EngineBase):
     def wait(self, chan: Channel, side: str) -> None:
         fiber: _Fiber = _fiber_tls.fiber
         fiber.inst.state = "blocked"
-        self._waiters.setdefault((chan.uid, side), deque()).append(
-            (fiber, fiber.wake_epoch))
+        wq = chan._rwait if side == READABLE else chan._wwait
+        wq.append((fiber, fiber.wake_epoch))
+        self._parked.add(chan)
         fiber._yield()
         fiber.inst.state = "running"
 
@@ -637,35 +753,66 @@ class CoroutineEngine(EngineBase):
         fiber.inst.state = "blocked"
         e = fiber.wake_epoch
         for chan, side in keys:
-            self._waiters.setdefault((chan.uid, side), deque()).append(
-                (fiber, e))
+            wq = chan._rwait if side == READABLE else chan._wwait
+            wq.append((fiber, e))
+            self._parked.add(chan)
         fiber._yield()
         fiber.inst.state = "running"
 
     def push(self, chan: Channel, tok: Any) -> None:
         chan._push(tok)              # no lock: exclusivity by construction
-        self._wake(chan, READABLE)
+        if self.track_stats:
+            self._stat_push(chan, 1)
+        if chan._rwait:
+            self._wake(chan._rwait)
 
     def pop(self, chan: Channel) -> Any:
         tok = chan._pop()
-        self._wake(chan, WRITABLE)
+        if self.track_stats:
+            chan.total_read += 1
+        if chan._wwait:
+            self._wake(chan._wwait)
         return tok
+
+    def push_burst(self, chan: Channel, toks: list) -> None:
+        """Batch enqueue: one deque.extend and at most one reader wake per
+        burst — the per-token runtime cost is amortized away."""
+        chan._q.extend(toks)
+        if self.track_stats:
+            self._stat_push(chan, len(toks))
+        if chan._rwait:
+            self._wake(chan._rwait)
+
+    def pop_burst(self, chan: Channel, n: int) -> list:
+        q = chan._q
+        if n == len(q):
+            out = list(q)
+            q.clear()
+        else:
+            out = [q.popleft() for _ in range(n)]
+        if self.track_stats:
+            chan.total_read += n
+        if chan._wwait:
+            self._wake(chan._wwait)
+        return out
 
     def _schedule(self, fiber: "_Fiber") -> None:
         """The single wake path: bumping the epoch here marks every other
         outstanding waiter-queue registration of this fiber stale, so a
         fiber can never be double-resumed (which would desynchronize the
-        evt/_sched_evt handshake)."""
+        baton handshake) and consecutive wakes of the same fiber coalesce
+        into one ready-queue entry."""
         fiber.wake_epoch += 1
         self._ready.append(fiber)
 
-    def _wake(self, chan: Channel, side: str) -> None:
-        q = self._waiters.get((chan.uid, side))
-        if q:
-            while q:
-                fiber, epoch = q.popleft()
-                if fiber.wake_epoch == epoch and not fiber.done:
-                    self._schedule(fiber)
+    def _wake(self, wq: deque) -> None:
+        """Drain one per-channel waiter list: schedule live entries, drop
+        stale ones.  The one-producer/one-consumer rule bounds live entries
+        per side at one, so this is O(1) amortized."""
+        while wq:
+            fiber, epoch = wq.popleft()
+            if fiber.wake_epoch == epoch and not fiber.done:
+                self._schedule(fiber)
 
     def spawn(self, inst: TaskInstance) -> None:
         self._register(inst)
@@ -707,13 +854,14 @@ class CoroutineEngine(EngineBase):
     def _kill_blocked_fibers(self) -> None:
         """Tear down fibers that are permanently blocked (detached tasks at
         normal termination, or everything on deadlock)."""
-        for q in self._waiters.values():
-            while q:
-                f, epoch = q.popleft()
-                if f.done or f.killed or f.wake_epoch != epoch:
-                    continue
-                f.killed = True
-                f.resume_from_scheduler()
+        for chan in self._parked:
+            for wq in (chan._rwait, chan._wwait):
+                while wq:
+                    f, epoch = wq.popleft()
+                    if f.done or f.killed or f.wake_epoch != epoch:
+                        continue
+                    f.killed = True
+                    f.resume_from_scheduler()
         for f in self._fibers.values():
             if not f.done and not f.killed and \
                     f.inst.state in ("created", "blocked"):
@@ -770,15 +918,19 @@ ENGINES = {
 
 
 def run(top: Callable, *args, engine: str = "coroutine",
-        **kwargs) -> SimReport:
+        track_stats: bool = False, **kwargs) -> SimReport:
     """Simulate a task-parallel program.
 
     This is the software-simulation half of the paper's unified
     system-integration interface: the same top-level task function is later
     accepted by the compiled runners (``repro.launch``).
+
+    ``track_stats=True`` records per-channel token counts and occupancy
+    highwater marks (burst-granular) at the cost of disabling the
+    run-to-block fast path.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; "
                          f"choose from {sorted(ENGINES)}")
-    eng = ENGINES[engine]()
+    eng = ENGINES[engine](track_stats=track_stats)
     return eng.run(top, *args, **kwargs)

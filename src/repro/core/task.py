@@ -99,10 +99,13 @@ class AutoStream:
     # consumer ops
     def empty(self): return self._as(IStream).empty()
     def read(self): return self._as(IStream).read()
+    def read_burst(self, n): return self._as(IStream).read_burst(n)
+    def read_transaction(self): return self._as(IStream).read_transaction()
     def peek(self): return self._as(IStream).peek()
     def eot(self): return self._as(IStream).eot()
     def open(self): return self._as(IStream).open()
     def try_read(self): return self._as(IStream).try_read()
+    def try_read_burst(self, n): return self._as(IStream).try_read_burst(n)
     def try_peek(self): return self._as(IStream).try_peek()
     def try_eot(self): return self._as(IStream).try_eot()
     def try_open(self): return self._as(IStream).try_open()
@@ -110,8 +113,11 @@ class AutoStream:
     # producer ops
     def full(self): return self._as(OStream).full()
     def write(self, v): return self._as(OStream).write(v)
+    def write_burst(self, seq): return self._as(OStream).write_burst(seq)
     def close(self): return self._as(OStream).close()
     def try_write(self, v): return self._as(OStream).try_write(v)
+    def try_write_burst(self, seq):
+        return self._as(OStream).try_write_burst(seq)
     def try_close(self): return self._as(OStream).try_close()
 
 

@@ -98,12 +98,20 @@ class TokenPipeline:
             yield self.next_batch()
 
     # -- TAPA producer ------------------------------------------------------
-    def as_task(self, n_batches: int):
+    def as_task(self, n_batches: int, burst: int = 0):
         """A producer task streaming ``n_batches`` into a channel then
-        closing the transaction (prefetch-queue pattern)."""
+        closing the transaction (prefetch-queue pattern).
+
+        ``burst`` > 0 prefetches that many batches at a time and moves
+        them with one ``write_burst`` per group (capped at the channel
+        capacity by default so prefetch memory stays bounded)."""
         def DataProducer(out):
-            for _ in range(n_batches):
-                out.write(self.next_batch())
+            group = burst or out.channel.capacity
+            done = 0
+            while done < n_batches:
+                k = min(group, n_batches - done)
+                out.write_burst([self.next_batch() for _ in range(k)])
+                done += k
             out.close()
         return DataProducer
 

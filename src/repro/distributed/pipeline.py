@@ -93,7 +93,9 @@ def schedule_task_graph(pcfg: PipelineConfig,
         t.invoke(Collector, chans[S], sink)
 
     sink: list = []
-    rep = ENGINES[engine]().run(Top, sink)
+    # stats on: the whole point of this simulation is verifying channel
+    # occupancy against the ppermute buffer bound (max_occupancy below)
+    rep = ENGINES[engine](track_stats=True).run(Top, sink)
     rep.result = sink
     return rep
 

@@ -1,0 +1,311 @@
+"""Burst channel I/O semantics (no hypothesis required; the randomized
+equivalence sweep lives in test_properties.py).
+
+The burst API must be observationally identical to scalar ops: same token
+sequences, same EoT boundaries, same blocking behavior, exact capacity —
+under all three engines — while touching the runtime once per batch.
+"""
+
+import pytest
+
+import repro
+from repro.core.errors import ChannelMisuse
+
+ALL = ("coroutine", "thread", "sequential")
+PARALLEL = ("coroutine", "thread")
+
+
+def run_pair(producer, consumer, capacity=2, engine="coroutine"):
+    out = []
+
+    def Top(sink):
+        ch = repro.channel(capacity=capacity)
+        repro.task().invoke(producer, ch).invoke(consumer, ch, sink)
+
+    rep = repro.run(Top, out, engine=engine)
+    return rep, out
+
+
+@pytest.mark.parametrize("eng", ALL)
+def test_burst_roundtrip_all_engines(eng):
+    def P(o):
+        o.write_burst(range(50))
+        o.close()
+
+    def C(i, sink):
+        sink.extend(i.read_transaction())
+
+    rep, out = run_pair(P, C, capacity=8, engine=eng)
+    assert rep.ok, rep.error
+    assert out == list(range(50))
+
+
+@pytest.mark.parametrize("eng", ALL)
+def test_burst_vs_scalar_identical_sequences(eng):
+    """Burst producer + scalar consumer and vice versa move identical
+    sequences (the cross-mode half of the equivalence claim)."""
+    vals = [(-1) ** k * k for k in range(37)]
+
+    def Pb(o):
+        o.write_burst(vals)
+        o.close()
+
+    def Cs(i, sink):
+        sink.extend(v for v in i)
+
+    def Ps(o):
+        for v in vals:
+            o.write(v)
+        o.close()
+
+    def Cb(i, sink):
+        while True:
+            chunk = i.read_burst(5)
+            sink.extend(chunk)
+            if len(chunk) < 5:
+                break
+        i.open()
+
+    for prod, cons in ((Pb, Cs), (Ps, Cb), (Pb, Cb)):
+        rep, out = run_pair(prod, cons, capacity=3, engine=eng)
+        assert rep.ok, (eng, rep.error)
+        assert out == vals
+
+
+def test_read_burst_stops_at_eot_without_consuming():
+    """A burst that hits an EoT returns short and leaves the EoT for
+    open(); a burst at an EoT head returns empty."""
+    def P(o):
+        o.write_burst([1, 2, 3])
+        o.close()
+        o.write_burst([4])
+        o.close()
+
+    def C(i, sink):
+        first = i.read_burst(10)
+        sink.append(tuple(first))          # short: EoT after 3 tokens
+        assert i.read_burst(10) == []      # EoT still at head
+        i.open()
+        sink.append(tuple(i.read_burst(1)))
+        i.open()
+
+    rep, out = run_pair(P, C, capacity=8)
+    assert rep.ok, rep.error
+    assert out == [(1, 2, 3), (4,)]
+
+
+def test_read_burst_blocks_until_n():
+    """read_burst(n) waits across producer batches until n tokens arrive
+    (it is n scalar reads, not 'whatever is there')."""
+    def P(o):
+        for base in (0, 3, 6):
+            o.write_burst([base, base + 1, base + 2])
+        o.close()
+
+    def C(i, sink):
+        sink.append(tuple(i.read_burst(7)))    # spans three producer bursts
+        sink.append(tuple(i.read_burst(7)))    # short: only 2 left
+        i.open()
+
+    rep, out = run_pair(P, C, capacity=2)      # tiny capacity: many refills
+    assert rep.ok, rep.error
+    assert out == [(0, 1, 2, 3, 4, 5, 6), (7, 8)]
+
+
+@pytest.mark.parametrize("eng", ALL)
+def test_write_burst_honors_capacity(eng):
+    """Burst writes never overfill the channel: occupancy stays bounded by
+    capacity in the parallel engines (sequential records violations
+    instead, exactly as for scalar writes)."""
+    cap = 3
+
+    def P(o):
+        o.write_burst(range(20))
+        o.close()
+
+    def C(i, sink):
+        while True:
+            got = i.read_burst(1)
+            if not got:
+                break
+            assert i.channel.size() <= i.channel.capacity
+            sink.extend(got)
+        i.open()
+
+    def Top(sink):
+        ch = repro.channel(capacity=cap)
+        repro.task().invoke(P, ch).invoke(C, ch, sink)
+
+    out = []
+    rep = repro.run(Top, out, engine=eng, track_stats=True)
+    assert rep.ok, rep.error
+    assert out == list(range(20))
+    if eng == "sequential":
+        assert rep.capacity_violations > 0
+    else:
+        assert rep.capacity_violations == 0
+        # stats are tracked: highwater mark respected the bound
+        assert all(occ <= cap for _, _, occ in rep.channels)
+
+
+def test_try_write_burst_partial():
+    def P(o):
+        wrote = o.try_write_burst([1, 2, 3, 4, 5])
+        assert wrote == 3                       # capacity 3, empty channel
+        assert o.try_write_burst([9]) == 0      # now full
+        o.write_burst([4, 5])                   # blocking finishes the job
+        o.close()
+
+    def C(i, sink):
+        sink.extend(i.read_transaction())
+
+    rep, out = run_pair(P, C, capacity=3)
+    assert rep.ok, rep.error
+    assert out == [1, 2, 3, 4, 5]
+
+
+def test_try_read_burst_partial():
+    def P(o):
+        o.write_burst([1, 2])
+        o.close()
+
+    def C(i, sink):
+        got = i.try_read_burst(10)
+        sink.append(tuple(got))
+        assert i.try_read_burst(10) == []       # only EoT left
+        i.open()
+
+    rep, out = run_pair(P, C, capacity=8)
+    assert rep.ok, rep.error
+    assert out == [(1, 2)]
+
+
+def test_burst_rejects_eot_token():
+    def P(o):
+        with pytest.raises(ChannelMisuse):
+            o.write_burst([1, repro.EOT, 2])
+        with pytest.raises(ChannelMisuse):
+            o.try_write_burst([repro.EOT])
+        o.close()
+
+    def C(i, sink):
+        i.open()
+
+    rep, _ = run_pair(P, C)
+    assert rep.ok, rep.error
+
+
+@pytest.mark.parametrize("eng", PARALLEL)
+def test_multiple_transactions_burst(eng):
+    def P(o):
+        for t in range(3):
+            o.write_burst([(t, k) for k in range(t + 2)])
+            o.close()
+
+    def C(i, sink):
+        for _ in range(3):
+            sink.append(tuple(i.read_transaction()))
+
+    rep, out = run_pair(P, C, capacity=2, engine=eng)
+    assert rep.ok, rep.error
+    assert out == [tuple((t, k) for k in range(t + 2)) for t in range(3)]
+
+
+# ---------------------------------------------------------------------------
+# stats flag
+# ---------------------------------------------------------------------------
+
+def test_default_run_does_no_bookkeeping():
+    def P(o):
+        o.write_burst(range(10))
+        o.close()
+
+    def C(i, sink):
+        sink.extend(i.read_transaction())
+
+    def Top(sink):
+        ch = repro.channel(capacity=4)
+        repro.task().invoke(P, ch).invoke(C, ch, sink)
+
+    rep = repro.run(Top, [], engine="coroutine")
+    assert rep.ok and rep.tokens == 0
+    assert all(w == 0 and occ == 0 for _, w, occ in rep.channels)
+
+
+@pytest.mark.parametrize("eng", ALL)
+def test_track_stats_counts_at_burst_granularity(eng):
+    def P(o):
+        o.write_burst(range(10))
+        o.close()
+
+    def C(i, sink):
+        sink.extend(i.read_transaction())
+
+    def Top(sink):
+        ch = repro.channel(capacity=4)
+        repro.task().invoke(P, ch).invoke(C, ch, sink)
+
+    out = []
+    rep = repro.run(Top, out, engine=eng, track_stats=True)
+    assert rep.ok and out == list(range(10))
+    assert rep.tokens == 11                 # 10 data + 1 EoT
+
+
+# ---------------------------------------------------------------------------
+# fast path: switch counts and wakeups
+# ---------------------------------------------------------------------------
+
+def test_burst_cuts_switches_vs_scalar():
+    """On a deep pipeline with ample capacity the burst path must not
+    switch more than the scalar path — and both must equal the dataflow
+    stall count, not the token count."""
+    N, STAGES, CAP = 512, 4, 64
+
+    def build(burst):
+        def Source(o):
+            if burst:
+                o.write_burst(list(range(N)))
+            else:
+                for v in range(N):
+                    o.write(v)
+            o.close()
+
+        def Relay(i, o):
+            if burst:
+                while True:
+                    chunk = i.read_burst(CAP)
+                    if chunk:
+                        o.write_burst(chunk)
+                    if len(chunk) < CAP:
+                        break
+                i.open()
+                o.close()
+            else:
+                for v in i:
+                    o.write(v)
+                o.close()
+
+        def Sink(i, sink):
+            sink.extend(i.read_transaction() if burst else list(i))
+
+        def Top(sink):
+            chans = [repro.channel(capacity=CAP) for _ in range(STAGES + 1)]
+            t = repro.task().invoke(Source, chans[0])
+            for s in range(STAGES):
+                t = t.invoke(Relay, chans[s], chans[s + 1])
+            t.invoke(Sink, chans[STAGES], sink)
+
+        return Top
+
+    outs = {}
+    switches = {}
+    for mode in (False, True):
+        sink = []
+        rep = repro.run(build(mode), sink, engine="coroutine")
+        assert rep.ok and sink == list(range(N))
+        switches[mode] = rep.switches
+        outs[mode] = sink
+    assert outs[False] == outs[True]
+    assert switches[True] <= switches[False]
+    # switches scale with N/CAP stalls, not with N tokens
+    assert switches[True] < N

@@ -13,6 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy: excluded from the tier-1 default run
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 

@@ -1,101 +1,14 @@
-"""Engine equivalence + determinism properties (hypothesis).
+"""Engine behavior: determinism, error propagation, app verification.
 
-The KPN-determinism property (paper Section 2.2): for programs whose tasks
-read from statically-known channels (no select/try polling), every engine
-that completes must produce the *identical* token streams — the schedule
-may differ, the data may not.
+The hypothesis-driven property tests (KPN determinism, feedback rings,
+scalar/burst equivalence) live in ``test_properties.py`` so this module
+collects and runs on a bare environment without ``hypothesis``.
 """
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import repro
 from repro.apps import APPS, FEEDBACK_APPS
-
-
-# ---------------------------------------------------------------------------
-# generated pipeline programs: Source -> N x Transform -> Sink
-# ---------------------------------------------------------------------------
-
-def build_pipeline(values, n_stages, capacity):
-    def Source(o):
-        for v in values:
-            o.write(v)
-        o.close()
-
-    def Transform(i, o, mul, add):
-        for v in i:
-            o.write(v * mul + add)
-        o.close()
-
-    def Sink(i, out):
-        for v in i:
-            out.append(v)
-
-    def Top(out):
-        chans = [repro.channel(capacity=capacity) for _ in range(n_stages + 1)]
-        t = repro.task().invoke(Source, chans[0])
-        for s in range(n_stages):
-            t = t.invoke(Transform, chans[s], chans[s + 1], s + 1, s)
-        t.invoke(Sink, chans[n_stages], out)
-
-    def expect():
-        cur = list(values)
-        for s in range(n_stages):
-            cur = [v * (s + 1) + s for v in cur]
-        return cur
-
-    return Top, expect
-
-
-@given(values=st.lists(st.integers(-100, 100), max_size=20),
-       n_stages=st.integers(1, 4),
-       capacity=st.integers(1, 5))
-@settings(max_examples=25, deadline=None)
-def test_kpn_determinism_across_engines(values, n_stages, capacity):
-    results = {}
-    for eng in ("coroutine", "thread", "sequential"):
-        top, expect = build_pipeline(values, n_stages, capacity)
-        out = []
-        rep = repro.run(top, out, engine=eng)
-        assert rep.ok, (eng, rep.error)
-        results[eng] = out
-        assert out == expect(), eng
-    assert results["coroutine"] == results["thread"] == results["sequential"]
-
-
-@given(values=st.lists(st.integers(-10, 10), min_size=1, max_size=10),
-       capacity=st.integers(1, 4))
-@settings(max_examples=15, deadline=None)
-def test_feedback_ring_only_parallel_engines(values, capacity):
-    """A 2-task token ring (feedback): coroutine/thread simulate it,
-    sequential must fail — the paper's central simulation claim."""
-    def A(i, o, sink):
-        o.write(values[0])                     # seed the ring
-        for _ in range(len(values) - 1):
-            v = i.read()
-            sink.append(v)
-            o.write(v + 1)
-        sink.append(i.read())
-
-    def Top(sink):
-        c1 = repro.channel(capacity=capacity)
-        c2 = repro.channel(capacity=capacity)
-
-        def B(i, o):
-            for _ in range(len(values)):
-                o.write(i.read())
-
-        repro.task().invoke(A, c2, c1, sink).invoke(B, c1, c2)
-
-    for eng in ("coroutine", "thread"):
-        sink = []
-        rep = repro.run(Top, sink, engine=eng)
-        assert rep.ok, (eng, rep.error)
-        assert sink == [values[0] + k for k in range(len(values))]
-
-    rep = repro.run(Top, [], engine="sequential")
-    assert not rep.ok
 
 
 def test_coroutine_schedule_deterministic():

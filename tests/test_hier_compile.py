@@ -4,8 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from repro.core.hier_compile import (DataflowProgram, StageInstance,
                                      compile_stages)
+
+pytestmark = pytest.mark.slow  # JAX-compile-heavy: excluded from the tier-1 default run
 
 
 def f_double(x):

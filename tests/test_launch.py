@@ -11,6 +11,8 @@ import pytest
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
 from repro.launch.dryrun import collective_bytes
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy: excluded from the tier-1 default run
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 

@@ -15,6 +15,8 @@ from repro.configs import ARCH_IDS, get_config
 from repro.models import lm
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy: excluded from the tier-1 default run
+
 
 def _inputs(cfg, B=2, S=32):
     toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)

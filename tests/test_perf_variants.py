@@ -17,6 +17,8 @@ from repro.configs import get_config
 from repro.models import layers as L
 from repro.models import lm
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy: excluded from the tier-1 default run
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 

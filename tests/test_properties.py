@@ -1,0 +1,207 @@
+"""Hypothesis property tests: engine equivalence, determinism, and
+scalar-vs-burst channel-I/O equivalence.
+
+The KPN-determinism property (paper Section 2.2): for programs whose tasks
+read from statically-known channels (no select/try polling), every engine
+that completes must produce the *identical* token streams — the schedule
+may differ, the data may not.  The burst extension must preserve this:
+moving the same tokens through ``write_burst``/``read_burst``/
+``read_transaction`` yields byte-identical sequences to scalar ops under
+all three engines.
+
+Requires ``hypothesis`` (see requirements-dev.txt); the whole module is
+skipped on a bare environment.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import repro  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# generated pipeline programs: Source -> N x Transform -> Sink
+# ---------------------------------------------------------------------------
+
+def build_pipeline(values, n_stages, capacity):
+    def Source(o):
+        for v in values:
+            o.write(v)
+        o.close()
+
+    def Transform(i, o, mul, add):
+        for v in i:
+            o.write(v * mul + add)
+        o.close()
+
+    def Sink(i, out):
+        for v in i:
+            out.append(v)
+
+    def Top(out):
+        chans = [repro.channel(capacity=capacity) for _ in range(n_stages + 1)]
+        t = repro.task().invoke(Source, chans[0])
+        for s in range(n_stages):
+            t = t.invoke(Transform, chans[s], chans[s + 1], s + 1, s)
+        t.invoke(Sink, chans[n_stages], out)
+
+    def expect():
+        cur = list(values)
+        for s in range(n_stages):
+            cur = [v * (s + 1) + s for v in cur]
+        return cur
+
+    return Top, expect
+
+
+@given(values=st.lists(st.integers(-100, 100), max_size=20),
+       n_stages=st.integers(1, 4),
+       capacity=st.integers(1, 5))
+@settings(max_examples=25, deadline=None)
+def test_kpn_determinism_across_engines(values, n_stages, capacity):
+    results = {}
+    for eng in ("coroutine", "thread", "sequential"):
+        top, expect = build_pipeline(values, n_stages, capacity)
+        out = []
+        rep = repro.run(top, out, engine=eng)
+        assert rep.ok, (eng, rep.error)
+        results[eng] = out
+        assert out == expect(), eng
+    assert results["coroutine"] == results["thread"] == results["sequential"]
+
+
+@given(values=st.lists(st.integers(-10, 10), min_size=1, max_size=10),
+       capacity=st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_feedback_ring_only_parallel_engines(values, capacity):
+    """A 2-task token ring (feedback): coroutine/thread simulate it,
+    sequential must fail — the paper's central simulation claim."""
+    def A(i, o, sink):
+        o.write(values[0])                     # seed the ring
+        for _ in range(len(values) - 1):
+            v = i.read()
+            sink.append(v)
+            o.write(v + 1)
+        sink.append(i.read())
+
+    def Top(sink):
+        c1 = repro.channel(capacity=capacity)
+        c2 = repro.channel(capacity=capacity)
+
+        def B(i, o):
+            for _ in range(len(values)):
+                o.write(i.read())
+
+        repro.task().invoke(A, c2, c1, sink).invoke(B, c1, c2)
+
+    for eng in ("coroutine", "thread"):
+        sink = []
+        rep = repro.run(Top, sink, engine=eng)
+        assert rep.ok, (eng, rep.error)
+        assert sink == [values[0] + k for k in range(len(values))]
+
+    rep = repro.run(Top, [], engine="sequential")
+    assert not rep.ok
+
+
+# ---------------------------------------------------------------------------
+# burst equivalence: same tokens, same order, every engine, every mix of
+# scalar/burst producer and consumer
+# ---------------------------------------------------------------------------
+
+def build_burst_pipeline(transactions, capacity, wmode, rmode, burst):
+    """Producer sends ``transactions`` (a list of token lists, one EoT
+    each); a consumer drains them.  ``wmode``/``rmode`` select scalar,
+    burst, or transaction-granular I/O on each side."""
+    def Producer(o):
+        for txn in transactions:
+            if wmode == "scalar":
+                for v in txn:
+                    o.write(v)
+            elif wmode == "burst":
+                for base in range(0, len(txn), burst):
+                    o.write_burst(txn[base:base + burst])
+            else:                               # one burst per transaction
+                o.write_burst(txn)
+            o.close()
+
+    def Consumer(i, out):
+        for _ in transactions:
+            if rmode == "scalar":
+                got = [v for v in i]
+            elif rmode == "burst":
+                got = []
+                while True:
+                    chunk = i.read_burst(burst)
+                    got.extend(chunk)
+                    if len(chunk) < burst:
+                        break
+                i.open()
+            else:
+                got = i.read_transaction()
+            out.append(got)
+
+    def Top(out):
+        ch = repro.channel(capacity=capacity)
+        repro.task().invoke(Producer, ch).invoke(Consumer, ch, out)
+
+    return Top
+
+
+@given(transactions=st.lists(
+           st.lists(st.integers(-1000, 1000), max_size=12),
+           min_size=1, max_size=4),
+       capacity=st.integers(1, 6),
+       burst=st.integers(1, 8),
+       wmode=st.sampled_from(["scalar", "burst", "txn"]),
+       rmode=st.sampled_from(["scalar", "burst", "txn"]))
+@settings(max_examples=40, deadline=None)
+def test_burst_scalar_equivalence(transactions, capacity, burst,
+                                  wmode, rmode):
+    """Any mix of scalar/burst producer x scalar/burst consumer moves the
+    identical token sequences under all three engines, with EoT boundaries
+    preserved exactly."""
+    for eng in ("coroutine", "thread", "sequential"):
+        out = []
+        top = build_burst_pipeline(transactions, capacity, wmode, rmode,
+                                   burst)
+        rep = repro.run(top, out, engine=eng)
+        assert rep.ok, (eng, wmode, rmode, rep.error)
+        assert out == transactions, (eng, wmode, rmode)
+
+
+@given(values=st.lists(st.integers(-100, 100), min_size=1, max_size=30),
+       capacity=st.integers(1, 5),
+       burst=st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_burst_stats_match_scalar(values, capacity, burst):
+    """Burst-granular statistics (track_stats=True) count exactly the
+    same tokens as per-token scalar accounting."""
+    reports = {}
+    for mode in ("scalar", "burst"):
+        def Producer(o):
+            if mode == "scalar":
+                for v in values:
+                    o.write(v)
+            else:
+                for base in range(0, len(values), burst):
+                    o.write_burst(values[base:base + burst])
+            o.close()
+
+        def Consumer(i, out):
+            out.extend(i.read_transaction() if mode == "burst"
+                       else [v for v in i])
+
+        def Top(out):
+            ch = repro.channel(capacity=capacity, name="ch")
+            repro.task().invoke(Producer, ch).invoke(Consumer, ch, out)
+
+        out = []
+        rep = repro.run(Top, out, engine="coroutine", track_stats=True)
+        assert rep.ok and out == values
+        reports[mode] = rep
+    assert reports["scalar"].tokens == reports["burst"].tokens == \
+        len(values) + 1                       # data + EoT

@@ -1,0 +1,282 @@
+"""select()/wait_many coverage: the multi-port polling path (paper
+Section 2.2's KPN extension) under both parallel engines.
+
+Covered: already-ready early return, wake-on-push, wake-on-pop,
+stale-epoch invalidation (two watched ports becoming ready for one
+wake), and burst ops interleaving with select().
+"""
+
+import pytest
+
+import repro
+
+PARALLEL = ("coroutine", "thread")
+
+
+# ---------------------------------------------------------------------------
+# already-ready early return
+# ---------------------------------------------------------------------------
+
+def test_select_ready_returns_before_runtime():
+    """select() on an already-ready stream returns without consulting the
+    runtime at all — provable outside any engine, where a blocking wait
+    would raise RuntimeError."""
+    ch = repro.channel()
+    ch._push(1)
+    repro.select(repro.IStream(ch))            # readable: early return
+
+    writable = repro.channel()
+    repro.select(repro.OStream(writable))      # has room: early return
+
+    empty = repro.channel()
+    with pytest.raises(RuntimeError):
+        repro.select(repro.IStream(empty))     # must block: needs a runtime
+
+
+@pytest.mark.parametrize("eng", PARALLEL)
+def test_select_ready_no_switch(eng):
+    """A consumer that only selects on non-empty streams never parks."""
+    def P(o: repro.OStream):
+        for i in range(4):
+            o.write(i)
+        o.close()
+
+    def C(i: repro.IStream, sink):
+        while True:
+            ok, eot = i.try_eot()
+            if not ok:
+                repro.select(i)
+                continue
+            if eot:
+                i.open()
+                return
+            sink.append(i.read())
+
+    def Top(sink):
+        ch = repro.channel(capacity=8)
+        repro.task().invoke(P, ch).invoke(C, ch, sink)
+
+    sink = []
+    rep = repro.run(Top, sink, engine=eng)
+    assert rep.ok and sink == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# wake-on-push / wake-on-pop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("eng", PARALLEL)
+def test_select_wakes_on_push(eng):
+    """A consumer parked in select() on two empty inputs is woken by a
+    producer's push on either one."""
+    def P1(o: repro.OStream):
+        o.write("a")
+        o.close()
+
+    def P2(o: repro.OStream):
+        o.write("b")
+        o.close()
+
+    def C(i1: repro.IStream, i2: repro.IStream, sink):
+        done = [False, False]
+        ins = [i1, i2]
+        while not all(done):
+            moved = False
+            for s in (0, 1):
+                if done[s]:
+                    continue
+                if ins[s].try_open():
+                    done[s] = True
+                    moved = True
+                    continue
+                ok, v = ins[s].try_read()
+                if ok:
+                    sink.append(v)
+                    moved = True
+            if not moved and not all(done):
+                repro.select(*(ins[s] for s in (0, 1) if not done[s]))
+
+    def Top(sink):
+        c1 = repro.channel()
+        c2 = repro.channel()
+        repro.task().invoke(P1, c1).invoke(P2, c2).invoke(C, c1, c2, sink)
+
+    sink = []
+    rep = repro.run(Top, sink, engine=eng)
+    assert rep.ok and sorted(sink) == ["a", "b"]
+
+
+@pytest.mark.parametrize("eng", PARALLEL)
+def test_select_wakes_on_pop(eng):
+    """A producer parked in select() on a full output is woken when the
+    consumer pops a token (writable-side wake)."""
+    def P(o: repro.OStream, n):
+        sent = 0
+        while sent < n:
+            if not o.try_write(sent):
+                repro.select(o)        # park until the consumer makes room
+                continue
+            sent += 1
+        o.close()
+
+    def C(i: repro.IStream, sink):
+        for v in i:
+            sink.append(v)
+
+    def Top(sink):
+        ch = repro.channel(capacity=1)     # every token forces a park
+        repro.task().invoke(P, ch, 5).invoke(C, ch, sink)
+
+    sink = []
+    rep = repro.run(Top, sink, engine=eng)
+    assert rep.ok and sink == list(range(5))
+
+
+# ---------------------------------------------------------------------------
+# stale-epoch invalidation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("eng", PARALLEL)
+def test_select_two_ports_ready_single_wake(eng):
+    """Both watched ports become ready while the selector is parked: the
+    first wake must consume the registration; the second event must find
+    it stale (no double-resume, no lost token).  A burst push makes both
+    tokens arrive 'simultaneously' from the selector's point of view."""
+    def P(o1: repro.OStream, o2: repro.OStream, rounds):
+        for r in range(rounds):
+            o1.write((1, r))
+            o2.write((2, r))
+        o1.close()
+        o2.close()
+
+    def C(i1: repro.IStream, i2: repro.IStream, sink):
+        open_ = [False, False]
+        ins = [i1, i2]
+        while not all(open_):
+            moved = False
+            for s in (0, 1):
+                if open_[s]:
+                    continue
+                if ins[s].try_open():
+                    open_[s] = True
+                    moved = True
+                    continue
+                got = ins[s].try_read_burst(8)
+                if got:
+                    sink.extend(got)
+                    moved = True
+            if not moved and not all(open_):
+                repro.select(*(ins[s] for s in (0, 1) if not open_[s]))
+
+    def Top(sink):
+        c1 = repro.channel(capacity=2)
+        c2 = repro.channel(capacity=2)
+        repro.task().invoke(P, c1, c2, 6).invoke(C, c1, c2, sink)
+
+    sink = []
+    rep = repro.run(Top, sink, engine=eng)
+    assert rep.ok, rep.error
+    assert sorted(sink) == sorted([(p, r) for r in range(6) for p in (1, 2)])
+    # per-stream order must still be FIFO
+    assert [r for p, r in sink if p == 1] == list(range(6))
+    assert [r for p, r in sink if p == 2] == list(range(6))
+
+
+def test_select_stale_epoch_deterministic_schedule():
+    """Under the coroutine engine the stale-epoch discipline must yield a
+    deterministic switch count across repeated runs (a double-resume
+    would desynchronize the baton and change — or hang — the schedule)."""
+    def P(o1: repro.OStream, o2: repro.OStream):
+        for r in range(8):
+            (o1 if r % 2 else o2).write(r)
+        o1.close()
+        o2.close()
+
+    def C(i1: repro.IStream, i2: repro.IStream, sink):
+        open_ = [False, False]
+        ins = [i1, i2]
+        while not all(open_):
+            moved = False
+            for s in (0, 1):
+                if open_[s]:
+                    continue
+                if ins[s].try_open():
+                    open_[s] = True
+                    moved = True
+                    continue
+                ok, v = ins[s].try_read()
+                if ok:
+                    sink.append(v)
+                    moved = True
+            if not moved and not all(open_):
+                repro.select(*(ins[s] for s in (0, 1) if not open_[s]))
+
+    def Top(sink):
+        c1 = repro.channel(capacity=1)
+        c2 = repro.channel(capacity=1)
+        repro.task().invoke(P, c1, c2).invoke(C, c1, c2, sink)
+
+    runs = []
+    for _ in range(3):
+        sink = []
+        rep = repro.run(Top, sink, engine="coroutine")
+        assert rep.ok and sorted(sink) == list(range(8))
+        runs.append((rep.switches, tuple(sink)))
+    assert runs[0] == runs[1] == runs[2]
+
+
+# ---------------------------------------------------------------------------
+# burst ops interleaving with select()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("eng", PARALLEL)
+def test_burst_writer_wakes_selector(eng):
+    """write_burst on a channel whose consumer is parked in select() must
+    wake it exactly like scalar writes do (one wake per burst)."""
+    def P(o: repro.OStream):
+        o.write_burst(list(range(10)))
+        o.close()
+
+    def C(i: repro.IStream, sink):
+        while True:
+            got = i.try_read_burst(4)
+            if got:
+                sink.extend(got)
+                continue
+            if i.try_open():
+                return
+            repro.select(i)
+
+    def Top(sink):
+        ch = repro.channel(capacity=4)
+        repro.task().invoke(P, ch).invoke(C, ch, sink)
+
+    sink = []
+    rep = repro.run(Top, sink, engine=eng)
+    assert rep.ok and sink == list(range(10))
+
+
+@pytest.mark.parametrize("eng", PARALLEL)
+def test_burst_reader_wakes_parked_writer(eng):
+    """A producer parked in select() on a full channel must be woken by
+    the consumer's burst read (writable-side burst wake)."""
+    def P(o: repro.OStream, n):
+        sent = 0
+        while sent < n:
+            k = o.try_write_burst(list(range(sent, n)))
+            sent += k
+            if sent < n and k == 0:
+                repro.select(o)
+        o.close()
+
+    def C(i: repro.IStream, sink):
+        sink.extend(i.read_transaction())
+
+    def Top(sink):
+        ch = repro.channel(capacity=3)
+        repro.task().invoke(P, ch, 11).invoke(C, ch, sink)
+
+    sink = []
+    rep = repro.run(Top, sink, engine=eng)
+    assert rep.ok, rep.error
+    assert sink == list(range(11))
