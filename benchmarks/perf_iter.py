@@ -13,7 +13,17 @@ Each variant records: hypothesis -> napkin-math prediction -> measured
 before/after -> confirmed/refuted.  Variants are CUMULATIVE within a cell
 (each builds on the previous winner) unless marked independent.
 
+Measurements run through the **incremental path** of the compile cache
+(core/compile_cache.py): every (config, shape, sharding, variant) build is
+memoized in the content-addressed store under the structural hash of the
+step function, so re-running the hillclimb after editing ONE variant
+re-measures only that variant — the paper's QoR-tuning cycle shape.  The
+trajectory (per-variant terms + whether the measurement was a memo hit)
+is persisted to ``BENCH_perf_iter.json`` at the repo root alongside the
+other BENCH files.
+
 Run:  PYTHONPATH=src python -m benchmarks.perf_iter [--cell name]
+      [--no-memo]   # force fresh measurements
 """
 
 from __future__ import annotations
@@ -22,26 +32,74 @@ import argparse
 import dataclasses
 import json
 import os
+import time
 from pathlib import Path
 
 OUT = Path(__file__).parent / "out"
+BENCH_JSON = Path(__file__).parent.parent / "BENCH_perf_iter.json"
 
 HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9,
       "hbm_capacity": 16e9}
 
+_CODE_SALT = None
+
+
+def _code_salt() -> str:
+    """Digest of the model/step source tree, folded into memo keys.
+
+    The structural hash covers the step function's own code and closures,
+    but model code reached through module attributes (``lm.loss_fn`` etc.)
+    is hashed by module *name* only — so an edit to src/repro/models or
+    launch/steps.py must dirty the memo some other way: this salt.
+    """
+    global _CODE_SALT
+    if _CODE_SALT is None:
+        import hashlib
+        h = hashlib.sha256()
+        src = Path(__file__).resolve().parents[1] / "src" / "repro"
+        files = sorted((src / "models").glob("*.py")) + \
+            sorted((src / "distributed").glob("*.py")) + \
+            [src / "launch" / "steps.py", src / "launch" / "dryrun.py"]
+        for f in files:
+            h.update(f.name.encode())
+            h.update(f.read_bytes())
+        _CODE_SALT = h.hexdigest()
+    return _CODE_SALT
+
 
 def _measure_variant(cfg, shape, mesh, *, pol=None, scan_layers=True,
-                     remat=True, opt=None):
-    """Full fit-corrected terms + per-device memory for one build."""
+                     remat=True, opt=None, memo=True):
+    """Full fit-corrected terms + per-device memory for one build.
+
+    Each probe build is memoized in the compile cache's JSON store under
+    the structural hash of its step function (which bakes in cfg via its
+    closure) + sharding/mesh geometry: the incremental path.  An edited
+    variant hashes different and re-measures; everything untouched is a
+    digest lookup.
+    """
     import jax
     from benchmarks import roofline as RL
+    from repro.core.compile_cache import default_cache, instance_key
     from repro.launch.dryrun import collective_bytes
     from repro.launch.steps import input_specs
+
+    cc = default_cache() if memo else None
 
     # fit-corrected flops/bytes/coll (handles the scan single-count)
     def meas(c, scan):
         spec = input_specs(c, shape, mesh, pol=pol, scan_layers=scan,
                            remat=remat, opt=opt)
+        key = None
+        if cc is not None:
+            key = instance_key(
+                spec["fn"], spec["args"], {},
+                extra=("perf_iter", _code_salt(), repr(pol), bool(scan),
+                       bool(remat), repr(opt), repr(shape),
+                       tuple(sorted((k, int(v))
+                             for k, v in mesh.shape.items()))))
+            hit = cc.memo_get(key)
+            if hit is not None:
+                return hit
         with mesh:
             compiled = jax.jit(
                 spec["fn"], in_shardings=spec["in_shardings"],
@@ -49,13 +107,20 @@ def _measure_variant(cfg, shape, mesh, *, pol=None, scan_layers=True,
                 donate_argnums=spec["donate_argnums"]).lower(
                     *spec["args"]).compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):      # per-device list on 0.4.x
+            cost = cost[0] if cost else {}
         coll = collective_bytes(compiled.as_text())
         mem = compiled.memory_analysis()
-        return {"flops": float(cost.get("flops", 0.0)),
-                "bytes": float(cost.get("bytes accessed", 0.0)),
-                "coll": float(coll["total_bytes"]),
-                "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
-                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0))}
+        if isinstance(mem, (list, tuple)):
+            mem = mem[0] if mem else None
+        out = {"flops": float(cost.get("flops", 0.0)),
+               "bytes": float(cost.get("bytes accessed", 0.0)),
+               "coll": float(coll["total_bytes"]),
+               "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+               "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0))}
+        if cc is not None:
+            cc.memo_put(key, out)
+        return out
 
     keys = ("flops", "bytes", "coll")
     L = cfg.n_layers
@@ -241,7 +306,8 @@ CELLS = {
 }
 
 
-def run_cell(name: str, builder) -> dict:
+def run_cell(name: str, builder, memo: bool = True) -> dict:
+    from repro.core.compile_cache import default_cache
     from repro.launch.mesh import make_production_mesh
     cfg0, shape, variants = builder()
     mesh = make_production_mesh()
@@ -250,9 +316,13 @@ def run_cell(name: str, builder) -> dict:
     for v in variants:
         cfg = dataclasses.replace(cfg0, **v.get("cfg_kw", {}))
         print(f"[perf:{name}] {v['name']} ...", flush=True)
+        hits0 = default_cache().stats.memo_hits
+        t_meas0 = time.perf_counter()
         try:
             t = _measure_variant(cfg, shape, mesh, pol=v.get("pol"),
-                                 remat=v.get("remat", True))
+                                 remat=v.get("remat", True), memo=memo)
+            t["measure_s"] = round(time.perf_counter() - t_meas0, 3)
+            t["memo_hits"] = default_cache().stats.memo_hits - hits0
             if v.get("analytic_attn_bytes"):
                 # add the flash kernel's own HBM/flop footprint on top of
                 # the score-free build (q/k/v/o streamed once fwd + ~2x in
@@ -288,11 +358,35 @@ def run_cell(name: str, builder) -> dict:
             "variants": rows}
 
 
+def _trajectory(results: dict) -> dict:
+    """Flatten the hillclimb into the shared BENCH schema (one row per
+    (cell, variant) with terms + memoization provenance)."""
+    rows = []
+    for cell in results.values():
+        for v in cell.get("variants", []):
+            if "error" in v:
+                rows.append({"cell": cell["cell"], "variant": v["variant"],
+                             "error": v["error"][:120]})
+                continue
+            rows.append({
+                "cell": cell["cell"], "variant": v["variant"],
+                "compute_s": v["compute_s"], "memory_s": v["memory_s"],
+                "collective_s": v["collective_s"],
+                "dominant": v["dominant"],
+                "measure_s": v.get("measure_s"),
+                "memo_hits": v.get("memo_hits", 0)})
+    return {"benchmark": "perf_iter",
+            "config": {"cells": sorted(results)}, "rows": rows}
+
+
 def main(argv=None):
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=512")
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="all", choices=["all", *CELLS])
+    ap.add_argument("--no-memo", action="store_true",
+                    help="bypass the compile-cache memo (fresh measurement "
+                         "of every variant)")
     args = ap.parse_args(argv)
     OUT.mkdir(exist_ok=True)
     path = OUT / "perf_iter.json"
@@ -300,9 +394,10 @@ def main(argv=None):
     for name, builder in CELLS.items():
         if args.cell not in ("all", name):
             continue
-        results[name] = run_cell(name, builder)
+        results[name] = run_cell(name, builder, memo=not args.no_memo)
         path.write_text(json.dumps(results, indent=1))
     path.write_text(json.dumps(results, indent=1))
+    BENCH_JSON.write_text(json.dumps(_trajectory(results), indent=1) + "\n")
     return results
 
 

@@ -8,7 +8,8 @@ the roofline/dry-run reports.
 Sections:
   Fig. 5/6  lines-of-code with vs without the TAPA APIs   (loc.py)
   Fig. 7    simulation time, 3 engines x 7 benchmarks     (sim_time.py)
-  Fig. 8    hierarchical vs monolithic code generation    (codegen_time.py)
+  Fig. 8    hierarchical vs monolithic codegen + the
+            cold/warm/incremental compile-cache gates     (codegen_time.py)
   S:Dry-run 80-cell lower+compile summary                 (out/dryrun.json)
   S:Roofline three-term table                             (roofline.py)
   S:Perf    hillclimb log                                 (out/perf_iter.json)
@@ -97,8 +98,9 @@ def main(argv=None) -> int:
     section("Fig. 7 + throughput — software simulation (3 engines) and "
             "burst tokens/sec (emits BENCH_sim_time.json)")
     sim_res = sim_time.main(["--quick"] if args.quick else [])
-    section("Fig. 8 — code generation: hierarchical vs monolithic")
-    codegen_time.main()
+    section("Fig. 8 + cache — code generation: hierarchical vs monolithic, "
+            "cold/warm/incremental (emits BENCH_codegen_time.json)")
+    codegen_res = codegen_time.main(["--quick"] if args.quick else [])
     if args.full:
         from benchmarks import roofline
         section("S:Roofline (recomputing)")
@@ -109,8 +111,10 @@ def main(argv=None) -> int:
     roofline_summary()
     section("S:Perf — hillclimb log (3 cells)")
     perf_summary()
-    # propagate the sim_time regression gate through the umbrella runner
-    return 1 if sim_res.get("throughput_regression") else 0
+    # propagate both regression gates through the umbrella runner; the
+    # BENCH_*.json files share one schema (benchmark/config/rows/gates)
+    return 1 if (sim_res.get("throughput_regression")
+                 or codegen_res.get("codegen_regression")) else 0
 
 
 if __name__ == "__main__":

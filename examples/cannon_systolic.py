@@ -34,7 +34,9 @@ def main():
     a = jnp.ones((64, 64), jnp.bfloat16)
     insts = [StageInstance(fn=pe_body, args=(a, a, a), name=f"PE{i}")
              for i in range(64)]
-    rep_h = compile_stages(insts, mode="hierarchical")
+    # cache=False: this comparison isolates the dedup factor — a warm
+    # persistent cache would make hierarchical wall-time trivially ~0
+    rep_h = compile_stages(insts, mode="hierarchical", cache=False)
     insts2 = [StageInstance(fn=pe_body, args=(a, a, a), name=f"PE{i}")
               for i in range(64)]
     rep_m = compile_stages(insts2, mode="monolithic")

@@ -98,3 +98,62 @@ def build(ci: int = 8, co: int = 8, hw: int = 6, k: int = 3,
 def run(engine: str = "coroutine", **kw) -> AppResult:
     top, args, check = build(**kw)
     return simulate("cnn", top, args, engine, check)
+
+
+def jax_stages(ci: int = 8, co: int = 8, hw: int = 6, k: int = 3,
+               P: int = 2, seed: int = 0):
+    """The systolic conv as JAX stages: P*P instances of one PE definition
+    (tile matmul, weight/patch tiles bound per instance) feeding one
+    assembler sink.  All stages are arg-bound — ``source_indices=[]`` —
+    so the program is called with no graph inputs; hierarchical codegen
+    compiles the PE definition once for all P*P instances."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core.hier_compile import StageInstance
+
+    rng = np.random.default_rng(seed)
+    wgt = (rng.standard_normal((co, ci, k, k)) / np.sqrt(ci * k * k)) \
+        .astype(np.float32)
+    img = rng.standard_normal((ci, hw, hw)).astype(np.float32)
+    pad = k // 2
+    xpad = np.pad(img, ((0, 0), (pad, pad), (pad, pad)))
+    cols = np.stack([
+        xpad[:, dy:dy + hw, dx:dx + hw].reshape(ci, -1)
+        for dy in range(k) for dx in range(k)], axis=1)
+    X = cols.reshape(ci * k * k, hw * hw)
+    W = wgt.reshape(co, ci * k * k)
+    ko, kp = co // P, (hw * hw) // P
+
+    def pe(w_tile, x_tile):
+        return jnp.asarray(w_tile) @ jnp.asarray(x_tile)
+
+    def assemble(*tiles):
+        rows = [jnp.concatenate(tiles[i * P:(i + 1) * P], axis=1)
+                for i in range(P)]
+        return jnp.concatenate(rows, axis=0)
+
+    insts = [StageInstance(
+        fn=pe, args=(W[i * ko:(i + 1) * ko].copy(),
+                     X[:, j * kp:(j + 1) * kp].copy()),
+        name=f"PE{i}_{j}")
+        for i in range(P) for j in range(P)]
+    tile_aval = jax.ShapeDtypeStruct((ko, kp), jnp.float32)
+    insts.append(StageInstance(fn=assemble, args=(tile_aval,) * (P * P),
+                               name="Assemble"))
+    wiring = {len(insts) - 1: list(range(P * P))}
+    ref = W @ X
+    return insts, wiring, ref
+
+
+def compile_app(ci: int = 8, co: int = 8, hw: int = 6, k: int = 3,
+                P: int = 2, *, cache=None, prev=None):
+    """Hierarchically compile the systolic conv through the compile cache
+    and return ``(report, program, ref)``."""
+    from ..core.hier_compile import build_dataflow, compile_stages
+
+    insts, wiring, ref = jax_stages(ci=ci, co=co, hw=hw, k=k, P=P)
+    report = compile_stages(insts, mode="hierarchical", cache=cache,
+                            prev=prev)
+    program = build_dataflow(insts, wiring, source_indices=[])
+    return report, program, ref

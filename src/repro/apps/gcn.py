@@ -88,3 +88,71 @@ def build(n_vertices: int = 64, n_edges: int = 256, fin: int = 16,
 def run(engine: str = "coroutine", **kw) -> AppResult:
     top, args, check = build(**kw)
     return simulate("gcn", top, args, engine, check)
+
+
+def jax_stages(n_vertices: int = 64, n_edges: int = 256, fin: int = 16,
+               fout: int = 8, n_parts: int = 4, seed: int = 0):
+    """The GCN layer as JAX stages: per-partition Gather and Dense
+    instances (one definition each) plus a concatenating sink — the same
+    decomposition the streaming version simulates, lowered to XLA with the
+    adjacency slice bound per Gather instance."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core.hier_compile import StageInstance
+
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n_edges)
+    dst = rng.integers(0, n_vertices, n_edges)
+    H = rng.standard_normal((n_vertices, fin)).astype(np.float32)
+    W = (rng.standard_normal((fin, fout)) / np.sqrt(fin)).astype(np.float32)
+    deg = np.bincount(dst, minlength=n_vertices) + 1.0
+    A = np.zeros((n_vertices, n_vertices), np.float32)
+    for s, d in zip(src, dst):
+        A[d, s] += 1.0
+    A += np.eye(n_vertices, dtype=np.float32)
+    A /= deg[:, None].astype(np.float32)
+    part = n_vertices // n_parts
+
+    def gather(a_rows, feats):
+        return jnp.asarray(a_rows) @ jnp.asarray(feats)
+
+    def dense(agg, w):
+        return jnp.maximum(jnp.asarray(agg) @ jnp.asarray(w), 0.0)
+
+    def concat(*rows):
+        return jnp.concatenate(rows, axis=0)
+
+    bounds = [(p * part,
+               n_vertices if p == n_parts - 1 else (p + 1) * part)
+              for p in range(n_parts)]
+    insts = [StageInstance(fn=gather, args=(A[lo:hi].copy(), H),
+                           name=f"Gather{p}")
+             for p, (lo, hi) in enumerate(bounds)]
+    agg_avals = [jax.ShapeDtypeStruct((hi - lo, fin), jnp.float32)
+                 for lo, hi in bounds]
+    insts += [StageInstance(fn=dense, args=(agg_avals[p], W),
+                            name=f"Dense{p}")
+              for p in range(n_parts)]
+    out_avals = [jax.ShapeDtypeStruct((hi - lo, fout), jnp.float32)
+                 for lo, hi in bounds]
+    insts.append(StageInstance(fn=concat, args=tuple(out_avals),
+                               name="Concat"))
+    wiring = {n_parts + p: [p] for p in range(n_parts)}
+    wiring[2 * n_parts] = [n_parts + p for p in range(n_parts)]
+    ref = np.maximum(A @ H @ W, 0.0)
+    return insts, wiring, ref
+
+
+def compile_app(n_vertices: int = 64, n_parts: int = 4, *, cache=None,
+                prev=None, **kw):
+    """Hierarchically compile the GCN layer through the compile cache and
+    return ``(report, program, ref)``."""
+    from ..core.hier_compile import build_dataflow, compile_stages
+
+    insts, wiring, ref = jax_stages(n_vertices=n_vertices,
+                                    n_parts=n_parts, **kw)
+    report = compile_stages(insts, mode="hierarchical", cache=cache,
+                            prev=prev)
+    program = build_dataflow(insts, wiring, source_indices=[])
+    return report, program, ref

@@ -7,6 +7,9 @@ C3: hierarchical (definition-deduplicated, parallel) compilation
 
 from .channel import (EOT, Channel, IStream, OStream, channel, select,
                       READABLE, WRITABLE)
+from .compile_cache import (CacheStats, CompileCache, aval_signature,
+                            default_cache, instance_key, set_default_cache,
+                            structural_digest)
 from .engines import (ENGINES, CoroutineEngine, EngineBase, SequentialEngine,
                       SimReport, ThreadEngine, run)
 from .errors import (ChannelMisuse, Deadlock, EndOfTransaction,
@@ -14,7 +17,7 @@ from .errors import (ChannelMisuse, Deadlock, EndOfTransaction,
                      SequentialSimulationError, TaskKilled)
 from .graph import DefinitionInfo, Graph, elaborate, extract_graph
 from .hier_compile import (CompileReport, DataflowProgram, StageInstance,
-                           compile_stages)
+                           build_dataflow, compile_stages, diff_definitions)
 from .invoke import invoke
 from .task import TaskBuilder, TaskInstance, task
 
@@ -25,6 +28,9 @@ __all__ = [
     "Deadlock", "EndOfTransaction", "GraphValidationError", "ReproError",
     "SequentialSimulationError", "TaskKilled", "DefinitionInfo", "Graph",
     "elaborate", "extract_graph", "CompileReport", "DataflowProgram",
-    "StageInstance", "compile_stages", "TaskBuilder", "TaskInstance", "task",
-    "invoke",
+    "StageInstance", "build_dataflow", "compile_stages",
+    "diff_definitions", "TaskBuilder",
+    "TaskInstance", "task", "invoke", "CacheStats", "CompileCache",
+    "aval_signature", "default_cache", "set_default_cache", "instance_key",
+    "structural_digest",
 ]

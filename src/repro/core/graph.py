@@ -18,6 +18,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from .channel import Channel
+from .compile_cache import structural_digest
 from .engines import EngineBase, SimReport, ENGINES
 from .errors import GraphValidationError
 from .task import TaskInstance
@@ -30,6 +31,7 @@ class DefinitionInfo:
     name: str
     n_instances: int
     instance_names: tuple
+    defn_hash: str = ""
 
 
 @dataclass
@@ -43,17 +45,33 @@ class Graph:
     # ------------------------------------------------------------------
     @property
     def definitions(self) -> list[DefinitionInfo]:
-        """Unique task definitions (paper Table 3 "#Tasks")."""
+        """Unique task definitions (paper Table 3 "#Tasks").
+
+        Keyed by the *structural* hash from
+        :mod:`repro.core.compile_cache` — the same key hierarchical codegen
+        dedups on — so two separately-created closures with the same body
+        count as one definition, exactly as they compile as one.
+        """
         if not self._defs:
-            by_fn: dict[Any, list[TaskInstance]] = {}
+            by_hash: dict[str, list[TaskInstance]] = {}
+            # per-sweep digest memo: N instances of K definitions need K
+            # content hashes (ids are stable while self.instances pins
+            # the fn objects)
+            digests: dict = {}
             for i in self.instances:
-                by_fn.setdefault(i.fn, []).append(i)
+                d = digests.get(id(i.fn))
+                if d is None:
+                    d = digests[id(i.fn)] = structural_digest(i.fn)
+                by_hash.setdefault(d, []).append(i)
             self._defs = {
-                fn: DefinitionInfo(
-                    fn=fn, name=getattr(fn, "__name__", repr(fn)),
+                h: DefinitionInfo(
+                    fn=insts[0].fn,
+                    name=getattr(insts[0].fn, "__name__",
+                                 repr(insts[0].fn)),
                     n_instances=len(insts),
-                    instance_names=tuple(x.name for x in insts))
-                for fn, insts in by_fn.items()
+                    instance_names=tuple(x.name for x in insts),
+                    defn_hash=h)
+                for h, insts in by_hash.items()
             }
         return list(self._defs.values())
 

@@ -18,6 +18,14 @@ This module compiles a task graph of JAX *stage definitions*:
   (XLA compilation releases the GIL), with every instance sharing its
   definition's executable.
 
+Definitions are keyed by the **structural hash** from
+:mod:`repro.core.compile_cache` — bytecode + constants + closure values +
+aval signature — so dedup survives re-created closures and process
+restarts, and compiled executables persist in the content-addressed store.
+Passing the previous :class:`CompileReport` back in enables **incremental
+recompilation**: only definitions whose hash changed are recompiled (the
+paper's QoR-tuning loop — edit one of gaussian's 15 tasks, recompile 1/15).
+
 For layers repeated *inside* one program the same idea appears as
 ``lax.scan`` over stacked weights (compile the body once) versus an
 unrolled Python loop (recompile/optimize N inlined copies); see
@@ -27,26 +35,16 @@ unrolled Python loop (recompile/optimize N inlined copies); see
 from __future__ import annotations
 
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
 
 import jax
 import numpy as np
 
-
-def _aval_signature(args: tuple, kwargs: dict) -> tuple:
-    """Shape/dtype signature of array-like args (ShapeDtypeStruct aware)."""
-    def one(x):
-        if hasattr(x, "shape") and hasattr(x, "dtype"):
-            return ("arr", tuple(x.shape), str(x.dtype))
-        if isinstance(x, (list, tuple)):
-            return ("seq", tuple(one(v) for v in x))
-        if isinstance(x, dict):
-            return ("map", tuple(sorted((k, one(v)) for k, v in x.items())))
-        return ("lit", repr(x))
-    return (tuple(one(a) for a in args),
-            tuple(sorted((k, one(v)) for k, v in kwargs.items())))
+from .compile_cache import (CompileCache, aval_signature, default_cache,
+                            instance_key, structural_digest)
 
 
 @dataclass
@@ -59,8 +57,27 @@ class StageInstance:
     executable: Any = None
 
     @property
-    def key(self) -> tuple:
-        return (id(self.fn), _aval_signature(self.args, self.kwargs))
+    def key(self) -> str:
+        """Structural cache key: stable across processes and re-created
+        closures (content digest, not ``id(fn)``)."""
+        return instance_key(self.fn, self.args, self.kwargs)
+
+    @property
+    def definition_hash(self) -> str:
+        """Digest of the definition alone (no input signature)."""
+        return structural_digest(self.fn)
+
+    @property
+    def legacy_key(self) -> tuple:
+        """Deprecated ``(id(fn), aval_signature)`` key.
+
+        Object ids are reused after GC and differ across processes, causing
+        both false sharing and missed dedup; use :attr:`key`.
+        """
+        warnings.warn("StageInstance.legacy_key is deprecated: id(fn) keys "
+                      "are unstable across GC and processes; use .key",
+                      DeprecationWarning, stacklevel=2)
+        return (id(self.fn), aval_signature(self.args, self.kwargs))
 
 
 @dataclass
@@ -70,10 +87,48 @@ class CompileReport:
     n_unique: int
     wall_s: float
     per_key_s: dict = field(default_factory=dict)
+    # key -> "compiled" | "memory" | "disk" | "prev" (where it came from)
+    sources: dict = field(default_factory=dict)
+    executables: dict = field(default_factory=dict, repr=False)
+    cache_stats: dict = field(default_factory=dict)
+
+    def _count(self, *srcs: str) -> int:
+        return sum(1 for s in self.sources.values() if s in srcs)
+
+    @property
+    def n_compiled(self) -> int:
+        """Actual XLA compilations performed (the expensive part)."""
+        return self._count("compiled")
+
+    @property
+    def n_cache_hits(self) -> int:
+        return self._count("memory", "disk")
+
+    @property
+    def n_reused(self) -> int:
+        """Definitions carried over unchanged from the previous report."""
+        return self._count("prev")
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (f"<CompileReport {self.mode} {self.wall_s:.3f}s "
-                f"instances={self.n_instances} unique={self.n_unique}>")
+                f"instances={self.n_instances} unique={self.n_unique} "
+                f"compiled={self.n_compiled} hits={self.n_cache_hits} "
+                f"reused={self.n_reused}>")
+
+
+def diff_definitions(prev: Optional[CompileReport],
+                     instances: list[StageInstance]) -> tuple[set, set]:
+    """Split the instance key-set into (clean, dirty) against ``prev``.
+
+    A key is *clean* when the previous report compiled it (same structural
+    hash — same bytecode, constants, closure values, and input signature);
+    anything else — a new definition or an edited one — is *dirty*.
+    """
+    keys = {i.key for i in instances}
+    if prev is None:
+        return set(), keys
+    clean = {k for k in keys if k in prev.executables}
+    return clean, keys - clean
 
 
 def _compile_one(fn: Callable, args: tuple, kwargs: dict) -> Any:
@@ -82,10 +137,41 @@ def _compile_one(fn: Callable, args: tuple, kwargs: dict) -> Any:
 
 
 def compile_stages(instances: list[StageInstance], mode: str = "hierarchical",
-                   max_workers: Optional[int] = None) -> CompileReport:
-    """Compile every stage instance; attaches executables in place."""
+                   max_workers: Optional[int] = None, *,
+                   cache: Union[CompileCache, None, bool] = None,
+                   prev: Optional[CompileReport] = None) -> CompileReport:
+    """Compile every stage instance; attaches executables in place.
+
+    ``cache``: a :class:`CompileCache`, ``None`` for the process default, or
+    ``False`` to bypass persistence (pure in-process dedup, the seed
+    behaviour).  ``prev``: a previous report — unchanged definitions reuse
+    its executables without even a cache probe (incremental recompilation).
+    Monolithic mode never consults the cache: it *is* the paper's baseline.
+    """
     t0 = time.perf_counter()
     per_key: dict = {}
+    sources: dict = {}
+    executables: dict = {}
+    cc: Optional[CompileCache]
+    if mode == "monolithic" or cache is False:
+        cc = None
+    elif cache is None or cache is True:
+        cc = default_cache()
+    else:
+        cc = cache
+
+    # per-call digest memo: N instances of K definitions need K content
+    # hashes, not N (safe within one call — the list pins the fn objects,
+    # so ids can't be recycled; a cross-call memo would go stale on
+    # in-place weight edits, see structural_digest)
+    digests: dict[int, str] = {}
+
+    def key_of(inst: StageInstance) -> str:
+        d = digests.get(id(inst.fn))
+        if d is None:
+            d = digests[id(inst.fn)] = structural_digest(inst.fn)
+        return instance_key(inst.fn, inst.args, inst.kwargs, digest=d)
+
     if mode == "monolithic":
         # paper-baseline behaviour: every instance compiled separately, "as
         # if they are completely unrelated" (S1).  Each instance gets a
@@ -95,34 +181,50 @@ def compile_stages(instances: list[StageInstance], mode: str = "hierarchical",
             t1 = time.perf_counter()
             fresh = (lambda f: lambda *a, **k: f(*a, **k))(inst.fn)
             inst.executable = _compile_one(fresh, inst.args, inst.kwargs)
-            per_key[f"{n}:{inst.name or 'inst'}"] = \
-                time.perf_counter() - t1
-        uniq = len({i.key for i in instances})
+            k = f"{n}:{inst.name or 'inst'}"
+            per_key[k] = time.perf_counter() - t1
+            sources[k] = "compiled"
+            # keyed by structural key too, so even a baseline report works
+            # as prev= for an incremental follow-up
+            executables[key_of(inst)] = inst.executable
+        uniq = len({key_of(i) for i in instances})
     elif mode == "hierarchical":
-        groups: dict[tuple, list[StageInstance]] = {}
+        groups: dict[str, list[StageInstance]] = {}
         for inst in instances:
-            groups.setdefault(inst.key, []).append(inst)
+            groups.setdefault(key_of(inst), []).append(inst)
         uniq = len(groups)
 
         def job(key_insts):
             key, insts = key_insts
             t1 = time.perf_counter()
-            exe = _compile_one(insts[0].fn, insts[0].args, insts[0].kwargs)
+            rep = insts[0]
+            if prev is not None and key in prev.executables:
+                exe, source = prev.executables[key], "prev"
+            elif cc is not None:
+                exe, source = cc.compile_cached(
+                    rep.fn, rep.args, rep.kwargs, key=key)
+            else:
+                exe, source = _compile_one(rep.fn, rep.args, rep.kwargs), \
+                    "compiled"
             for i in insts:
                 i.executable = exe
-            return key, time.perf_counter() - t1
+            return key, exe, source, time.perf_counter() - t1
 
         # XLA compilation drops the GIL, so a thread pool gives true
         # parallel codegen on multi-core build hosts (paper: "TAPA runs HLS
         # in parallel on multi-core machines").
         with ThreadPoolExecutor(max_workers=max_workers) as pool:
-            for key, dt in pool.map(job, groups.items()):
+            for key, exe, source, dt in pool.map(job, groups.items()):
                 per_key[key] = dt
+                sources[key] = source
+                executables[key] = exe
     else:
         raise ValueError(f"unknown mode {mode!r}")
     return CompileReport(mode=mode, n_instances=len(instances),
                          n_unique=uniq, wall_s=time.perf_counter() - t0,
-                         per_key_s=per_key)
+                         per_key_s=per_key, sources=sources,
+                         executables=executables,
+                         cache_stats=cc.stats.as_dict() if cc else {})
 
 
 # ---------------------------------------------------------------------------
@@ -135,27 +237,74 @@ class DataflowProgram:
 
     ``wiring`` maps each stage to (input stage indices); stage i consumes
     the outputs of its listed predecessors (in order) plus its bound args.
+    ``source_indices`` lists the stages fed by graph inputs, positionally;
+    when omitted it defaults to every stage with no predecessors.  Calling
+    the program with the wrong number of inputs raises — inputs are never
+    silently dropped or misassigned.  The call returns the outputs of every
+    *sink* stage (a stage no other stage consumes): the bare value for a
+    single sink, a tuple for several.
+
     This executor covers feed-forward graphs (systolic arrays, stencil
     pipelines); graphs with feedback run under the simulation engines or
     the pipeline-parallel schedule in ``repro.distributed.pipeline``.
     """
     instances: list[StageInstance]
     wiring: dict = field(default_factory=dict)   # idx -> list[pred idx]
+    source_indices: Optional[list] = None        # stages fed by graph inputs
+
+    def sources(self) -> list:
+        if self.source_indices is not None:
+            return list(self.source_indices)
+        return [i for i in range(len(self.instances))
+                if not self.wiring.get(i)]
+
+    def sinks(self) -> list:
+        consumed = {p for preds in self.wiring.values() for p in preds}
+        return [i for i in range(len(self.instances)) if i not in consumed]
 
     def __call__(self, *graph_inputs):
+        srcs = self.sources()
+        if len(graph_inputs) != len(srcs):
+            raise ValueError(
+                f"DataflowProgram: got {len(graph_inputs)} graph input(s) "
+                f"for {len(srcs)} source stage(s) {srcs}; pass exactly one "
+                f"input per source (or set source_indices explicitly)")
+        feed = dict(zip(srcs, graph_inputs))
         outputs: dict[int, Any] = {}
-        feed = list(graph_inputs)
         for idx, inst in enumerate(self.instances):
-            preds = self.wiring.get(idx, [])
-            ins = [outputs[p] for p in preds]
-            if not preds and feed:
-                ins = [feed.pop(0)]
+            ins = [outputs[p] for p in self.wiring.get(idx, [])]
+            if idx in feed:
+                ins = [feed[idx]] + ins
             if inst.executable is not None:
                 outputs[idx] = inst.executable(*ins, *inst.args,
                                                **inst.kwargs)
             else:
                 outputs[idx] = inst.fn(*ins, *inst.args, **inst.kwargs)
-        return outputs[len(self.instances) - 1]
+        outs = [outputs[i] for i in self.sinks()]
+        return outs[0] if len(outs) == 1 else tuple(outs)
+
+
+def build_dataflow(instances: list[StageInstance], wiring: dict,
+                   source_indices: Optional[list] = None) -> DataflowProgram:
+    """Wrap compiled stage instances into a runnable DataflowProgram.
+
+    Convention: a fed stage's *leading* bound args are compile-time
+    placeholders for its runtime inputs — one per wired predecessor, plus
+    one if the stage receives a graph input.  The program gets *copies*
+    with those placeholders stripped (at call time the graph supplies the
+    real values); the caller's instances keep their compile-time args, so
+    their cache keys stay valid for a later incremental
+    ``compile_stages(..., prev=report)``.
+    """
+    from dataclasses import replace
+    prog = DataflowProgram(instances=list(instances), wiring=wiring,
+                           source_indices=source_indices)
+    fed = set(prog.sources())
+    prog.instances = [
+        replace(inst, args=inst.args[len(wiring.get(idx, ())) +
+                                     (1 if idx in fed else 0):])
+        for idx, inst in enumerate(instances)]
+    return prog
 
 
 def hashable_definition_count(instances: list[StageInstance]) -> tuple:

@@ -36,6 +36,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                    # moved to jax.shard_map in 0.5+
+    _shard_map = jax.shard_map
+except AttributeError:                  # pragma: no cover - version compat
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
 from ..core import channel, task
 from ..core.engines import ENGINES, SimReport
 
@@ -160,14 +169,49 @@ def spmd_pipeline(stage_fn: Callable, n_stages: int, n_microbatches: int,
     return pipe
 
 
+def compile_pipeline(mesh: Mesh, stage_fn: Callable, stacked_params: Any,
+                     microbatches: jax.Array, *, axis: str = "stage",
+                     cache=None):
+    """AOT-compile the shard_mapped GPipe body through the compile cache.
+
+    The cache key is the *user's stage definition* (structural hash — the
+    shard_map wrapper's internals would only add noise) plus the digest of
+    the schedule builder itself (editing ``spmd_pipeline``'s
+    ppermute/rotation logic must dirty cached pipelines), the schedule
+    geometry, and the mesh topology.  An unchanged pipeline loads from the
+    content-addressed store instead of re-lowering; editing the stage body
+    or the schedule dirties exactly this entry.  Returns
+    ``(executable, source)``.
+    """
+    from ..core.compile_cache import default_cache, structural_digest
+    S = mesh.shape[axis]
+    M = microbatches.shape[0]
+    pipe = spmd_pipeline(stage_fn, S, M, axis)
+    shmapped = _shard_map(
+        pipe, mesh=mesh,
+        in_specs=(P(axis), P()), out_specs=P(),
+        check_vma=False)
+    cc = cache if cache is not None else default_cache()
+    return cc.compile_cached(
+        shmapped, (stacked_params, microbatches),
+        hash_fn=stage_fn,
+        extra=("spmd_pipeline", structural_digest(spmd_pipeline),
+               axis, int(S), int(M),
+               tuple(sorted((k, int(v)) for k, v in mesh.shape.items())),
+               tuple(str(d) for d in mesh.devices.flat)))
+
+
 def pipeline_apply(mesh: Mesh, stage_fn: Callable, stacked_params: Any,
                    microbatches: jax.Array, *, axis: str = "stage",
-                   verify: bool = True) -> jax.Array:
+                   verify: bool = True, cache=False) -> jax.Array:
     """High-level entry: verify the schedule in simulation (C2), then run
     the compiled pipeline on the mesh.
 
     ``stacked_params``: pytree with a leading [S, ...] stage axis.
-    ``microbatches``: [M, mb, ...].
+    ``microbatches``: [M, mb, ...].  ``cache``: ``False`` traces eagerly
+    (the seed behaviour); ``None`` routes the compile through the
+    process-default :class:`~repro.core.compile_cache.CompileCache`; a
+    cache instance uses that store.
     """
     S = mesh.shape[axis]
     M = microbatches.shape[0]
@@ -178,8 +222,13 @@ def pipeline_apply(mesh: Mesh, stage_fn: Callable, stacked_params: Any,
                                f"{rep.error}")
         assert rep.result == list(range(M)), "schedule is not FIFO"
 
+    if cache is not False:
+        exe, _ = compile_pipeline(mesh, stage_fn, stacked_params,
+                                  microbatches, axis=axis, cache=cache)
+        return exe(stacked_params, microbatches)
+
     pipe = spmd_pipeline(stage_fn, S, M, axis)
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         pipe, mesh=mesh,
         in_specs=(P(axis), P()), out_specs=P(),
         check_vma=False)
@@ -201,7 +250,7 @@ def pipeline_loss_fn(mesh: Mesh, stage_fn: Callable, loss_tail: Callable,
             outs = pipe(params, xs)                    # [M, mb, ...]
             return loss_tail(outs, ys)
 
-        shmapped = jax.shard_map(
+        shmapped = _shard_map(
             body, mesh=mesh, in_specs=(P(axis), P(), P()),
             out_specs=P(), check_vma=False)
         return shmapped(stacked_params, microbatches, labels)

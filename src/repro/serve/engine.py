@@ -61,6 +61,34 @@ class ServingEngine:
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
         self.pad = pad_token
+        self._aot_prefill: dict = {}       # (B, S) -> executable
+        self._aot_decode: Optional[tuple] = None   # (aval sig, executable)
+
+    # -- warmup through the persistent compile cache --------------------------
+
+    def warmup(self, prompt_len: int = 8, cache=None) -> dict:
+        """AOT-compile prefill/decode through the compile cache.
+
+        The first request a serving process sees should not pay an XLA
+        compile: warmup resolves both steps from the content-addressed
+        store (populated by any previous process running the same model
+        and shapes) and pins the executables for the decode loop.  Toy
+        engines whose step functions are not jittable fall back to eager
+        with ``{"ok": False}`` — warmup never breaks serving.
+        """
+        from ..core.compile_cache import aval_signature, default_cache
+        cc = cache if cache is not None else default_cache()
+        toks = np.zeros((1, prompt_len), np.int32)
+        try:
+            pre, src_p = cc.compile_cached(self.prefill_fn, (toks,))
+            _, kv = pre(toks)
+            tok = np.zeros((1,), np.int32)
+            dec, src_d = cc.compile_cached(self.decode_fn, (tok, kv))
+        except Exception as e:  # noqa: BLE001 - non-jittable step fns
+            return {"ok": False, "reason": repr(e)[:200]}
+        self._aot_prefill[(1, prompt_len)] = pre
+        self._aot_decode = (aval_signature((tok, kv), {}), dec)
+        return {"ok": True, "prefill": src_p, "decode": src_d}
 
     # -- task bodies ---------------------------------------------------------
 
@@ -141,17 +169,36 @@ class ServingEngine:
         for s in slots:
             if s is not None and "cache" not in s:
                 toks = np.asarray(s["prompt"], np.int32)[None, :]
-                logits, cache = self.prefill_fn(toks)
+                prefill = self._aot_prefill.get(toks.shape,
+                                                self.prefill_fn)
+                logits, cache = prefill(toks)
                 s["cache"] = cache
                 s["next"] = int(np.argmax(np.asarray(logits)[0]))
                 s["new"].append(s["next"])
+                # decide the AOT-vs-eager decode path once per slot, not
+                # per token (the kv signature is fixed after prefill)
+                if self._aot_decode is not None:
+                    from ..core.compile_cache import aval_signature
+                    sig, exe = self._aot_decode
+                    tok0 = np.zeros((1,), np.int32)
+                    s["aot_decode"] = exe if aval_signature(
+                        (tok0, cache), {}) == sig else None
         # decode all live slots (packed batch; a production engine packs
         # caches — here each slot decodes its own cache)
         for s in slots:
             if s is None or len(s["new"]) >= s["max_new"]:
                 continue
             tok = np.asarray([s["next"]], np.int32)
-            logits, s["cache"] = self.decode_fn(tok, s["cache"])
+            decode = s.get("aot_decode") or self.decode_fn
+            try:
+                logits, s["cache"] = decode(tok, s["cache"])
+            except (TypeError, ValueError):
+                # a decode_fn that reshapes its cache mid-stream falls off
+                # the AOT fast path instead of erroring
+                if decode is self.decode_fn:
+                    raise
+                s["aot_decode"] = None
+                logits, s["cache"] = self.decode_fn(tok, s["cache"])
             s["next"] = int(np.argmax(np.asarray(logits)[0]))
             s["new"].append(s["next"])
 

@@ -1,0 +1,163 @@
+"""Graph metadata IR: validate / to_dot / dedup_factor on multi-level
+graphs, plus the structural-hash definition dedup (no XLA — tier-1)."""
+
+import pytest
+
+from repro.core import channel, elaborate, task
+from repro.core.errors import GraphValidationError
+
+
+def _chain_top(n_mid: int = 2):
+    """Top -> [Mid_i] -> Sink where each Mid spawns two Leaf children
+    connected by a channel created *inside* Mid (same-parent rule)."""
+
+    def Leaf(inp, out):
+        for v in inp:
+            out.write(v * 2)
+        out.close()
+
+    def Tail(inp, out):
+        for v in inp:
+            out.write(v + 1)
+        out.close()
+
+    def Mid(inp, out):
+        inner = channel(capacity=4, name="inner")
+        task().invoke(Leaf, inp, inner).invoke(Tail, inner, out)
+
+    def Src(out):
+        for v in range(4):
+            out.write(v)
+        out.close()
+
+    def Sink(inp, acc: list):
+        for v in inp:
+            acc.append(v)
+
+    acc: list = []
+
+    def Top():
+        chans = [channel(capacity=4, name=f"c{i}")
+                 for i in range(n_mid + 1)]
+        t = task().invoke(Src, chans[0])
+        for i in range(n_mid):
+            t = t.invoke(Mid, chans[i], chans[i + 1], name=f"Mid{i}")
+        t.invoke(Sink, chans[n_mid], acc)
+
+    return Top, acc
+
+
+def test_multilevel_validate_and_counts():
+    top, acc = _chain_top(n_mid=2)
+    g = elaborate(top)                     # validates internally
+    assert acc == [((v * 2) + 1) * 2 + 1 for v in range(4)]
+    # two levels: Top at level 0, Src/Mid/Sink at 1, Leaf/Tail at 2
+    levels = {i.level for i in g.instances}
+    assert levels == {0, 1, 2}
+    # definitions dedup across the two Mid subtrees: Leaf appears twice as
+    # an instance but once as a definition (same for Tail and Mid)
+    names = {d.name: d.n_instances for d in g.definitions}
+    assert names["Leaf"] == 2 and names["Tail"] == 2 and names["Mid"] == 2
+    assert g.n_instances == 1 + 1 + 2 + 1 + 4   # Top+Src+Mids+Sink+leaves
+    assert g.dedup_factor() == pytest.approx(g.n_instances / g.n_tasks)
+    assert all(d.defn_hash for d in g.definitions)
+
+
+def test_definitions_dedup_recreated_closures():
+    """Two *separately created* identical task closures are one definition
+    under the structural hash (id(fn) would count two)."""
+
+    def make_worker():
+        def Worker(inp, acc: list):
+            for v in inp:
+                acc.append(v)
+        return Worker
+
+    acc: list = []
+
+    def Top():
+        a = channel(capacity=4, name="a")
+        b = channel(capacity=4, name="b")
+
+        def Src2(o1, o2):
+            o1.write(1)
+            o1.close()
+            o2.write(2)
+            o2.close()
+
+        task().invoke(Src2, a, b) \
+              .invoke(make_worker(), a, acc, name="w0") \
+              .invoke(make_worker(), b, acc, name="w1")
+
+    g = elaborate(top=Top)
+    workers = [d for d in g.definitions if d.name == "Worker"]
+    assert len(workers) == 1 and workers[0].n_instances == 2
+
+
+def test_validate_reports_missing_endpoints():
+    def Src(out, dangling):
+        out.write(1)
+        out.close()
+        dangling.write(99)          # written but never read
+
+    def Sink(inp):
+        for _ in inp:
+            pass
+
+    def Top():
+        c = channel(capacity=4, name="c")
+        d = channel(capacity=4, name="dangling")
+        task().invoke(Src, c, d).invoke(Sink, c)
+
+    g = elaborate(Top, validate=False)
+    with pytest.raises(GraphValidationError, match="dangling"):
+        g.validate()
+
+
+def test_validate_rejects_cross_parent_and_loopback():
+    """Section 3.1.1: both endpoints under one parent, and no task may be
+    its own peer.  The builder API binds endpoints at invoke time so these
+    states can't arise from it — construct the IR directly."""
+    from repro.core.channel import Channel
+    from repro.core.graph import Graph
+    from repro.core.task import TaskInstance
+
+    def noop():
+        pass
+
+    top = TaskInstance(noop, (), {}, False, None, name="Top")
+    mid = TaskInstance(noop, (), {}, False, top, name="Mid")
+    leaf = TaskInstance(noop, (), {}, False, mid, name="Leaf")
+    sink = TaskInstance(noop, (), {}, False, top, name="Sink")
+
+    xp = Channel(2, "xparent")
+    xp.producer, xp.consumer = leaf, sink       # level 2 -> level 1
+    g = Graph(instances=[top, mid, leaf, sink], channels=[xp])
+    with pytest.raises(GraphValidationError, match="different"):
+        g.validate()
+
+    loop = Channel(2, "loopy")
+    loop.producer = loop.consumer = sink
+    g2 = Graph(instances=[top, sink], channels=[loop])
+    with pytest.raises(GraphValidationError, match="loops back"):
+        g2.validate()
+
+
+def test_to_dot_multilevel():
+    top, _ = _chain_top(n_mid=1)
+    g = elaborate(top)
+    dot = g.to_dot()
+    assert dot.startswith("digraph G {") and dot.endswith("}")
+    # parent tasks render as boxes, leaves as ellipses
+    assert "shape=box" in dot and "shape=ellipse" in dot
+    # every validated channel appears as an edge with its capacity
+    assert "inner/4" in dot and "c0/4" in dot
+    # one node line per instance (edges carry labels too, so count shapes)
+    assert dot.count("shape=") == g.n_instances
+
+
+def test_summary_mentions_dedup():
+    top, _ = _chain_top(n_mid=3)
+    g = elaborate(top)
+    s = g.summary()
+    assert "dedup=" in s and "instances=" in s

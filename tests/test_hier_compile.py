@@ -25,7 +25,7 @@ def test_dedup_counts():
     insts = [StageInstance(fn=f_double, args=(x,), name=f"d{i}")
              for i in range(5)]
     insts += [StageInstance(fn=f_inc, args=(x,), name="i0")]
-    rep = compile_stages(insts, mode="hierarchical")
+    rep = compile_stages(insts, mode="hierarchical", cache=False)
     assert rep.n_instances == 6 and rep.n_unique == 2
     assert all(i.executable is not None for i in insts)
     # all instances of the same definition share one executable object
@@ -39,7 +39,7 @@ def test_shape_signature_splits_definitions():
     b = jnp.ones((8, 8))
     insts = [StageInstance(fn=f_double, args=(a,)),
              StageInstance(fn=f_double, args=(b,))]
-    rep = compile_stages(insts, mode="hierarchical")
+    rep = compile_stages(insts, mode="hierarchical", cache=False)
     assert rep.n_unique == 2
 
 
@@ -56,7 +56,7 @@ def test_monolithic_and_hierarchical_agree():
                                wiring={1: [0], 2: [1]})
         compile_stages(
             [StageInstance(fn=i.fn, args=(x,), name=str(k))
-             for k, i in enumerate(insts)], mode=mode)
+             for k, i in enumerate(insts)], mode=mode, cache=False)
         # executables compiled per shape; run program uncompiled for wiring
         out = prog(x)
         np.testing.assert_allclose(np.asarray(out),
@@ -74,6 +74,123 @@ def test_hierarchical_faster_or_equal_with_dedup():
     jax.clear_caches()
     insts_h = [StageInstance(fn=(f_double if i % 2 else f_inc), args=(x,))
                for i in range(12)]
-    rep_h = compile_stages(insts_h, mode="hierarchical")
+    # cache=False: don't write persistent executables into ~/.cache as a
+    # test side effect (and keep the compile-count comparison honest)
+    rep_h = compile_stages(insts_h, mode="hierarchical", cache=False)
     assert rep_h.n_unique == 2
     assert len(rep_h.per_key_s) == 2 and len(rep_m.per_key_s) == 12
+
+
+# ---------------------------------------------------------------------------
+# DataflowProgram input feeding / sink collection
+# ---------------------------------------------------------------------------
+
+def test_dataflow_multi_source_feeds_by_index():
+    """Inputs map to source stages by stage index, not arrival order of a
+    shrinking feed list (the old ``feed.pop(0)`` silently misassigned)."""
+    insts = [StageInstance(fn=f_double),        # source 0
+             StageInstance(fn=f_inc),           # source 1
+             StageInstance(fn=lambda a, b: a + b)]
+    prog = DataflowProgram(instances=insts, wiring={2: [0, 1]})
+    assert prog.sources() == [0, 1] and prog.sinks() == [2]
+    a = jnp.full((2, 2), 3.0)
+    b = jnp.full((2, 2), 10.0)
+    out = prog(a, b)                             # (a*2) + (b+1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a * 2 + b + 1))
+
+
+def test_dataflow_arity_mismatch_raises():
+    insts = [StageInstance(fn=f_double), StageInstance(fn=f_inc),
+             StageInstance(fn=lambda a, b: a + b)]
+    prog = DataflowProgram(instances=insts, wiring={2: [0, 1]})
+    x = jnp.ones((2, 2))
+    with pytest.raises(ValueError, match="source stage"):
+        prog(x)                                  # too few
+    with pytest.raises(ValueError, match="source stage"):
+        prog(x, x, x)                            # extras are not dropped
+
+
+def test_dataflow_returns_all_sinks():
+    """A fan-out graph returns every sink's output, not whichever stage
+    happens to be listed last."""
+    insts = [StageInstance(fn=f_inc),            # source
+             StageInstance(fn=f_double),         # sink A
+             StageInstance(fn=lambda x: x - 1.0)]  # sink B
+    prog = DataflowProgram(instances=insts, wiring={1: [0], 2: [0]})
+    assert prog.sinks() == [1, 2]
+    x = jnp.full((2, 2), 4.0)
+    out_a, out_b = prog(x)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray((x + 1) * 2))
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(x))
+
+
+def test_dataflow_explicit_source_indices():
+    """Arg-bound generators opt out of graph feeding explicitly."""
+    insts = [StageInstance(fn=f_inc, args=(jnp.ones((2, 2)),)),
+             StageInstance(fn=f_double)]
+    prog = DataflowProgram(instances=insts, wiring={1: [0]},
+                           source_indices=[])
+    np.testing.assert_allclose(np.asarray(prog()), 4.0)
+
+
+# ---------------------------------------------------------------------------
+# incremental recompilation (QoR-tuning loop)
+# ---------------------------------------------------------------------------
+
+def test_build_dataflow_preserves_compile_keys(tmp_path):
+    """build_dataflow strips input placeholders on *copies*: the caller's
+    instances keep their compile-time args, so the same list still keys
+    correctly in a later incremental compile_stages."""
+    from repro.core.compile_cache import CompileCache
+    from repro.core.hier_compile import build_dataflow
+
+    def make(c):
+        def f(x):
+            return x * c
+        return f
+
+    x = jnp.ones((4, 4))
+    insts = [StageInstance(fn=make(2.0), args=(x,), name="s0"),
+             StageInstance(fn=make(3.0), args=(x,), name="s1")]
+    rep = compile_stages(insts, cache=CompileCache(root=tmp_path))
+    prog = build_dataflow(insts, {1: [0]})
+    np.testing.assert_allclose(np.asarray(prog(x)), np.asarray(x) * 6.0)
+    assert insts[0].args == (x,)            # originals untouched
+    rep2 = compile_stages(insts, cache=CompileCache(root=tmp_path / "b"),
+                          prev=rep)
+    assert rep2.n_reused == 2 and rep2.n_compiled == 0
+
+
+def test_monolithic_report_works_as_prev():
+    """Even a baseline (monolithic) report carries structural-keyed
+    executables, so prev= reuse isn't silently void for one mode."""
+    x = jnp.ones((4, 4))
+    rep_m = compile_stages([StageInstance(fn=f_double, args=(x,))],
+                           mode="monolithic")
+    rep = compile_stages([StageInstance(fn=f_double, args=(x,))],
+                         cache=False, prev=rep_m)
+    assert rep.n_reused == 1 and rep.n_compiled == 0
+
+
+def test_incremental_prev_report_reuses_clean_definitions(tmp_path):
+    from repro.core.compile_cache import CompileCache
+
+    def make(c):
+        def f(x):
+            return x * c
+        return f
+
+    x = jnp.ones((8, 8))
+
+    def insts(coefs):
+        return [StageInstance(fn=make(c), args=(x,)) for c in coefs]
+
+    cc = CompileCache(root=tmp_path)
+    prev = compile_stages(insts([1.0, 2.0]), cache=cc)
+    assert prev.n_compiled == 2
+    rep = compile_stages(insts([1.0, 5.0]),
+                         cache=CompileCache(root=tmp_path / "b"), prev=prev)
+    assert rep.n_reused == 1 and rep.n_compiled == 1
+    # the reused executable is the very object from the previous report
+    clean_key = StageInstance(fn=make(1.0), args=(x,)).key
+    assert rep.executables[clean_key] is prev.executables[clean_key]
