@@ -10,6 +10,7 @@ Sections:
   Fig. 7    simulation time, 3 engines x 7 benchmarks     (sim_time.py)
   Fig. 8    hierarchical vs monolithic codegen + the
             cold/warm/incremental compile-cache gates     (codegen_time.py)
+  S:Serve   decode tokens/sec, per-slot vs batched        (serve_time.py)
   S:Dry-run 80-cell lower+compile summary                 (out/dryrun.json)
   S:Roofline three-term table                             (roofline.py)
   S:Perf    hillclimb log                                 (out/perf_iter.json)
@@ -91,7 +92,7 @@ def main(argv=None) -> int:
                     help="CI smoke: shrink the simulation/throughput sizes")
     args = ap.parse_args(argv)
 
-    from benchmarks import codegen_time, loc, sim_time
+    from benchmarks import codegen_time, loc, serve_time, sim_time
 
     section("Fig. 5/6 — lines of code (with vs without TAPA APIs)")
     loc.main()
@@ -101,6 +102,9 @@ def main(argv=None) -> int:
     section("Fig. 8 + cache — code generation: hierarchical vs monolithic, "
             "cold/warm/incremental (emits BENCH_codegen_time.json)")
     codegen_res = codegen_time.main(["--quick"] if args.quick else [])
+    section("S:Serve — decode tokens/sec, per-slot seed vs batched packed "
+            "slots (emits BENCH_serve_time.json)")
+    serve_res = serve_time.main(["--quick"] if args.quick else [])
     if args.full:
         from benchmarks import roofline
         section("S:Roofline (recomputing)")
@@ -111,10 +115,11 @@ def main(argv=None) -> int:
     roofline_summary()
     section("S:Perf — hillclimb log (3 cells)")
     perf_summary()
-    # propagate both regression gates through the umbrella runner; the
+    # propagate every regression gate through the umbrella runner; the
     # BENCH_*.json files share one schema (benchmark/config/rows/gates)
     return 1 if (sim_res.get("throughput_regression")
-                 or codegen_res.get("codegen_regression")) else 0
+                 or codegen_res.get("codegen_regression")
+                 or serve_res["gate"]["serve_regression"]) else 0
 
 
 if __name__ == "__main__":

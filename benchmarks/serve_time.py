@@ -1,0 +1,173 @@
+"""Serving decode throughput: per-slot seed path vs the batched fast path.
+
+The third leg of the perf trajectory (after ``BENCH_sim_time.json`` for
+channel throughput and ``BENCH_codegen_time.json`` for compile time): how
+many tokens per second the serving engine decodes, per slot count, under
+
+  per_slot   the seed decode loop — one jitted call per live slot per
+             token and a host ``np.argmax`` round-trip each;
+  batched    the packed-slot path — ONE jitted step per iteration for the
+             whole slot array (ragged flash-decode attention, on-device
+             sampling, a single [slots] token fetch per step).
+
+The per-slot path's cost grows linearly with slot count (dispatch + host
+sync per slot), the batched path's stays ~flat — the whole point of
+packing.  Acceptance bar (CI gate): batched >= 3x per_slot tokens/sec at
+8 slots.  Both engines warm up first so XLA compiles are excluded; the
+timed run re-serves a fresh request list through an already-warm engine.
+
+Results persist to ``BENCH_serve_time.json`` at the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+BENCH_JSON = Path(__file__).parent.parent / "BENCH_serve_time.json"
+
+GATE_SLOTS = 8
+GATE_SPEEDUP = 3.0
+
+
+def _make_requests(n: int, max_new: int, vocab: int, seed: int = 0) -> list:
+    """Random token ids but a *deterministic* prompt-length cycle: the
+    per-slot path jit-compiles prefill per exact length, so keeping the
+    length set fixed ensures the warm run pays every compile and the timed
+    runs measure decode throughput only — for both variants."""
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    lengths = (4, 7, 9, 12, 14, 16)
+    return [Request(rid=i,
+                    prompt=rng.integers(
+                        0, vocab, lengths[i % len(lengths)]).tolist(),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def _build(cfg, params, variant: str, slots: int, max_seq: int, cc):
+    from repro.models import lm
+    from repro.serve import ServeConfig, ServingEngine
+    scfg = ServeConfig(batch_slots=slots, max_seq=max_seq)
+    if variant == "batched":
+        adapter = lm.serving_adapter(params, cfg, max_seq=max_seq)
+        eng = ServingEngine(scfg, batched=adapter)
+        eng.warmup(cache=cc)
+        return eng
+
+    @jax.jit
+    def prefill_fn(tokens):
+        return lm.prefill(params, cfg, tokens, max_seq=max_seq)
+
+    @jax.jit
+    def decode_fn(token, cache):
+        return lm.decode_step(params, cfg, token, cache)
+
+    return ServingEngine(scfg, prefill_fn, decode_fn)
+
+
+def measure(slot_counts=(1, 4, 8), requests_per_slot: int = 2,
+            max_new: int = 40, max_seq: int = 64, repeats: int = 2) -> dict:
+    from repro.configs import get_config
+    from repro.core.compile_cache import CompileCache
+    from repro.models import lm
+    from repro.serve import serve_requests
+
+    # a notch above the test-size reduction: per-slot cost is
+    # slots x (dispatch + compute) while the batched step vectorizes the
+    # compute across slots, so a non-trivial layer stack makes the
+    # comparison reflect real serving arithmetic, not just dispatch.
+    cfg = get_config("qwen3-0.6b").with_reduced(
+        n_layers=4, d_model=128, d_ff=256)
+    params = lm.init_params(cfg, jax.random.key(0))
+    cc = CompileCache(disk=False)        # isolate the benchmark from $HOME
+
+    rows = []
+    for slots in slot_counts:
+        n_req = max(slots * requests_per_slot, 2)
+        for variant in ("per_slot", "batched"):
+            eng = _build(cfg, params, variant, slots, max_seq, cc)
+            # warm run: pays every XLA compile/dispatch-path setup
+            serve_requests(eng, _make_requests(n_req, max_new, cfg.vocab))
+            best = None
+            for rep in range(repeats):
+                reqs = _make_requests(n_req, max_new, cfg.vocab,
+                                      seed=rep + 1)
+                t0 = time.perf_counter()
+                res = serve_requests(eng, reqs)
+                wall = time.perf_counter() - t0
+                n_new = sum(len(v) for v in res.values())
+                assert len(res) == n_req, (variant, slots, len(res))
+                if best is None or wall < best[0]:
+                    best = (wall, n_new)
+            wall, n_new = best
+            rows.append({
+                "variant": variant, "slots": slots,
+                "requests": n_req, "new_tokens": n_new,
+                "tokens_per_sec": round(n_new / wall, 1),
+                "wall_s": round(wall, 4),
+            })
+
+    def tps(variant, slots):
+        for r in rows:
+            if r["variant"] == variant and r["slots"] == slots:
+                return r["tokens_per_sec"]
+        return None
+
+    speedups = {s: round(tps("batched", s) / tps("per_slot", s), 2)
+                for s in slot_counts}
+    gate_slots = GATE_SLOTS if GATE_SLOTS in slot_counts \
+        else max(slot_counts)
+    out = {
+        "benchmark": "serve_time",
+        "config": {"arch": cfg.name, "max_seq": max_seq,
+                   "max_new": max_new, "slot_counts": list(slot_counts),
+                   "requests_per_slot": requests_per_slot,
+                   "repeats": repeats},
+        "rows": rows,
+        "batched_speedup_by_slots": speedups,
+        "gate": {"slots": gate_slots, "bar": GATE_SPEEDUP,
+                 "speedup": speedups[gate_slots],
+                 "serve_regression": speedups[gate_slots] < GATE_SPEEDUP},
+    }
+    return out
+
+
+def print_report(res: dict) -> None:
+    print(f"{'variant':<10} {'slots':>5} {'tokens/s':>10} {'wall_ms':>9}")
+    for r in res["rows"]:
+        print(f"{r['variant']:<10} {r['slots']:>5} "
+              f"{r['tokens_per_sec']:>10.0f} {r['wall_s']*1e3:>9.1f}")
+    for s, x in res["batched_speedup_by_slots"].items():
+        print(f"batched vs per-slot @ {s} slots: {x}x")
+    g = res["gate"]
+    status = "FAIL" if g["serve_regression"] else "ok"
+    print(f"gate: batched >= {g['bar']}x at {g['slots']} slots -> "
+          f"{g['speedup']}x [{status}]")
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer requests/tokens, single repeat")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        res = measure(slot_counts=(1, 8), requests_per_slot=1,
+                      max_new=32, repeats=1)
+    else:
+        res = measure()
+    print_report(res)
+    BENCH_JSON.write_text(json.dumps(res, indent=1) + "\n")
+    print(f"wrote {BENCH_JSON}")
+    return res
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(1 if main()["gate"]["serve_regression"] else 0)

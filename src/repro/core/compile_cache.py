@@ -418,20 +418,27 @@ class CompileCache:
                        kwargs: Optional[dict] = None, *,
                        key: Optional[str] = None, extra: Any = None,
                        hash_fn: Optional[Callable] = None,
-                       jit_fn: Optional[Callable] = None):
+                       jit_fn: Optional[Callable] = None,
+                       jit_kwargs: Optional[dict] = None):
         """``jit(fn).lower(*args).compile()`` through the cache.
 
         ``hash_fn`` keys the entry on a different function than is compiled
         (e.g. hash the user's stage body, compile its shard_map wrapper
         whose internals would make a noisy hash); ``jit_fn`` overrides the
-        callable handed to ``jax.jit``.  Returns ``(executable, source)``.
+        callable handed to ``jax.jit``; ``jit_kwargs`` are forwarded to
+        ``jax.jit`` (e.g. ``donate_argnums`` — input/output aliasing is
+        part of the compiled HLO, so it survives (de)serialization and is
+        folded into the key).  Returns ``(executable, source)``.
         """
         import jax
         kwargs = kwargs or {}
+        if jit_kwargs:
+            extra = (extra, sorted(jit_kwargs.items()))
         key = key or instance_key(hash_fn or fn, args, kwargs, extra=extra)
         exe, source = self.get_with_source(key)
         if exe is None:
-            exe = jax.jit(jit_fn or fn).lower(*args, **kwargs).compile()
+            exe = jax.jit(jit_fn or fn, **(jit_kwargs or {})) \
+                .lower(*args, **kwargs).compile()
             self.put(key, exe)
             source = "compiled"
         return exe, source

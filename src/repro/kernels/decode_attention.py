@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -84,11 +85,18 @@ def _decode_kernel(len_ref,                     # scalar-prefetch [B] int32
 def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
                          kv_len: jax.Array, *,
                          block_k: int = DEFAULT_BLOCK_K,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: Optional[bool] = None) -> jax.Array:
     """q: [B, nkv, group, hd]; k/v: [B, nkv, S_max, hd]; kv_len: [B] int32.
 
     Returns [B, nkv, group, hd].
+
+    ``interpret=None`` auto-dispatches: real Pallas (Mosaic) on a TPU
+    backend, the Pallas interpreter elsewhere.  Lengths are ragged per
+    batch row; a row with ``kv_len == 0`` (a dead serving slot) skips every
+    KV block and returns exact zeros (the ``l == 0`` guard in ``_finish``).
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, nkv, group, hd = q.shape
     Sk = k.shape[2]
     block_k = min(block_k, Sk)

@@ -118,12 +118,27 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      kv_len: jax.Array, *,
-                     block_k: int = 256) -> jax.Array:
+                     block_k: int = 256,
+                     impl: Optional[str] = None) -> jax.Array:
     """One-token GQA decode against a cache (no grad path — serving only).
 
     q: [B, nh, hd] or [B, 1, nh, hd]; k/v: [B, S_max, nkv, hd];
     kv_len: scalar or [B] int32 valid length.  Returns q-shaped output.
+
+    Backend dispatch (``impl``, default from ``$REPRO_DECODE_ATTN``):
+
+    * ``"pallas"``    — the Mosaic-lowered flash-decode kernel (TPU default);
+    * ``"interpret"`` — the same kernel under the Pallas interpreter
+      (bit-exact kernel semantics on any backend; used by parity tests);
+    * ``"ref"``       — the vectorized jnp oracle (non-TPU default: on CPU
+      the interpreter's sequential grid emulation costs ~3x the fused
+      masked attention, and the serving decode loop is latency-critical).
+
+    All three share the ragged-length contract: per-row valid lengths,
+    ``kv_len == 0`` rows (dead serving slots) contribute no HBM traffic on
+    the kernel paths.
     """
+    import os
     squeeze = q.ndim == 4
     if squeeze:
         q = q[:, 0]
@@ -131,15 +146,28 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     Smax, nkv = k.shape[1], k.shape[2]
     g = nh // nkv
     lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    impl = impl or os.environ.get("REPRO_DECODE_ATTN") or \
+        ("pallas" if not _interpret() else "ref")
+    if impl not in ("pallas", "interpret", "ref"):
+        raise ValueError(
+            f"decode_attention impl {impl!r}: expected 'pallas', "
+            f"'interpret' or 'ref' (from impl= or $REPRO_DECODE_ATTN)")
     bk = min(block_k, Smax)
-    if Smax % bk:
+    if impl == "ref":
         out = ref.decode_attention_ref(q, k, v, lens)
         return out[:, None] if squeeze else out
+    if Smax % bk:
+        # explicit kernel request with a non-block-multiple cache: pad the
+        # KV axis (positions >= kv_len are masked, so zeros are inert)
+        # rather than silently answering from the oracle
+        pad = bk - Smax % bk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     qt = q.reshape(B, nkv, g, hd)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
     out = decode_attention_fwd(qt, kt, vt, lens, block_k=bk,
-                               interpret=_interpret())
+                               interpret=impl == "interpret")
     out = out.reshape(B, nh, hd)
     return out[:, None] if squeeze else out
 

@@ -5,8 +5,11 @@
 
 The request stream, the admission scheduler (peek) and the per-request
 transactions (EoT) run as a task graph under the coroutine engine; the
-compute inside is the jit'd prefill/decode pair of the selected model —
-the same functions the dry-run lowers for the pod.
+compute inside is the batched packed-slot decode of the selected model:
+one jitted step per iteration for every slot, on-device sampling, and
+length-bucketed prefill AOT-resolved through the persistent compile cache
+(``--per-slot`` selects the seed per-slot path instead; recurrent
+families fall back to it automatically).
 """
 
 from __future__ import annotations
@@ -14,15 +17,56 @@ from __future__ import annotations
 import argparse
 import sys
 import time
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
 from ..models import lm
 from ..serve import Request, ServeConfig, ServingEngine, serve_requests
+
+
+def _build_engine(cfg, params, scfg: ServeConfig, args) -> ServingEngine:
+    if not args.per_slot:
+        try:
+            adapter = lm.serving_adapter(
+                params, cfg, max_seq=scfg.max_seq,
+                temperature=args.temperature, top_k=args.top_k,
+                seed=args.seed)
+            return ServingEngine(scfg, batched=adapter)
+        except ValueError as e:       # recurrent family etc.
+            print(f"[serve] batched path unavailable ({e}); "
+                  f"falling back to per-slot")
+
+    if args.temperature > 0 or args.top_k:
+        print("[serve] WARNING: the per-slot path is greedy-only; "
+              "--temperature/--top-k are ignored")
+    max_seq = scfg.max_seq
+
+    @jax.jit
+    def prefill_fn(tokens):
+        return lm.prefill(params, cfg, tokens, max_seq=max_seq)
+
+    @jax.jit
+    def decode_fn(token, cache):
+        return lm.decode_step(params, cfg, token, cache)
+
+    return ServingEngine(scfg, prefill_fn, decode_fn)
+
+
+def _print_warmup(engine: ServingEngine, info: dict) -> None:
+    if not info.get("ok"):
+        print(f"[serve] warmup: eager fallback ({info.get('reason')})")
+        return
+    if "buckets" in info:
+        hits = [k for k, v in info["buckets"].items() if v != "compiled"]
+        fresh = [k for k, v in info["buckets"].items() if v == "compiled"]
+        print(f"[serve] warmup: prefill buckets cached={hits or '-'} "
+              f"fresh-compile={fresh or '-'}; "
+              f"decode step: {info['decode']}")
+    else:
+        print(f"[serve] warmup: prefill={info['prefill']} "
+              f"decode={info['decode']}")
 
 
 def serve(argv=None) -> int:
@@ -35,6 +79,11 @@ def serve(argv=None) -> int:
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--per-slot", action="store_true",
+                    help="seed path: one decode call per slot per token")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples on device")
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -44,16 +93,32 @@ def serve(argv=None) -> int:
           f"params={cfg.param_count()/1e6:.1f}M slots={args.slots}")
 
     params = lm.init_params(cfg, jax.random.key(args.seed))
-    max_seq = args.max_seq
+    scfg = ServeConfig(batch_slots=args.slots, max_seq=args.max_seq)
+    engine = _build_engine(cfg, params, scfg, args)
 
-    @jax.jit
-    def prefill_fn(tokens):
-        logits, cache = lm.prefill(params, cfg, tokens, max_seq=max_seq)
-        return logits, cache
-
-    @jax.jit
-    def decode_fn(token, cache):
-        return lm.decode_step(params, cfg, token, cache)
+    t0 = time.perf_counter()
+    if engine.batched is not None:
+        # warm every admission shape a serving process can meet: all
+        # power-of-two prefill batch dims up to the slot count, plus the
+        # slot count itself (a full wave pads to it when it is not pow2)
+        sizes = tuple(sorted({min(2 ** k, args.slots)
+                              for k in range(args.slots.bit_length())}
+                             | {args.slots}))
+        info = engine.warmup(batch_sizes=sizes)
+        if not info.get("ok"):
+            # a batched adapter has no eager path — serve per-slot instead
+            print(f"[serve] batched warmup failed ({info.get('reason')}); "
+                  f"falling back to per-slot")
+            args.per_slot = True
+            engine = _build_engine(cfg, params, scfg, args)
+            info = engine.warmup()
+    else:
+        info = engine.warmup()
+    warm = time.perf_counter() - t0
+    mode = "batched" if engine.batched is not None else "per-slot"
+    _print_warmup(engine, info)
+    print(f"[serve] warmup took {warm:.2f}s mode={mode}")
+    n_warm_log = len(engine.compile_log)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
@@ -62,9 +127,6 @@ def serve(argv=None) -> int:
                     max_new=args.max_new)
             for i in range(args.requests)]
 
-    engine = ServingEngine(ServeConfig(batch_slots=args.slots,
-                                       max_seq=max_seq),
-                           prefill_fn, decode_fn)
     t0 = time.perf_counter()
     results = serve_requests(engine, reqs)
     wall = time.perf_counter() - t0
@@ -72,8 +134,13 @@ def serve(argv=None) -> int:
     for rid in sorted(results):
         print(f"[serve] req {rid}: prompt {len(reqs[rid].prompt):2d} tok "
               f"-> {results[rid]}")
+    lazy = [(k, s, src) for k, s, src in engine.compile_log[n_warm_log:]
+            if src == "compiled"]
+    if lazy:
+        print(f"[serve] lazy compiles during serving: "
+              f"{[(k, s) for k, s, _ in lazy]}")
     print(f"[serve] {len(results)} requests, {n_new} tokens in {wall:.2f}s "
-          f"({n_new/max(wall,1e-9):.1f} tok/s incl. compile)")
+          f"({n_new/max(wall,1e-9):.1f} tok/s, {mode} decode)")
     return 0 if len(results) == args.requests else 1
 
 

@@ -133,6 +133,10 @@ def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
     q: [B, Sq, nh, hd]; k/v: [B, Sk, nkv, hd].  ``q_offset`` is the absolute
     position of q[0] (decode: cache length).  ``kv_len`` masks cache slots
     >= kv_len.  ``window`` enables sliding-window attention.
+
+    ``q_offset``/``kv_len`` may be scalars or per-row ``[B]`` vectors — the
+    vector form is the ragged-length path used by the packed serving batch,
+    where every slot sits at a different decode position.
     """
     B, Sq, nh, hd = q.shape
     Sk, nkv = k.shape[1], k.shape[2]
@@ -140,16 +144,18 @@ def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qg = q.reshape(B, Sq, nkv, group, hd)
     scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) / math.sqrt(hd)
-    qpos = jnp.arange(Sq)[:, None] + q_offset       # [Sq, 1]
-    kpos = jnp.arange(Sk)[None, :]                  # [1, Sk]
-    mask = jnp.ones((Sq, Sk), bool)
+    off = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (-1, 1, 1))
+    qpos = jnp.arange(Sq)[None, :, None] + off      # [B|1, Sq, 1]
+    kpos = jnp.arange(Sk)[None, None, :]            # [1, 1, Sk]
+    mask = jnp.ones((1, Sq, Sk), bool)
     if causal:
-        mask &= kpos <= qpos
+        mask = mask & (kpos <= qpos)
     if window is not None:
-        mask &= kpos > qpos - window
+        mask = mask & (kpos > qpos - window)
     if kv_len is not None:
-        mask &= kpos < kv_len
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+        kl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1, 1, 1))
+        mask = mask & (kpos < kl)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
     return out.reshape(B, Sq, nh, hd).astype(q.dtype)
@@ -273,34 +279,58 @@ def attention_decode(p: Params, cfg: ModelConfig, x: jax.Array,
                      v_scale: Optional[jax.Array] = None) -> tuple:
     """One-token decode against a KV cache.
 
-    x: [B, 1, d]; cache_k/v: [B, S_max, nkv, hd]; cache_len: [] int32.
+    x: [B, 1, d]; cache_k/v: [B, S_max, nkv, hd]; cache_len: [] or [B] int32.
     Returns (out [B,1,d], new_k, new_v[, new_k_scale, new_v_scale]).
     With ``cfg.kv_quant`` the caches are int8 + per-(pos, head) scales.
+
+    A vector ``cache_len`` selects the ragged-length path (packed serving
+    batch): each row scatters its new K/V at its own position and attends
+    to its own prefix, routed through the flash-decode dispatch in
+    ``kernels/ops.decode_attention``.  A row at length 0 is a dead slot —
+    its output is garbage-but-finite and the caller masks its token.
     """
     B = x.shape[0]
-    positions = jnp.full((B, 1), cache_len, jnp.int32)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    ragged = cache_len.ndim == 1
+    positions = jnp.broadcast_to(jnp.reshape(cache_len, (-1, 1)), (B, 1))
     q, k, v = _qkv(p, cfg, x, positions)
+
+    def scatter(cache, new):
+        """Write the one-token [B, 1, ...] update at each row's length.
+
+        The ragged form is a per-row scatter touching only B rows (not a
+        full-cache select): under donation XLA updates in place, so the
+        write traffic per step is O(B), independent of S_max.  A row whose
+        length equals S_max scatters out of bounds, which jax drops — the
+        capacity-stop no-op the engine relies on."""
+        new = new.astype(cache.dtype)
+        if not ragged:
+            return jax.lax.dynamic_update_slice_in_dim(cache, new,
+                                                       cache_len, axis=1)
+        return cache.at[jnp.arange(B), cache_len].set(
+            new[:, 0], mode="drop")
+
     if cfg.kv_quant:
         qk, sk = quantize_kv(k)
         qv, sv = quantize_kv(v)
-        ck = jax.lax.dynamic_update_slice_in_dim(cache_k, qk, cache_len, 1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache_v, qv, cache_len, 1)
-        nks = jax.lax.dynamic_update_slice_in_dim(k_scale, sk, cache_len, 1)
-        nvs = jax.lax.dynamic_update_slice_in_dim(v_scale, sv, cache_len, 1)
+        ck = scatter(cache_k, qk)
+        cv = scatter(cache_v, qv)
+        nks = scatter(k_scale, sk)
+        nvs = scatter(v_scale, sv)
         kd = dequantize_kv(ck, nks, q.dtype)
         vd = dequantize_kv(cv, nvs, q.dtype)
         out = sdpa(q, kd, vd, causal=False, q_offset=cache_len,
                    kv_len=cache_len + 1, window=cfg.sliding_window)
         return (out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"],
                 ck, cv, nks, nvs)
-    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
-                                             cache_len, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
-                                             cache_len, axis=1)
-    if cfg.attn_impl == "kernel" and cfg.sliding_window is None:
-        # flash-decode Pallas kernel: sequential KV-block grid with
-        # VMEM-carried softmax state; skips the unfilled cache tail via
-        # the scalar-prefetched length (kernels/decode_attention.py)
+    ck = scatter(cache_k, k)
+    cv = scatter(cache_v, v)
+    if cfg.sliding_window is None and (ragged or cfg.attn_impl == "kernel"):
+        # flash-decode path: sequential KV-block grid with VMEM-carried
+        # softmax state, per-row lengths scalar-prefetched so the unfilled
+        # cache tail is skipped (kernels/decode_attention.py).  The ragged
+        # serving batch always routes here; ops.decode_attention dispatches
+        # real Pallas on TPU and the vectorized reference elsewhere.
         from ..kernels import ops as kops
         out = kops.decode_attention(q[:, 0], ck, cv, cache_len + 1)[:, None]
     else:

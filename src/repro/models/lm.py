@@ -311,12 +311,21 @@ def loss_fn(params: Params, cfg: ModelConfig, batch: dict, *,
 
 def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
             extra: Optional[dict] = None, max_seq: Optional[int] = None,
-            use_kernel: bool = False,
-            scan_layers: bool = True) -> tuple[jax.Array, dict]:
+            use_kernel: bool = False, scan_layers: bool = True,
+            true_len: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
     """Process a prompt; return (last-token logits [B, vocab], cache).
 
     The cache layout matches ``init_decode_cache(cfg, B, max_seq)`` so
     ``decode_step`` continues from it directly.
+
+    ``true_len`` ([B] int32) enables *bucketed* prefill: ``tokens`` is
+    right-padded to a shared bucket length, logits are gathered at each
+    row's last real token, and ``cache["len"]`` becomes the per-row vector.
+    Right padding is sound for attention-cache families because causal
+    attention never lets a real token see a later pad position, and decode
+    masks cache slots >= len — so the pad rows of K/V are dead weight, not
+    wrong values.  (Recurrent families fold pads into their state, so the
+    serving adapter keeps them on the per-slot path.)
     """
     extra = extra or {}
     B, S = tokens.shape
@@ -345,7 +354,8 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
             return sc
         return jnp.pad(sc, ((0, 0), (0, max_seq - S), (0, 0)))
 
-    cache: dict = {"len": jnp.asarray(S, jnp.int32)}
+    cache: dict = {"len": jnp.asarray(S, jnp.int32) if true_len is None
+                   else jnp.asarray(true_len, jnp.int32)}
 
     if cfg.family in ("dense", "vlm", "moe"):
         def body(hh, lp):
@@ -454,7 +464,15 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
                                          scan_layers)
         cache.update(k=ck, v=cv, xk=xk, xv=xv)
 
-    h = L.rms_norm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    if true_len is None:
+        h = h[:, -1:]
+    else:
+        # gather each row's last *real* token (bucket pad sits after it);
+        # an empty row (len 0) clamps to position 0 — the caller treats it
+        # as a dead row and discards its logits
+        idx = jnp.clip(jnp.asarray(true_len, jnp.int32) - 1, 0, S - 1)
+        h = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     return (h[:, 0] @ head), cache
 
@@ -662,3 +680,135 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
     logits = (h[:, 0] @ head)
     new_cache["len"] = clen + 1
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# packed-slot serving: one batched decode step for the whole slot array
+# ---------------------------------------------------------------------------
+#
+# The serving engine keeps ONE cache pytree of shape [..., slots, ...] (the
+# batch axis of every leaf is axis 1, mirroring init_decode_cache) plus a
+# per-slot ``len`` vector.  Admission writes a prefilled request's rows into
+# a slot, retirement zeroes its length, and the decode step runs once per
+# iteration over all slots — live or dead — with dead slots masked by
+# ``len == 0``.  See docs/serving.md.
+
+def init_packed_cache(cfg: ModelConfig, slots: int, max_seq: int,
+                      abstract: bool = False) -> dict:
+    """Decode cache for ``slots`` packed sequences with per-slot lengths."""
+    c = init_decode_cache(cfg, slots, max_seq, abstract=abstract)
+    c["len"] = (jax.ShapeDtypeStruct((slots,), jnp.int32) if abstract
+                else jnp.zeros((slots,), jnp.int32))
+    return c
+
+
+def write_slot(packed: dict, cache: dict, row: jax.Array,
+               slot: jax.Array) -> dict:
+    """Copy row ``row`` of a prefill ``cache`` into slot ``slot`` of the
+    packed cache.  ``cache["len"]`` must be the per-row vector form
+    (``prefill(..., true_len=...)``).  Pure; jit with the packed cache
+    donated so XLA updates the slot in place."""
+    out = {}
+    for key, dst in packed.items():
+        if key == "len":
+            val = jax.lax.dynamic_index_in_dim(
+                jnp.asarray(cache["len"], jnp.int32), row, 0, False)
+            out[key] = jax.lax.dynamic_update_index_in_dim(dst, val, slot, 0)
+        else:
+            src = jax.lax.dynamic_slice_in_dim(cache[key], row, 1, axis=1)
+            out[key] = jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=1)
+    return out
+
+
+def retire_slot(packed: dict, slot: jax.Array) -> dict:
+    """Free a slot: zero its length.  The stale K/V rows become dead weight
+    (masked by ``len``) until the next admission overwrites them."""
+    return dict(packed, len=packed["len"].at[slot].set(0))
+
+
+def sample_tokens(logits: jax.Array, key: Optional[jax.Array] = None,
+                  temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """On-device sampling epilogue: [B, V] logits -> [B] int32 tokens.
+
+    ``temperature <= 0`` (or no key) is greedy argmax; otherwise
+    temperature-scaled categorical, optionally truncated to the top-k
+    logits.  Runs inside the jitted decode step so the host fetches one
+    small token vector per step instead of per-slot logits."""
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k and top_k < scaled.shape[-1]:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -1e30, scaled)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class ServingAdapter:
+    """The batched-decode protocol consumed by ``ServingEngine``.
+
+    ``prefill_fn(tokens[B,S], true_len[B], step) -> (first_tok[B], cache)``
+    ``step_fn(tokens[slots], packed, step) -> (next_tok[slots], packed)``
+    ``write_slot_fn(packed, cache, row, slot) -> packed``
+    ``retire_fn(packed, slot) -> packed``
+
+    All four are pure jax functions (NOT pre-jitted): the engine compiles
+    them through the persistent compile cache so a fresh process resolves
+    every previously-seen shape from disk.  ``step`` is a traced int32
+    scalar (the global step counter) feeding the sampler's fold_in — it
+    does not trigger recompiles.
+    """
+    cfg: ModelConfig
+    max_seq: int
+    prefill_fn: Any
+    step_fn: Any
+    write_slot_fn: Any
+    retire_fn: Any
+    temperature: float = 0.0
+    top_k: int = 0
+
+    def init_slots(self, slots: int, abstract: bool = False) -> dict:
+        return init_packed_cache(self.cfg, slots, self.max_seq,
+                                 abstract=abstract)
+
+
+def serving_adapter(params: Params, cfg: ModelConfig, *, max_seq: int,
+                    temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                    scan_layers: bool = True) -> ServingAdapter:
+    """Build the packed-slot batched decode adapter for a model.
+
+    Only attention-cache families qualify: right-padded bucketed prefill is
+    exact for them (see ``prefill``).  Recurrent state (ssm/hybrid) and
+    encoder-decoder extras (audio) would absorb pad tokens, so those
+    families stay on the engine's per-slot fallback.
+    """
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError(
+            f"batched serving supports attention-cache families "
+            f"(dense/vlm/moe), not {cfg.family!r}; use the per-slot path")
+    base_key = jax.random.PRNGKey(seed)
+
+    def _sample(logits, step):
+        key = jax.random.fold_in(base_key, step)
+        return sample_tokens(logits, key, temperature, top_k)
+
+    def prefill_fn(tokens, true_len, step):
+        logits, cache = prefill(params, cfg, tokens, max_seq=max_seq,
+                                true_len=true_len, scan_layers=scan_layers)
+        return _sample(logits, step), cache
+
+    def step_fn(tokens, packed, step):
+        live = packed["len"] > 0
+        logits, ncache = decode_step(params, cfg, tokens, packed,
+                                     scan_layers=scan_layers)
+        # dead slots must stay at len 0 (liveness is derived from it) and
+        # emit a harmless pad token
+        ncache["len"] = jnp.where(live, packed["len"] + 1, 0)
+        nxt = _sample(logits, step)
+        return jnp.where(live, nxt, 0).astype(jnp.int32), ncache
+
+    return ServingAdapter(cfg=cfg, max_seq=max_seq,
+                          prefill_fn=prefill_fn, step_fn=step_fn,
+                          write_slot_fn=write_slot, retire_fn=retire_slot,
+                          temperature=temperature, top_k=top_k)

@@ -4,20 +4,35 @@ This subsystem uses the paper's two motivating APIs *as motivated*:
 
 * **Transactions (EoT)** — one request's prompt tokens form one transaction
   on the request channel: the frontend writes the tokens then ``close()``s;
-  the scheduler drains ``for tok in stream`` until EoT.  Variable-length
-  prompts need no length header and no sentinel values inside the token
-  domain (paper Listing 2's exact argument).
+  the scheduler drains the stream until EoT.  Variable-length prompts need
+  no length header and no sentinel values inside the token domain (paper
+  Listing 2's exact argument).
 
 * **Peek** — the admission scheduler ``peek``s the request channel to see
-  the *next* request's id without consuming it, admitting it only if a
+  the *next* request's header without consuming it, admitting it only if a
   batch slot is free — the network-switch pattern from the paper's
   introduction (forward based on content *and* availability, no manual
   buffer-and-state-machine).
 
-The decode loop itself is a jit'd ``decode_step`` over a fixed batch of
-slots (continuous batching: finished slots are refilled without draining
-the batch).  The whole engine runs under the coroutine simulator for tests
-and examples; on a pod the same task graph drives the compiled step.
+Two decode paths share the scheduler:
+
+* **Batched fast path** (``batched=`` a :class:`~repro.models.lm.
+  ServingAdapter`): ONE jitted decode step per iteration regardless of
+  live slot count.  All slots live in one packed KV cache ``[.., slots,
+  ..]`` with a per-slot ``len`` vector; admission runs bucketed batched
+  prefill and writes rows into slots (donated buffers, in-place under
+  XLA); retirement zeroes ``len``; sampling happens on device so the host
+  fetches one ``[slots]`` int32 array per step.  Every shape resolves
+  through the persistent compile cache, so a warm process pays zero XLA
+  compiles (see ``warmup``).
+
+* **Per-slot fallback** (``prefill_fn``/``decode_fn`` closures): the seed
+  path — one call per live slot per token, host argmax.  Kept for toy
+  engines, recurrent families (whose prefill cannot pad), and as the
+  baseline that ``benchmarks/serve_time.py`` measures the fast path
+  against.
+
+See docs/serving.md for the packed-cache layout and bucket policy.
 """
 
 from __future__ import annotations
@@ -45,50 +60,196 @@ class ServeConfig:
     batch_slots: int = 4          # concurrent decode slots
     max_seq: int = 128
     eos_token: int = -1           # -1: only stop on max_new
+    prefill_buckets: tuple = ()   # () = powers of two from 8 to max_seq
+
+
+def _default_buckets(max_seq: int) -> tuple:
+    out, b = [], 8
+    while b < max_seq:
+        out.append(b)
+        b *= 2
+    out.append(max_seq)
+    return tuple(out)
+
+
+def _pow2_at_least(n: int, cap: int) -> int:
+    b = 1
+    while b < n and b < cap:
+        b *= 2
+    return min(b, cap)
 
 
 class ServingEngine:
-    """Continuous-batching engine over a (prefill_fn, decode_fn) pair.
+    """Continuous-batching engine over a model's serving step functions.
 
-    ``prefill_fn(tokens[B,S]) -> (logits[B,V], cache)`` and
+    Per-slot mode: ``prefill_fn(tokens[B,S]) -> (logits[B,V], cache)`` and
     ``decode_fn(token[B], cache) -> (logits[B,V], cache)`` — typically the
     jit'd model steps; tests may pass toy closures.
+
+    Batched mode: pass ``batched=lm.serving_adapter(...)`` instead; the
+    step functions are compiled through the persistent compile cache and
+    the decode loop runs one jitted call per step for all slots.
     """
 
-    def __init__(self, scfg: ServeConfig, prefill_fn: Callable,
-                 decode_fn: Callable, pad_token: int = 0):
+    def __init__(self, scfg: ServeConfig, prefill_fn: Callable = None,
+                 decode_fn: Callable = None, pad_token: int = 0,
+                 batched: Any = None):
         self.scfg = scfg
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
         self.pad = pad_token
+        self.batched = batched
+        if batched is None and (prefill_fn is None or decode_fn is None):
+            raise ValueError("need prefill_fn/decode_fn or batched=adapter")
         self._aot_prefill: dict = {}       # (B, S) -> executable
         self._aot_decode: Optional[tuple] = None   # (aval sig, executable)
+        # batched mode: executables by shape key + where each came from
+        self._exe: dict = {}
+        self._cc = None
+        self.compile_log: list = []        # (kind, shape, source) tuples
+
+    def buckets(self) -> tuple:
+        return self.scfg.prefill_buckets or _default_buckets(
+            self.scfg.max_seq)
 
     # -- warmup through the persistent compile cache --------------------------
 
-    def warmup(self, prompt_len: int = 8, cache=None) -> dict:
-        """AOT-compile prefill/decode through the compile cache.
+    def warmup(self, prompt_len: int = 8, cache=None,
+               batch_sizes: tuple = (1,)) -> dict:
+        """AOT-compile the serving steps through the compile cache.
 
         The first request a serving process sees should not pay an XLA
-        compile: warmup resolves both steps from the content-addressed
+        compile: warmup resolves the steps from the content-addressed
         store (populated by any previous process running the same model
-        and shapes) and pins the executables for the decode loop.  Toy
-        engines whose step functions are not jittable fall back to eager
-        with ``{"ok": False}`` — warmup never breaks serving.
+        and shapes) and pins the executables for the decode loop.
+
+        Batched mode resolves one prefill executable per (batch-size,
+        bucket) — ``batch_sizes`` x ``buckets()`` — plus the packed decode
+        step, and reports the source of each (``compiled`` vs ``memory``/
+        ``disk``).  Per-slot mode keeps the seed behaviour: a single
+        ``(1, prompt_len)`` prefill plus the decode signature probe, and
+        toy engines whose step functions are not jittable fall back to
+        eager with ``{"ok": False}`` — warmup never breaks per-slot
+        serving.  A batched adapter has no eager path: ``{"ok": False}``
+        there means serving itself would fail the same way, so the caller
+        should fall back to a per-slot engine (``launch/serve.py`` does).
         """
         from ..core.compile_cache import aval_signature, default_cache
         cc = cache if cache is not None else default_cache()
+        if self.batched is not None:
+            return self._warmup_batched(cc, batch_sizes)
         toks = np.zeros((1, prompt_len), np.int32)
         try:
-            pre, src_p = cc.compile_cached(self.prefill_fn, (toks,))
+            pre, src_p = cc.compile_cached(self.prefill_fn, (toks,),
+                                           extra=self._key_salt())
             _, kv = pre(toks)
             tok = np.zeros((1,), np.int32)
-            dec, src_d = cc.compile_cached(self.decode_fn, (tok, kv))
+            dec, src_d = cc.compile_cached(self.decode_fn, (tok, kv),
+                                           extra=self._key_salt())
         except Exception as e:  # noqa: BLE001 - non-jittable step fns
             return {"ok": False, "reason": repr(e)[:200]}
         self._aot_prefill[(1, prompt_len)] = pre
         self._aot_decode = (aval_signature((tok, kv), {}), dec)
         return {"ok": True, "prefill": src_p, "decode": src_d}
+
+    def _warmup_batched(self, cc, batch_sizes: tuple) -> dict:
+        self._cc = cc
+        report: dict = {"ok": True, "buckets": {}, "decode": None}
+        try:
+            for L in self.buckets():
+                for bk in batch_sizes:
+                    _, src = self._resolve_prefill(bk, L)
+                    report["buckets"][f"{bk}x{L}"] = src
+            _, src = self._resolve_step()
+            report["decode"] = src
+            # the small slot-maintenance executables, so the first
+            # admission wave pays zero compiles of any size
+            for bk in batch_sizes:
+                self._resolve_write(bk)
+            self._resolve_retire()
+        except Exception as e:  # noqa: BLE001 - keep serving alive
+            return {"ok": False, "reason": repr(e)[:200]}
+        return report
+
+    # -- batched-mode executable resolution -----------------------------------
+
+    def _cache(self):
+        if self._cc is None:
+            from ..core.compile_cache import default_cache
+            self._cc = default_cache()
+        return self._cc
+
+    @staticmethod
+    def _key_salt():
+        """Env-selected kernel dispatch is baked into the traced decode
+        program (kernels/ops.decode_attention), so it must be part of the
+        cache key for every serving executable — and only for those, so
+        flipping it never invalidates unrelated cache entries."""
+        import os
+        return ("decode-attn", os.environ.get("REPRO_DECODE_ATTN", ""))
+
+    def _resolve_prefill(self, bk: int, L: int):
+        """Executable for the (bk, L) prefill bucket, via the compile
+        cache (disk hit in a warm process, one XLA compile otherwise)."""
+        key = ("prefill", bk, L)
+        if key in self._exe:
+            return self._exe[key], "pinned"
+        sds = jax.ShapeDtypeStruct
+        args = (sds((bk, L), jnp.int32), sds((bk,), jnp.int32),
+                sds((), jnp.int32))
+        exe, src = self._cache().compile_cached(self.batched.prefill_fn,
+                                                args,
+                                                extra=self._key_salt())
+        self._exe[key] = exe
+        self.compile_log.append(("prefill", (bk, L), src))
+        return exe, src
+
+    def _resolve_step(self):
+        key = ("step",)
+        if key in self._exe:
+            return self._exe[key], "pinned"
+        sds = jax.ShapeDtypeStruct
+        slots = self.scfg.batch_slots
+        packed = self.batched.init_slots(slots, abstract=True)
+        args = (sds((slots,), jnp.int32), packed, sds((), jnp.int32))
+        exe, src = self._cache().compile_cached(
+            self.batched.step_fn, args, extra=self._key_salt(),
+            jit_kwargs={"donate_argnums": (1,)})
+        self._exe[key] = exe
+        self.compile_log.append(("decode_step", (slots,), src))
+        return exe, src
+
+    def _resolve_write(self, bk: int):
+        key = ("write", bk)
+        if key in self._exe:
+            return self._exe[key]
+        sds = jax.ShapeDtypeStruct
+        slots = self.scfg.batch_slots
+        packed = self.batched.init_slots(slots, abstract=True)
+        cache = jax.eval_shape(
+            lambda t, n: self.batched.prefill_fn(t, n, jnp.int32(0))[1],
+            sds((bk, self.scfg.max_seq), jnp.int32), sds((bk,), jnp.int32))
+        args = (packed, cache, sds((), jnp.int32), sds((), jnp.int32))
+        exe, src = self._cache().compile_cached(
+            self.batched.write_slot_fn, args,
+            jit_kwargs={"donate_argnums": (0,)})
+        self._exe[key] = exe
+        self.compile_log.append(("write_slot", (bk,), src))
+        return exe
+
+    def _resolve_retire(self):
+        key = ("retire",)
+        if key in self._exe:
+            return self._exe[key]
+        sds = jax.ShapeDtypeStruct
+        packed = self.batched.init_slots(self.scfg.batch_slots,
+                                         abstract=True)
+        exe, src = self._cache().compile_cached(
+            self.batched.retire_fn, (packed, sds((), jnp.int32)),
+            jit_kwargs={"donate_argnums": (0,)})
+        self._exe[key] = exe
+        self.compile_log.append(("retire", (), src))
+        return exe
 
     # -- task bodies ---------------------------------------------------------
 
@@ -97,47 +258,94 @@ class ServingEngine:
         [rid, max_new, tok0, tok1, ...] <EoT>."""
         for r in requests:
             req_out.write(("hdr", r.rid, r.max_new))
-            for t in r.prompt:
-                req_out.write(("tok", t))
+            req_out.write_burst([("tok", t) for t in r.prompt])
             req_out.close()
         # final empty transaction marks shutdown
         req_out.close()
 
+    # -- admission (shared by both paths) -------------------------------------
+
+    def _admit_one(self, req_in, can_wait: bool):
+        """Try to consume one whole request transaction.
+
+        The caller guarantees a free slot, so admission is the paper's
+        switch pattern: ``peek`` the header to inspect the pending request,
+        then consume it — the peeked value IS the header (no double read).
+        Returns ``("req", rid, max_new, prompt)``, ``("shutdown",)``, or
+        ``("none",)`` when nothing is pending and ``can_wait`` is False.
+
+        With ``can_wait=True`` (no live slot, nothing else to do) this
+        *blocks* on the channel — a cooperative engine hand-off, not a
+        busy poll of ``try_*`` in a spin loop.
+        """
+        avail, is_eot = req_in.try_eot()
+        if not avail:
+            if not can_wait:
+                return ("none",)
+            is_eot = req_in.eot()          # block until the next transaction
+        if is_eot:                          # empty transaction = shutdown
+            req_in.open()
+            return ("shutdown",)
+        kind, rid, max_new = req_in.peek()
+        assert kind == "hdr", kind
+        req_in.read()                       # consume the peeked header
+        prompt = [t for (_, t) in req_in.read_transaction()]
+        # normalize: empty prompts decode from a single pad token; overlong
+        # prompts keep their most recent max_seq-1 tokens so one decode
+        # position remains
+        prompt = (prompt or [self.pad])[-(self.scfg.max_seq - 1):]
+        return ("req", rid, max_new, prompt)
+
+    def _emit(self, out_chan, rid: int, new: list) -> None:
+        out_chan.write(("hdr", rid))
+        out_chan.write_burst([("tok", int(t)) for t in new])
+        out_chan.close()
+
+    def _finished(self, s: dict) -> bool:
+        if len(s["new"]) >= s["max_new"]:
+            return True
+        eos = self.scfg.eos_token
+        if eos >= 0 and s["new"] and s["new"][-1] == eos:
+            return True
+        # cache-capacity stop: the next decode would scatter at
+        # prompt_len + len(new) - 1; retire one step early
+        return s["plen"] + len(s["new"]) >= self.scfg.max_seq
+
+    # -- scheduler -------------------------------------------------------------
+
     def scheduler(self, req_in, out_chan) -> None:
         """Admission + continuous batch decode."""
+        if self.batched is not None:
+            self._scheduler_batched(req_in, out_chan)
+        else:
+            self._scheduler_per_slot(req_in, out_chan)
+        out_chan.close()                   # shutdown transaction
+
+    def _scheduler_per_slot(self, req_in, out_chan) -> None:
         scfg = self.scfg
         slots: list[Optional[dict]] = [None] * scfg.batch_slots
         shutdown = False
-
         while True:
-            # Admit: peek the head of the request stream; only consume when
-            # a slot is actually free (paper's switch pattern).
+            # Admit while a slot is free; block only when fully idle.
             while not shutdown:
                 free = next((i for i, s in enumerate(slots) if s is None),
                             None)
                 if free is None:
                     break
-                ok, is_eot = req_in.try_eot()
-                if ok and is_eot:          # empty transaction = shutdown
-                    req_in.open()
+                r = self._admit_one(
+                    req_in, can_wait=not any(s is not None for s in slots))
+                if r[0] == "shutdown":
                     shutdown = True
                     break
-                ok, head = req_in.try_peek()
-                if not ok:
-                    if any(s is not None for s in slots):
-                        break              # keep decoding while we wait
-                    # idle: block until something arrives
-                    if req_in.eot():
-                        req_in.open()
-                        shutdown = True
-                        break
-                    head = req_in.peek()
-                # consume one whole transaction
-                kind, rid, max_new = req_in.read()
-                assert kind == "hdr"
-                prompt = [t for (_, t) in iter(req_in)]
+                if r[0] == "none":
+                    break
+                _, rid, max_new, prompt = r
+                if max_new <= 0:
+                    self._emit(out_chan, rid, [])
+                    continue
                 slots[free] = {"rid": rid, "prompt": prompt,
-                               "max_new": max_new, "new": []}
+                               "plen": len(prompt), "max_new": max_new,
+                               "new": []}
 
             live = [s for s in slots if s is not None]
             if not live:
@@ -149,23 +357,13 @@ class ServingEngine:
 
             # retire finished slots (emit one transaction per request)
             for i, s in enumerate(slots):
-                if s is None:
-                    continue
-                done = len(s["new"]) >= s["max_new"] or (
-                    self.scfg.eos_token >= 0 and s["new"]
-                    and s["new"][-1] == self.scfg.eos_token)
-                if done:
-                    out_chan.write(("hdr", s["rid"]))
-                    for t in s["new"]:
-                        out_chan.write(("tok", int(t)))
-                    out_chan.close()
+                if s is not None and self._finished(s):
+                    self._emit(out_chan, s["rid"], s["new"])
                     slots[i] = None
-        out_chan.close()                   # shutdown transaction
 
     def _step_batch(self, slots: list) -> None:
-        """One prefill-or-decode step over the packed batch."""
-        # prefill any slot that has no cache yet (one at a time keeps the
-        # toy engine simple; batched prefill is a straightforward extension)
+        """One prefill-or-decode step over the live slots (per-slot path)."""
+        # prefill any slot that has no cache yet
         for s in slots:
             if s is not None and "cache" not in s:
                 toks = np.asarray(s["prompt"], np.int32)[None, :]
@@ -183,10 +381,10 @@ class ServingEngine:
                     tok0 = np.zeros((1,), np.int32)
                     s["aot_decode"] = exe if aval_signature(
                         (tok0, cache), {}) == sig else None
-        # decode all live slots (packed batch; a production engine packs
-        # caches — here each slot decodes its own cache)
+        # decode all live slots, one call per slot (the seed hot loop the
+        # batched path replaces)
         for s in slots:
-            if s is None or len(s["new"]) >= s["max_new"]:
+            if s is None or self._finished(s):
                 continue
             tok = np.asarray([s["next"]], np.int32)
             decode = s.get("aot_decode") or self.decode_fn
@@ -202,6 +400,114 @@ class ServingEngine:
             s["next"] = int(np.argmax(np.asarray(logits)[0]))
             s["new"].append(s["next"])
 
+    # -- batched fast path -----------------------------------------------------
+
+    def _scheduler_batched(self, req_in, out_chan) -> None:
+        scfg = self.scfg
+        n = scfg.batch_slots
+        slots: list[Optional[dict]] = [None] * n
+        packed = self.batched.init_slots(n)
+        step_exe, _ = self._resolve_step()
+        retire_exe = self._resolve_retire()
+        toks = np.zeros((n,), np.int32)    # reused host-side staging buffer
+        shutdown = False
+        step_i = 0
+
+        while True:
+            # -- admission: collect requests for every free slot ----------
+            newly = []
+            while not shutdown and sum(s is None for s in slots) > len(newly):
+                r = self._admit_one(
+                    req_in,
+                    can_wait=not newly and not any(
+                        s is not None for s in slots))
+                if r[0] == "shutdown":
+                    shutdown = True
+                    break
+                if r[0] == "none":
+                    break
+                _, rid, max_new, prompt = r
+                if max_new <= 0:
+                    self._emit(out_chan, rid, [])
+                    continue
+                newly.append({"rid": rid, "prompt": prompt,
+                              "plen": len(prompt), "max_new": max_new,
+                              "new": []})
+            if newly:
+                packed, step_i = self._prefill_admit(newly, slots, packed,
+                                                     step_i)
+                # a request can finish at prefill (max_new == 1 / eos)
+                for i, s in enumerate(slots):
+                    if s is not None and self._finished(s):
+                        self._emit(out_chan, s["rid"], s["new"])
+                        packed = retire_exe(packed, np.int32(i))
+                        slots[i] = None
+
+            if not any(s is not None for s in slots):
+                if shutdown:
+                    break
+                continue
+
+            # -- ONE jitted decode step for the whole slot array ----------
+            toks.fill(0)
+            for i, s in enumerate(slots):
+                if s is not None:
+                    toks[i] = s["next"]
+            nxt, packed = step_exe(toks, packed, np.int32(step_i))
+            step_i += 1
+            nxt = np.asarray(nxt)   # [slots] — the only per-step transfer
+
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                t = int(nxt[i])
+                s["new"].append(t)
+                s["next"] = t
+                if self._finished(s):
+                    self._emit(out_chan, s["rid"], s["new"])
+                    packed = retire_exe(packed, np.int32(i))
+                    slots[i] = None
+
+    def _prefill_admit(self, newly: list, slots: list, packed,
+                       step_i: int):
+        """Bucketed batched prefill for a group of admitted requests.
+
+        Prompts are right-padded to the smallest power-of-two bucket and
+        same-bucket requests share one prefill call whose batch dimension
+        is itself padded to a power of two — so the shape space stays
+        bounded and every shape is a compile-cache key.  Returns
+        ``(packed, step_i)``: the step counter advances once per prefill
+        call so every sampler invocation folds a distinct key.
+        """
+        buckets = self.buckets()
+        groups: dict[int, list] = {}
+        for s in newly:
+            # a prompt longer than every configured bucket pads straight to
+            # max_seq (admission already truncated it to max_seq - 1)
+            L = next((b for b in buckets if b >= s["plen"]),
+                     self.scfg.max_seq)
+            groups.setdefault(L, []).append(s)
+        free = iter(i for i, s in enumerate(slots) if s is None)
+        for L, grp in sorted(groups.items()):
+            bk = _pow2_at_least(len(grp), self.scfg.batch_slots)
+            toks = np.full((bk, L), self.pad, np.int32)
+            lens = np.zeros((bk,), np.int32)
+            for row, s in enumerate(grp):
+                toks[row, :s["plen"]] = s["prompt"]
+                lens[row] = s["plen"]
+            exe, _ = self._resolve_prefill(bk, L)
+            first, cache = exe(toks, lens, np.int32(step_i))
+            step_i += 1
+            first = np.asarray(first)      # [bk] sampled on device
+            write = self._resolve_write(bk)
+            for row, s in enumerate(grp):
+                slot = next(free)
+                packed = write(packed, cache, np.int32(row), np.int32(slot))
+                s["next"] = int(first[row])
+                s["new"].append(s["next"])
+                slots[slot] = s
+        return packed, step_i
+
     def collector(self, out_in, results: dict) -> None:
         while True:
             if out_in.eot():               # shutdown transaction
@@ -209,7 +515,7 @@ class ServingEngine:
                 break
             kind, rid = out_in.read()
             assert kind == "hdr"
-            results[rid] = [t for (_, t) in iter(out_in)]
+            results[rid] = [t for (_, t) in out_in.read_transaction()]
 
     # -- top ------------------------------------------------------------------
 

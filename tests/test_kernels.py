@@ -103,7 +103,10 @@ def test_decode_attention_vs_ref(B, nh, nkv, hd, Smax, kvlen, dtype):
     q = rand(ks[0], (B, nh, hd), dtype)
     k = rand(ks[1], (B, Smax, nkv, hd), dtype)
     v = rand(ks[2], (B, Smax, nkv, hd), dtype)
-    got = ops.decode_attention(q, k, v, jnp.asarray(kvlen))
+    # impl="interpret" pins the kernel path: the default dispatch resolves
+    # to the reference on non-TPU backends, which would test ref vs ref
+    got = ops.decode_attention(q, k, v, jnp.asarray(kvlen),
+                               impl="interpret")
     want = ref.decode_attention_ref(q, k, v, jnp.asarray(kvlen))
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32),
@@ -117,9 +120,51 @@ def test_decode_attention_per_batch_lengths():
     k = rand(ks[1], (B, Smax, 2, 64))
     v = rand(ks[2], (B, Smax, 2, 64))
     lens = jnp.asarray([1, 100, 256], jnp.int32)
-    got = ops.decode_attention(q, k, v, lens)
+    got = ops.decode_attention(q, k, v, lens, impl="interpret")
     want = ref.decode_attention_ref(q, k, v, lens)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_decode_attention_ragged_lengths_vs_ref():
+    """The serving contract of the flash-decode kernel: mixed per-row
+    lengths, lengths that end mid-block, and length-0 (dead-slot) rows."""
+    from repro.kernels.decode_attention import decode_attention_fwd
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    B, nkv, group, hd, Smax, bk = 5, 2, 2, 32, 64, 16
+    q = rand(ks[0], (B, nkv, group, hd))
+    k = rand(ks[1], (B, nkv, Smax, hd))
+    v = rand(ks[2], (B, nkv, Smax, hd))
+    # 0: dead slot; 5/23: mid-block (not multiples of block_k=16);
+    # 16: exactly one block; 64: full cache
+    lens = jnp.asarray([0, 5, 16, 23, 64], jnp.int32)
+    got = decode_attention_fwd(q, k, v, lens, block_k=bk, interpret=True)
+    # oracle in model layout: [B, nh, hd] q / [B, S, nkv, hd] kv
+    q_m = q.reshape(B, nkv * group, hd)
+    want = ref.decode_attention_ref(q_m, jnp.swapaxes(k, 1, 2),
+                                    jnp.swapaxes(v, 1, 2), lens)
+    want = want.reshape(B, nkv, group, hd)
+    # rows with a valid prefix match the oracle exactly
+    np.testing.assert_allclose(np.asarray(got)[1:], np.asarray(want)[1:],
+                               atol=2e-5, rtol=2e-5)
+    # a length-0 row skips every KV block and returns exact zeros (the
+    # oracle instead softmaxes a fully-masked row into a uniform average,
+    # so it is NOT the ground truth there)
+    np.testing.assert_array_equal(np.asarray(got)[0],
+                                  np.zeros_like(np.asarray(got)[0]))
+
+
+def test_decode_attention_dispatch_modes_agree():
+    """ref / interpret dispatch modes produce the same numbers through the
+    public entry point (pallas mode needs real TPU hardware)."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    B, Smax = 2, 128
+    q = rand(ks[0], (B, 4, 32))
+    k = rand(ks[1], (B, Smax, 2, 32))
+    v = rand(ks[2], (B, Smax, 2, 32))
+    lens = jnp.asarray([7, 127], jnp.int32)
+    a = ops.decode_attention(q, k, v, lens, impl="ref")
+    b = ops.decode_attention(q, k, v, lens, impl="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
 
 
 # ---------------------------------------------------------------------------
