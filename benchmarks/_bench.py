@@ -1,0 +1,35 @@
+"""Single writer for the root ``BENCH_*.json`` artifacts.
+
+Every benchmark section builds a payload dict and hands it to
+:func:`write_bench` — the one code path that serializes to the repo root.
+``benchmarks/out/`` is scratch space only (gitignored): incremental sweep
+state and large intermediate reports live there, but never a second copy
+of a BENCH file.  ``benchmarks/run.py`` (and CI) read the same root files
+back through :func:`read_bench`.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Optional
+
+ROOT = Path(__file__).parent.parent
+
+
+def bench_path(name: str) -> Path:
+    return ROOT / f"BENCH_{name}.json"
+
+
+def write_bench(name: str, payload: dict) -> Path:
+    """Persist one benchmark's record to the repo root (shared schema:
+    ``benchmark`` / ``config`` / ``rows`` / gates)."""
+    payload.setdefault("benchmark", name)
+    p = bench_path(name)
+    p.write_text(json.dumps(payload, indent=1) + "\n")
+    return p
+
+
+def read_bench(name: str) -> Optional[Any]:
+    p = bench_path(name)
+    return json.loads(p.read_text()) if p.exists() else None

@@ -32,7 +32,6 @@ Three XLA-analogue measurements:
 from __future__ import annotations
 
 import argparse
-import json
 import shutil
 import sys
 import tempfile
@@ -45,8 +44,12 @@ import jax.numpy as jnp
 from repro.core.compile_cache import CompileCache
 from repro.core.hier_compile import StageInstance, compile_stages
 
-OUT = Path(__file__).parent / "out"
-BENCH_JSON = Path(__file__).parent.parent / "BENCH_codegen_time.json"
+try:
+    from benchmarks._bench import bench_path, write_bench
+except ImportError:                     # script mode: python benchmarks/...
+    from _bench import bench_path, write_bench
+
+BENCH_JSON = bench_path("codegen_time")
 
 WARM_BAR = 5.0          # warm start must beat cold by this factor
 INCREMENTAL_BAR = 3.0   # one-def edit must beat full recompile by this
@@ -224,11 +227,13 @@ def main(argv=None) -> dict:
     res["cache"] = cb
     res["codegen_regression"] = not cb["gates"]["pass"]
 
-    OUT.mkdir(exist_ok=True)
-    (OUT / "codegen_time.json").write_text(json.dumps(res, indent=1))
-    # the BENCH file shares the sim_time schema: benchmark/config/rows/gates
-    BENCH_JSON.write_text(json.dumps(
-        {"benchmark": "codegen_time", **cb}, indent=1) + "\n")
+    # one root record (shared schema: benchmark/config/rows/gates); the
+    # Fig.8 sections ride along instead of duplicating under out/
+    write_bench("codegen_time", {
+        "benchmark": "codegen_time", **cb,
+        "stage_graph": res["stage_graph"],
+        "scan_vs_unroll": res["scan_vs_unroll"],
+    })
 
     sg, su = res["stage_graph"], res["scan_vs_unroll"]
     print(f"stage graph : monolithic {sg['monolithic']['wall_s']}s "

@@ -12,10 +12,6 @@ non-comment lines (the paper's convention).
 
 from __future__ import annotations
 
-import json
-from pathlib import Path
-
-OUT = Path(__file__).parent / "out"
 
 # --- Listing 1: peek vs manual buffer (update-count accumulate) --------------
 
@@ -155,8 +151,6 @@ def main() -> dict:
         "host_reduction_pct": host[0]["reduction_pct"],
         "paper_claims": {"kernel": "22% avg", "host": "51% avg"},
     }
-    OUT.mkdir(exist_ok=True)
-    (OUT / "loc.json").write_text(json.dumps(out, indent=1))
     for r in rows:
         print(f"{r['pattern']:<26} with={r['with_api']:>3} "
               f"without={r['without_api']:>3}  -{r['reduction_pct']}%")

@@ -30,13 +30,15 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
+
 import os
 import time
 from pathlib import Path
 
-OUT = Path(__file__).parent / "out"
-BENCH_JSON = Path(__file__).parent.parent / "BENCH_perf_iter.json"
+try:
+    from benchmarks._bench import read_bench, write_bench
+except ImportError:                     # script mode: python benchmarks/...
+    from _bench import read_bench, write_bench
 
 HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9,
       "hbm_capacity": 16e9}
@@ -388,16 +390,17 @@ def main(argv=None):
                     help="bypass the compile-cache memo (fresh measurement "
                          "of every variant)")
     args = ap.parse_args(argv)
-    OUT.mkdir(exist_ok=True)
-    path = OUT / "perf_iter.json"
-    results = json.loads(path.read_text()) if path.exists() else {}
+    # single artifact: the root BENCH file carries both the flattened
+    # trajectory rows and the raw per-cell state (which doubles as the
+    # resumable sweep record the old out/perf_iter.json duplicated)
+    prior = read_bench("perf_iter") or {}
+    results = dict(prior.get("cells", {}))
     for name, builder in CELLS.items():
         if args.cell not in ("all", name):
             continue
         results[name] = run_cell(name, builder, memo=not args.no_memo)
-        path.write_text(json.dumps(results, indent=1))
-    path.write_text(json.dumps(results, indent=1))
-    BENCH_JSON.write_text(json.dumps(_trajectory(results), indent=1) + "\n")
+        write_bench("perf_iter", {**_trajectory(results), "cells": results})
+    write_bench("perf_iter", {**_trajectory(results), "cells": results})
     return results
 
 

@@ -13,7 +13,7 @@ Sections:
   S:Serve   decode tokens/sec, per-slot vs batched        (serve_time.py)
   S:Dry-run 80-cell lower+compile summary                 (out/dryrun.json)
   S:Roofline three-term table                             (roofline.py)
-  S:Perf    hillclimb log                                 (out/perf_iter.json)
+  S:Perf    hillclimb log                                 (BENCH_perf_iter.json)
 """
 
 from __future__ import annotations
@@ -23,6 +23,14 @@ import json
 import sys
 from pathlib import Path
 
+try:
+    from benchmarks._bench import read_bench
+except ImportError:                     # script mode: python benchmarks/run.py
+    from _bench import read_bench
+
+# scratch space for non-BENCH intermediates (dryrun cells, roofline md);
+# the BENCH_*.json records live at the repo root — benchmarks/_bench.py is
+# their single writer and out/ never holds a second copy
 OUT = Path(__file__).parent / "out"
 
 
@@ -61,12 +69,25 @@ def roofline_summary() -> None:
 
 
 def perf_summary() -> None:
-    p = OUT / "perf_iter.json"
-    if not p.exists():
-        print("missing out/perf_iter.json — run "
+    rec = read_bench("perf_iter") or {}
+    d = rec.get("cells")
+    if not d and rec.get("rows"):
+        # trajectory-only record (pre-`cells` schema): flat row display
+        for r in rec["rows"]:
+            if "error" in r:
+                print(f"[{r['cell']}] {r['variant']:<28} "
+                      f"ERROR {r['error'][:80]}")
+                continue
+            print(f"[{r['cell']}] {r['variant']:<28} "
+                  f"comp={r['compute_s']*1e3:8.1f}ms "
+                  f"mem={r['memory_s']*1e3:8.1f}ms "
+                  f"coll={r['collective_s']*1e3:8.1f}ms "
+                  f"dom={r['dominant']}")
+        return
+    if not d:
+        print("missing BENCH_perf_iter.json — run "
               "`python -m benchmarks.perf_iter`")
         return
-    d = json.loads(p.read_text())
     for cell in d.values():
         print(f"\n[{cell['cell']}] {cell['arch']} | {cell['shape']}")
         for v in cell["variants"]:

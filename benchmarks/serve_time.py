@@ -22,14 +22,17 @@ Results persist to ``BENCH_serve_time.json`` at the repo root.
 from __future__ import annotations
 
 import argparse
-import json
 import time
-from pathlib import Path
 
 import jax
 import numpy as np
 
-BENCH_JSON = Path(__file__).parent.parent / "BENCH_serve_time.json"
+try:
+    from benchmarks._bench import bench_path, write_bench
+except ImportError:                     # script mode: python benchmarks/...
+    from _bench import bench_path, write_bench
+
+BENCH_JSON = bench_path("serve_time")
 
 GATE_SLOTS = 8
 GATE_SPEEDUP = 3.0
@@ -163,7 +166,7 @@ def main(argv=None) -> dict:
     else:
         res = measure()
     print_report(res)
-    BENCH_JSON.write_text(json.dumps(res, indent=1) + "\n")
+    write_bench("serve_time", res)
     print(f"wrote {BENCH_JSON}")
     return res
 

@@ -30,15 +30,18 @@ shrinks everything for CI smoke runs.
 from __future__ import annotations
 
 import argparse
-import json
 import time
-from pathlib import Path
+from typing import Optional
 
 import repro
 from repro.apps import APPS, FEEDBACK_APPS
 
-OUT = Path(__file__).parent / "out"
-BENCH_JSON = Path(__file__).parent.parent / "BENCH_sim_time.json"
+try:
+    from benchmarks._bench import bench_path, write_bench
+except ImportError:                     # script mode: python benchmarks/...
+    from _bench import bench_path, write_bench
+
+BENCH_JSON = bench_path("sim_time")
 
 # per-app size overrides: (fast, paper-ish)
 SIZES = {
@@ -222,10 +225,14 @@ def throughput(n_tokens: int = 20000, stages: int = 8, capacity: int = 64,
     return out
 
 
-def write_bench_json(thr: dict) -> None:
+def write_bench_json(thr: dict, apps: Optional[dict] = None) -> None:
     """Persist the perf trajectory record (consumed by benchmarks/run.py
-    and CI regression checks)."""
-    BENCH_JSON.write_text(json.dumps(thr, indent=1) + "\n")
+    and CI regression checks) — the app-simulation section rides along in
+    the same root file instead of a duplicate under benchmarks/out/."""
+    payload = {"benchmark": "sim_time", **thr}
+    if apps:
+        payload["apps"] = apps
+    write_bench("sim_time", payload)
 
 
 def print_throughput(thr: dict) -> None:
@@ -262,8 +269,6 @@ def main(argv=None) -> dict:
     if not args.skip_apps:
         out = run(paper_scale=args.paper_scale,
                   repeats=1 if args.quick else 3)
-        OUT.mkdir(exist_ok=True)
-        (OUT / "sim_time.json").write_text(json.dumps(out, indent=1))
         print(f"{'app':<10} {'insts':>5} {'chans':>5} "
               f"{'seq_ms':>8} {'thread_ms':>9} {'coro_ms':>8} {'coro/thr':>8}")
         for r in out["rows"]:
@@ -281,7 +286,7 @@ def main(argv=None) -> dict:
     else:
         thr = throughput()
     print_throughput(thr)
-    write_bench_json(thr)
+    write_bench_json(thr, apps=out or None)
     print(f"wrote {BENCH_JSON}")
     out["throughput"] = thr
 

@@ -28,17 +28,21 @@ Public API mirrors the paper's (Table 2 / Listings 4-5)::
 
 from .core import (EOT, Channel, IStream, OStream, channel, select, run,
                    task, invoke,
-                   elaborate, Graph, SimReport, ENGINES, Deadlock,
+                   MMap, AsyncMMap, Scalar, mmap, async_mmap, scalar,
+                   elaborate, Graph, InterfaceInfo, SimReport, ENGINES,
+                   Deadlock,
                    SequentialSimulationError, EndOfTransaction,
                    ChannelMisuse, StageInstance, compile_stages,
                    DataflowProgram)
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
 
 __all__ = [
     "EOT", "Channel", "IStream", "OStream", "channel", "select", "run",
     "task", "invoke",
-    "elaborate", "Graph", "SimReport", "ENGINES", "Deadlock",
+    "MMap", "AsyncMMap", "Scalar", "mmap", "async_mmap", "scalar",
+    "elaborate", "Graph", "InterfaceInfo", "SimReport", "ENGINES",
+    "Deadlock",
     "SequentialSimulationError", "EndOfTransaction", "ChannelMisuse",
     "StageInstance", "compile_stages", "DataflowProgram", "__version__",
 ]

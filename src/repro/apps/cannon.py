@@ -12,8 +12,9 @@ block on a dedicated init channel (one-producer rule); the rotation rings
 run PE->PE with wrap-around, so the cycles are genuine.  At P=8 this build
 has 88 instances and 320 channels — same shape, same task definitions.
 
-    PE(i,j) round r multiplies A(i, (i+j+r) mod P) x B((i+j+r) mod P, j)
-    and forwards A left / B up; after P rounds C(i,j) is complete.
+Interface migration: A and B enter through read ``mmap`` arguments, each
+collector row stores through its own writable view of C (one-writer per
+mmap), and the definitions are module-level — no closure-captured arrays.
 
 Burst note: cannon is the anti-burst benchmark.  Every rotation token is
 data-dependent on the previous round (the block a PE forwards is the block
@@ -29,8 +30,39 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core import channel, task
+from ..core import MMap, channel, mmap, task
 from .base import AppResult, simulate
+
+
+def ADistrib(a: MMap, inits, i: int, n: int, P: int):
+    # initial Cannon skew: PE(i,j) holds A(i, (i+j) mod P)
+    for j, ch in enumerate(inits):
+        k = (i + j) % P
+        ch.write(a[i * n:(i + 1) * n, k * n:(k + 1) * n])
+
+
+def BDistrib(b: MMap, inits, j: int, n: int, P: int):
+    # initial Cannon skew: PE(i,j) holds B((i+j) mod P, j)
+    for i, ch in enumerate(inits):
+        k = (i + j) % P
+        ch.write(b[k * n:(k + 1) * n, j * n:(j + 1) * n])
+
+
+def PE(a_init, b_init, a_in, b_in, a_out, b_out, c_out, rounds: int):
+    acc = None
+    for r in range(rounds):
+        a = a_init.read() if r == 0 else a_in.read()
+        b = b_init.read() if r == 0 else b_in.read()
+        acc = a @ b if acc is None else acc + a @ b
+        if r < rounds - 1:            # rotate: A left, B up (torus)
+            a_out.write(a)
+            b_out.write(b)
+    c_out.write(acc)
+
+
+def Collector(c_row: MMap, c_ins, i: int, n: int):
+    for j, ch in enumerate(c_ins):
+        c_row[:, j * n:(j + 1) * n] = ch.read()
 
 
 def build(P: int = 4, n: int = 8, seed: int = 0):
@@ -40,35 +72,11 @@ def build(P: int = 4, n: int = 8, seed: int = 0):
     B = rng.standard_normal((P * n, P * n)).astype(np.float32)
     C = np.zeros_like(A)
 
-    def blk(M, i, j):
-        return M[i * n:(i + 1) * n, j * n:(j + 1) * n].copy()
+    a_mm = mmap(A, "A")
+    b_mm = mmap(B, "B")
+    c_rows = [mmap(C[i * n:(i + 1) * n, :], f"C{i}") for i in range(P)]
 
-    def ADistrib(inits, i: int):
-        # initial Cannon skew: PE(i,j) holds A(i, (i+j) mod P)
-        for j, ch in enumerate(inits):
-            ch.write(blk(A, i, (i + j) % P))
-
-    def BDistrib(inits, j: int):
-        # initial Cannon skew: PE(i,j) holds B((i+j) mod P, j)
-        for i, ch in enumerate(inits):
-            ch.write(blk(B, (i + j) % P, j))
-
-    def PE(a_init, b_init, a_in, b_in, a_out, b_out, c_out, rounds: int):
-        acc = None
-        for r in range(rounds):
-            a = a_init.read() if r == 0 else a_in.read()
-            b = b_init.read() if r == 0 else b_in.read()
-            acc = a @ b if acc is None else acc + a @ b
-            if r < rounds - 1:            # rotate: A left, B up (torus)
-                a_out.write(a)
-                b_out.write(b)
-        c_out.write(acc)
-
-    def Collector(c_ins, i: int):
-        for j, ch in enumerate(c_ins):
-            C[i * n:(i + 1) * n, j * n:(j + 1) * n] = ch.read()
-
-    def Top():
+    def Top(a: MMap, b: MMap, c_views):
         ai = [[channel(2, f"ai{i}_{j}") for j in range(P)] for i in range(P)]
         bi = [[channel(2, f"bi{i}_{j}") for j in range(P)] for i in range(P)]
         a_ch = [[channel(2, f"a{i}_{j}") for j in range(P)] for i in range(P)]
@@ -76,8 +84,8 @@ def build(P: int = 4, n: int = 8, seed: int = 0):
         c_ch = [[channel(1, f"c{i}_{j}") for j in range(P)] for i in range(P)]
         t = task()
         for i in range(P):
-            t = t.invoke(ADistrib, ai[i], i, name=f"ADistrib{i}")
-            t = t.invoke(BDistrib, [bi[r][i] for r in range(P)], i,
+            t = t.invoke(ADistrib, a, ai[i], i, n, P, name=f"ADistrib{i}")
+            t = t.invoke(BDistrib, b, [bi[r][i] for r in range(P)], i, n, P,
                          name=f"BDistrib{i}")
         for i in range(P):
             for j in range(P):
@@ -88,14 +96,15 @@ def build(P: int = 4, n: int = 8, seed: int = 0):
                     b_ch[(i - 1) % P][j],      # forward B up
                     c_ch[i][j], P, name=f"PE{i}_{j}")
         for i in range(P):
-            t = t.invoke(Collector, c_ch[i], i, name=f"Collector{i}")
+            t = t.invoke(Collector, c_views[i], c_ch[i], i, n,
+                         name=f"Collector{i}")
 
     def check():
         ref = A @ B
         err = float(np.max(np.abs(C - ref)))
         return err < 1e-3 * P * n, err
 
-    return Top, (), check
+    return Top, (a_mm, b_mm, c_rows), check
 
 
 def run(engine: str = "coroutine", P: int = 4, n: int = 8,

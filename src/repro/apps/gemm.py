@@ -6,14 +6,67 @@ C stays resident in the PE (output-stationary).  The graph is a DAG, so
 even the sequential simulator handles it — the interesting axis here is
 C3: one PE definition stamped out P^2 times (14 tasks / 207 instances in
 the paper's build).
+
+Interface migration: the matrices enter through declared ``mmap``
+arguments (paper Table 2) instead of closure capture — feeders *load*
+from ``a``/``b``, each row's collector *stores* into its own view of C
+(one-writer rule), and the task definitions are module-level functions,
+so every build shares the same definitions and the memory traffic shows
+up in the graph IR and per-interface stats.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..core import channel, task
+from ..core import MMap, OStream, channel, mmap, task
 from .base import AppResult, simulate
+
+
+def AFeeder(a: MMap, out: OStream, i: int, n: int, K: int):
+    # burst write: row i's K blocks move in capacity-sized batches, one
+    # runtime interaction per batch instead of per block; the mmap load is
+    # one burst-tracked block per k
+    out.write_burst([a[i * n:(i + 1) * n, k * n:(k + 1) * n]
+                     for k in range(K)])
+    out.close()
+
+
+def BFeeder(b: MMap, out: OStream, j: int, n: int, K: int):
+    out.write_burst([b[k * n:(k + 1) * n, j * n:(j + 1) * n]
+                     for k in range(K)])
+    out.close()
+
+
+def PE(a_in, b_in, a_out, b_out, c_out, burst: int = 2):
+    acc = None
+    while True:
+        a_blks = a_in.read_burst(burst)
+        if not a_blks:
+            break
+        # the B stream carries exactly as many blocks as the A stream,
+        # so a same-sized burst keeps the pair in lockstep
+        b_blks = b_in.read_burst(len(a_blks))
+        for a, b in zip(a_blks, b_blks):
+            acc = a @ b if acc is None else acc + a @ b
+        if a_out is not None:
+            a_out.write_burst(a_blks)
+        if b_out is not None:
+            b_out.write_burst(b_blks)
+        if len(a_blks) < burst:
+            break
+    a_in.open()
+    b_in.open()
+    if a_out is not None:
+        a_out.close()
+    if b_out is not None:
+        b_out.close()
+    c_out.write(acc)
+
+
+def Collector(c_row: MMap, c_ins, i: int, n: int):
+    for j, ch in enumerate(c_ins):
+        c_row[:, j * n:(j + 1) * n] = ch.read()
 
 
 def build(P: int = 4, n: int = 8, K: int = 4, seed: int = 0):
@@ -23,56 +76,20 @@ def build(P: int = 4, n: int = 8, K: int = 4, seed: int = 0):
     B = rng.standard_normal((K * n, P * n)).astype(np.float32)
     C = np.zeros((P * n, P * n), np.float32)
 
-    def AFeeder(out, i: int):
-        # burst write: row i's K blocks move in capacity-sized batches,
-        # one runtime interaction per batch instead of per block
-        out.write_burst([A[i * n:(i + 1) * n, k * n:(k + 1) * n].copy()
-                         for k in range(K)])
-        out.close()
+    a_mm = mmap(A, "A")
+    b_mm = mmap(B, "B")
+    # one writable view of C per collector: the one-writer rule holds per
+    # mmap object, and numpy views write through to the same buffer
+    c_rows = [mmap(C[i * n:(i + 1) * n, :], f"C{i}") for i in range(P)]
 
-    def BFeeder(out, j: int):
-        out.write_burst([B[k * n:(k + 1) * n, j * n:(j + 1) * n].copy()
-                         for k in range(K)])
-        out.close()
-
-    def PE(a_in, b_in, a_out, b_out, c_out, burst: int = 2):
-        acc = None
-        while True:
-            a_blks = a_in.read_burst(burst)
-            if not a_blks:
-                break
-            # the B stream carries exactly as many blocks as the A stream,
-            # so a same-sized burst keeps the pair in lockstep
-            b_blks = b_in.read_burst(len(a_blks))
-            for a, b in zip(a_blks, b_blks):
-                acc = a @ b if acc is None else acc + a @ b
-            if a_out is not None:
-                a_out.write_burst(a_blks)
-            if b_out is not None:
-                b_out.write_burst(b_blks)
-            if len(a_blks) < burst:
-                break
-        a_in.open()
-        b_in.open()
-        if a_out is not None:
-            a_out.close()
-        if b_out is not None:
-            b_out.close()
-        c_out.write(acc)
-
-    def Collector(c_ins, i: int):
-        for j, ch in enumerate(c_ins):
-            C[i * n:(i + 1) * n, j * n:(j + 1) * n] = ch.read()
-
-    def Top():
-        # horizontal A channels: (P rows) x (P+... one per hop)
+    def Top(a: MMap, b: MMap, c_views):
         a_ch = [[channel(2, f"a{i}_{j}") for j in range(P)] for i in range(P)]
         b_ch = [[channel(2, f"b{i}_{j}") for j in range(P)] for i in range(P)]
         c_ch = [[channel(1, f"c{i}_{j}") for j in range(P)] for i in range(P)]
         t = task()
         for i in range(P):
-            t = t.invoke(AFeeder, a_ch[i][0], i, name=f"AFeeder{i}")
-            t = t.invoke(BFeeder, b_ch[0][i], i, name=f"BFeeder{i}")
+            t = t.invoke(AFeeder, a, a_ch[i][0], i, n, K, name=f"AFeeder{i}")
+            t = t.invoke(BFeeder, b, b_ch[0][i], i, n, K, name=f"BFeeder{i}")
         for i in range(P):
             for j in range(P):
                 t = t.invoke(
@@ -81,14 +98,15 @@ def build(P: int = 4, n: int = 8, K: int = 4, seed: int = 0):
                     b_ch[i + 1][j] if i + 1 < P else None,
                     c_ch[i][j], name=f"PE{i}_{j}")
         for i in range(P):
-            t = t.invoke(Collector, c_ch[i], i, name=f"Collector{i}")
+            t = t.invoke(Collector, c_views[i], c_ch[i], i, n,
+                         name=f"Collector{i}")
 
     def check():
         ref = A @ B
         err = float(np.max(np.abs(C - ref)))
         return err < 1e-3 * K * n, err
 
-    return Top, (), check
+    return Top, (a_mm, b_mm, c_rows), check
 
 
 def run(engine: str = "coroutine", P: int = 4, n: int = 8, K: int = 4,

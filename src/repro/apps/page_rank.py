@@ -8,6 +8,14 @@ UpdateHandlers accumulate them per destination partition using the
 *peek-to-detect-partition-conflict* idiom of Listing 1 and EoT-delimited
 update transactions of Listing 2.
 
+Interface migration: the rank and out-degree vectors live behind ``mmap``
+arguments served by the VertexHandlers (only the handler on Ctrl's
+channel ever stores — the runtime-observed one-writer rule), and each
+ComputeUnit fetches its edge list through an ``async_mmap`` port: edge
+addresses are issued ahead of the returning data (``read_pipelined``), so
+with outstanding depth > 1 the fetch round-trips overlap — visible as
+``max_outstanding_reads`` in the per-interface sim stats.
+
 The Ctrl <-> VertexHandler request/response pair is a feedback loop in the
 dataflow graph, so — like cannon — the sequential engine must fail on this
 benchmark (Fig. 7), while thread/coroutine engines converge to the same
@@ -18,14 +26,88 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core import EOT, channel, task
+from ..core import AsyncMMap, MMap, async_mmap, channel, mmap, task
 from .base import AppResult, simulate
 
 DAMPING = 0.85
 
 
+def VertexHandler(ranks: MMap, out_deg: MMap, req, resp):
+    """Serve rank reads and apply rank writes; never terminates
+    (invoked with detach=True, paper Listing 5)."""
+    while True:
+        kind, payload = req.read()
+        if kind == "read":
+            resp.write(ranks[payload] / out_deg[payload])
+        else:                       # ("write", (vertex, value))
+            v, val = payload
+            ranks[v] = val
+
+
+def ComputeUnit(edges: AsyncMMap, ctrl_in, upd_out, vreq, vresp):
+    """Scatter phase for one partition: one update transaction per
+    iteration.  Edge fetches go through the async memory port with the
+    addresses pipelined ahead of the data (request/response overlap);
+    vertex lookups are pipelined in bursts bounded by the response
+    channel's capacity, so the handler round-trip cost is amortized
+    across each batch."""
+    n_edges = len(edges)
+    burst = vresp.channel.capacity
+    while True:
+        go = ctrl_in.read()
+        if go is None:              # shutdown
+            break
+        for base in range(0, n_edges, burst):
+            hi = min(base + burst, n_edges)
+            chunk = edges.read_pipelined(range(base, hi))
+            vreq.write_burst([("read", int(s)) for s, _ in chunk])
+            ws = vresp.read_burst(len(chunk))
+            upd_out.write_burst([(int(d), w)
+                                 for (_, d), w in zip(chunk, ws)])
+        upd_out.close()             # end of this iteration's transaction
+
+
+def UpdateHandler(upd_in, commit_out, p: int, part: int, n_vertices: int):
+    """Gather phase: accumulate one iteration's update transaction
+    (EoT-delimited, Listing 2) in a local register file, then report
+    the partition's aggregate to Ctrl for commit."""
+    lo = p * part
+    hi = min(lo + part, n_vertices)
+    while True:
+        acc = np.zeros(hi - lo, np.float64)
+        for d, w in upd_in.read_transaction():
+            acc[d - lo] += w        # register accumulate (Listing 1)
+        commit_out.write((p, acc))
+
+
+def Ctrl(cu_outs, commit_ins, vreq, vresp, n_iters: int, part: int,
+         n_vertices: int):
+    for it in range(n_iters):
+        for o in cu_outs:
+            o.write(True)           # start scatter on every PE
+        # barrier: collect EVERY partition's commit before writing any
+        # rank back — scatter must see a consistent iteration-i view
+        commits = [ci.read() for ci in commit_ins]
+        for p, acc in commits:
+            lo = p * part
+            # rank write-back is fire-and-forget: a single burst moves
+            # the whole partition (chunked by channel capacity)
+            vreq.write_burst(
+                [("write",
+                  (lo + i, (1 - DAMPING) / n_vertices + DAMPING * val))
+                 for i, val in enumerate(acc)])
+        # read-as-fence: the handler serves FIFO, so a round-trip read
+        # proves every prior write of this iteration has been applied
+        # before the next iteration's scatter starts
+        vreq.write(("read", 0))
+        vresp.read()
+    for o in cu_outs:
+        o.write(None)               # shutdown compute units
+
+
 def build(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,
-          n_iters: int = 5, seed: int = 0):
+          n_iters: int = 5, seed: int = 0, edge_latency: int = 4,
+          edge_depth: int = 4):
     rng = np.random.default_rng(seed)
     src = rng.integers(0, n_vertices, n_edges).astype(np.int64)
     dst = rng.integers(0, n_vertices, n_edges).astype(np.int64)
@@ -33,77 +115,19 @@ def build(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,
 
     ranks = np.full(n_vertices, 1.0 / n_vertices, np.float64)
     part = (n_vertices + n_pe - 1) // n_pe
-    # edges assigned to PEs by destination partition (gather locality)
-    pe_edges = [[(int(s), int(d)) for s, d in zip(src, dst)
-                 if d // part == p] for p in range(n_pe)]
+    # edges assigned to PEs by destination partition (gather locality),
+    # each partition's (src, dst) rows behind its own async memory port
+    pe_edges = [np.array([(int(s), int(d)) for s, d in zip(src, dst)
+                          if d // part == p], np.int64).reshape(-1, 2)
+                for p in range(n_pe)]
 
-    def VertexHandler(req, resp):
-        """Serve rank reads and apply rank writes; never terminates
-        (invoked with detach=True, paper Listing 5)."""
-        while True:
-            kind, payload = req.read()
-            if kind == "read":
-                resp.write(ranks[payload] / out_deg[payload])
-            else:                       # ("write", (vertex, value))
-                v, val = payload
-                ranks[v] = val
+    ranks_mm = mmap(ranks, "ranks")
+    deg_mm = mmap(out_deg, "out_deg")
+    edge_ports = [async_mmap(pe_edges[p], latency=edge_latency,
+                             depth=edge_depth, name=f"edges{p}")
+                  for p in range(n_pe)]
 
-    def ComputeUnit(ctrl_in, upd_out, vreq, vresp, p: int):
-        """Scatter phase for partition p: one update transaction per
-        iteration.  Vertex lookups are pipelined in bursts: up to
-        ``resp-capacity`` read requests go out per batch, so the in-flight
-        responses can never exceed the response channel and the handler
-        round-trip cost is amortized across the batch."""
-        edges = pe_edges[p]
-        burst = vresp.channel.capacity
-        while True:
-            go = ctrl_in.read()
-            if go is None:              # shutdown
-                break
-            for base in range(0, len(edges), burst):
-                chunk = edges[base:base + burst]
-                vreq.write_burst([("read", s) for s, _ in chunk])
-                ws = vresp.read_burst(len(chunk))
-                upd_out.write_burst([(d, w)
-                                     for (_, d), w in zip(chunk, ws)])
-            upd_out.close()             # end of this iteration's transaction
-
-    def UpdateHandler(upd_in, commit_out, p: int):
-        """Gather phase: accumulate one iteration's update transaction
-        (EoT-delimited, Listing 2) in a local register file, then report
-        the partition's aggregate to Ctrl for commit."""
-        lo = p * part
-        hi = min(lo + part, n_vertices)
-        while True:
-            acc = np.zeros(hi - lo, np.float64)
-            for d, w in upd_in.read_transaction():
-                acc[d - lo] += w        # register accumulate (Listing 1)
-            commit_out.write((p, acc))
-
-    def Ctrl(cu_outs, commit_ins, vreq, vresp):
-        for it in range(n_iters):
-            for o in cu_outs:
-                o.write(True)           # start scatter on every PE
-            # barrier: collect EVERY partition's commit before writing any
-            # rank back — scatter must see a consistent iteration-i view
-            commits = [ci.read() for ci in commit_ins]
-            for p, acc in commits:
-                lo = p * part
-                # rank write-back is fire-and-forget: a single burst moves
-                # the whole partition (chunked by channel capacity)
-                vreq.write_burst(
-                    [("write",
-                      (lo + i, (1 - DAMPING) / n_vertices + DAMPING * val))
-                     for i, val in enumerate(acc)])
-            # read-as-fence: the handler serves FIFO, so a round-trip read
-            # proves every prior write of this iteration has been applied
-            # before the next iteration's scatter starts
-            vreq.write(("read", 0))
-            vresp.read()
-        for o in cu_outs:
-            o.write(None)               # shutdown compute units
-
-    def Top():
+    def Top(rk: MMap, deg: MMap, eports):
         vreq = channel(8, "vertex_req")
         vresp = channel(8, "vertex_resp")
         cu_go = [channel(2, f"go{p}") for p in range(n_pe)]
@@ -117,15 +141,16 @@ def build(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,
         cu_vresp = [channel(8, f"cu_vresp{p}") for p in range(n_pe)]
 
         t = task()
-        t = t.invoke(VertexHandler, vreq, vresp, detach=True)
+        t = t.invoke(VertexHandler, rk, deg, vreq, vresp, detach=True)
         for p in range(n_pe):
-            t = t.invoke(VertexHandler, cu_vreq[p], cu_vresp[p],
+            t = t.invoke(VertexHandler, rk, deg, cu_vreq[p], cu_vresp[p],
                          detach=True, name=f"VertexHandler{p}")
-            t = t.invoke(ComputeUnit, cu_go[p], upd[p], cu_vreq[p],
-                         cu_vresp[p], p, name=f"ComputeUnit{p}")
-            t = t.invoke(UpdateHandler, upd[p], commit[p], p,
-                         name=f"UpdateHandler{p}", detach=True)
-        t.invoke(Ctrl, cu_go, commit, vreq, vresp)
+            t = t.invoke(ComputeUnit, eports[p], cu_go[p], upd[p],
+                         cu_vreq[p], cu_vresp[p], name=f"ComputeUnit{p}")
+            t = t.invoke(UpdateHandler, upd[p], commit[p], p, part,
+                         n_vertices, name=f"UpdateHandler{p}", detach=True)
+        t.invoke(Ctrl, cu_go, commit, vreq, vresp, n_iters, part,
+                 n_vertices)
 
     def check():
         ref = np.full(n_vertices, 1.0 / n_vertices, np.float64)
@@ -136,7 +161,7 @@ def build(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,
         err = float(np.max(np.abs(ranks - ref)))
         return err < 1e-9, err
 
-    return Top, (), check
+    return Top, (ranks_mm, deg_mm, edge_ports), check
 
 
 def run(engine: str = "coroutine", **kw) -> AppResult:

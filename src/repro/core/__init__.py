@@ -1,6 +1,7 @@
 """repro.core — the paper's contribution as a composable module.
 
-C1: channels with peek/EoT/transactions + hierarchical task instantiation
+C1: channels with peek/EoT/transactions + typed task interfaces
+    (streams / mmap / async_mmap / scalar) + hierarchical instantiation
 C2: universal software simulation (sequential / thread / coroutine engines)
 C3: hierarchical (definition-deduplicated, parallel) compilation
 """
@@ -8,16 +9,20 @@ C3: hierarchical (definition-deduplicated, parallel) compilation
 from .channel import (EOT, Channel, IStream, OStream, channel, select,
                       READABLE, WRITABLE)
 from .compile_cache import (CacheStats, CompileCache, aval_signature,
-                            default_cache, instance_key, set_default_cache,
+                            default_cache, instance_key, lower_spec,
+                            runtime_value, set_default_cache,
                             structural_digest)
 from .engines import (ENGINES, CoroutineEngine, EngineBase, SequentialEngine,
                       SimReport, ThreadEngine, run)
 from .errors import (ChannelMisuse, Deadlock, EndOfTransaction,
                      GraphValidationError, ReproError,
                      SequentialSimulationError, TaskKilled)
-from .graph import DefinitionInfo, Graph, elaborate, extract_graph
+from .graph import (DefinitionInfo, Graph, InterfaceInfo, elaborate,
+                    extract_graph)
 from .hier_compile import (CompileReport, DataflowProgram, StageInstance,
                            build_dataflow, compile_stages, diff_definitions)
+from .interface import (AsyncMMap, Interface, InterfaceBinding, MMap,
+                        Scalar, async_mmap, mmap, scalar)
 from .invoke import invoke
 from .task import TaskBuilder, TaskInstance, task
 
@@ -27,10 +32,12 @@ __all__ = [
     "SequentialEngine", "SimReport", "ThreadEngine", "run", "ChannelMisuse",
     "Deadlock", "EndOfTransaction", "GraphValidationError", "ReproError",
     "SequentialSimulationError", "TaskKilled", "DefinitionInfo", "Graph",
-    "elaborate", "extract_graph", "CompileReport", "DataflowProgram",
-    "StageInstance", "build_dataflow", "compile_stages",
+    "InterfaceInfo", "elaborate", "extract_graph", "CompileReport",
+    "DataflowProgram", "StageInstance", "build_dataflow", "compile_stages",
     "diff_definitions", "TaskBuilder",
     "TaskInstance", "task", "invoke", "CacheStats", "CompileCache",
     "aval_signature", "default_cache", "set_default_cache", "instance_key",
-    "structural_digest",
+    "lower_spec", "runtime_value", "structural_digest",
+    "AsyncMMap", "Interface", "InterfaceBinding", "MMap", "Scalar",
+    "async_mmap", "mmap", "scalar",
 ]

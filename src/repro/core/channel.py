@@ -86,7 +86,7 @@ class Channel(Generic[T]):
 
     __slots__ = (
         "name", "capacity", "dtype", "_q", "uid",
-        "producer", "consumer", "parent",
+        "producer", "consumer", "parent", "iface",
         "total_written", "total_read", "max_occupancy",
         "_rwait", "_wwait", "_eot_count",
     )
@@ -110,6 +110,7 @@ class Channel(Generic[T]):
         self.producer = None   # task instance acting as producer
         self.consumer = None   # task instance acting as consumer
         self.parent = None     # parent task that instantiated this channel
+        self.iface = None      # owning interface (async_mmap port channels)
         # Statistics (opt-in: engines update these only under
         # ``track_stats=True``, at burst granularity; the default hot path
         # does no bookkeeping).

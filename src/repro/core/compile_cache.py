@@ -172,8 +172,17 @@ def _enc_fn(h, fn: Callable, depth: int, seen: set) -> None:
 
 def _enc(h, v: Any, depth: int = 0, seen: Optional[set] = None) -> None:
     seen = seen if seen is not None else set()
+    iface = getattr(v, "iface_kind", None)
     if v is None or isinstance(v, (bool, int, float, complex, str, bytes)):
         h.update(f"lit:{v!r}".encode())
+    elif iface in ("mmap", "async_mmap"):
+        # the typed-interface contract (paper S3.1.2): an mmap argument is
+        # a *runtime* device buffer, so only its aval reaches the hash —
+        # two instances differing in array values share one definition
+        h.update(f"{iface}:{v.dtype}:{tuple(v.shape)}".encode())
+    elif iface == "scalar":
+        h.update(b"scalar")
+        _enc(h, v.value, depth, seen)
     elif isinstance(v, types.ModuleType):
         h.update(f"mod:{v.__name__}".encode())
     elif isinstance(v, types.CodeType):
@@ -237,8 +246,14 @@ def structural_digest(fn: Callable) -> str:
 
 
 def aval_signature(args: tuple, kwargs: dict) -> tuple:
-    """Shape/dtype signature of array-like args (ShapeDtypeStruct aware)."""
+    """Shape/dtype signature of array-like args (ShapeDtypeStruct and
+    interface aware: mmap/async_mmap sign by aval, scalars by value)."""
     def one(x):
+        k = getattr(x, "iface_kind", None)
+        if k in ("mmap", "async_mmap"):
+            return (k, tuple(x.shape), str(x.dtype))
+        if k == "scalar":
+            return ("lit", repr(x.value))
         if hasattr(x, "shape") and hasattr(x, "dtype"):
             return ("arr", tuple(x.shape), str(x.dtype))
         if isinstance(x, (list, tuple)):
@@ -251,6 +266,40 @@ def aval_signature(args: tuple, kwargs: dict) -> tuple:
 
 
 _aval_signature = aval_signature        # pre-rename alias
+
+
+def lower_spec(v: Any) -> Any:
+    """Replace interface arguments with what the XLA lowering should see:
+    mmap/async_mmap become :class:`jax.ShapeDtypeStruct` placeholders (the
+    buffer is a runtime input, not a baked constant) and scalars unwrap to
+    their value.  Containers are converted recursively."""
+    k = getattr(v, "iface_kind", None)
+    if k in ("mmap", "async_mmap"):
+        import jax
+        return jax.ShapeDtypeStruct(v.shape, np.dtype(v.dtype))
+    if k == "scalar":
+        return v.value
+    if isinstance(v, (list, tuple)):
+        return type(v)(lower_spec(x) for x in v)
+    if isinstance(v, dict):
+        return {key: lower_spec(x) for key, x in v.items()}
+    return v
+
+
+def runtime_value(v: Any) -> Any:
+    """Replace interface arguments with their runtime payload: the mmap's
+    device buffer / the scalar's value — what a compiled executable is
+    actually fed (mirrors :func:`lower_spec`)."""
+    k = getattr(v, "iface_kind", None)
+    if k in ("mmap", "async_mmap"):
+        return v.data
+    if k == "scalar":
+        return v.value
+    if isinstance(v, (list, tuple)):
+        return type(v)(runtime_value(x) for x in v)
+    if isinstance(v, dict):
+        return {key: runtime_value(x) for key, x in v.items()}
+    return v
 
 
 def instance_key(fn: Callable, args: tuple = (), kwargs: Optional[dict] = None,
@@ -437,8 +486,10 @@ class CompileCache:
         key = key or instance_key(hash_fn or fn, args, kwargs, extra=extra)
         exe, source = self.get_with_source(key)
         if exe is None:
+            largs = tuple(lower_spec(a) for a in args)
+            lkw = {k: lower_spec(v) for k, v in kwargs.items()}
             exe = jax.jit(jit_fn or fn, **(jit_kwargs or {})) \
-                .lower(*args, **kwargs).compile()
+                .lower(*largs, **lkw).compile()
             self.put(key, exe)
             source = "compiled"
         return exe, source

@@ -48,6 +48,8 @@ plus two attributes streams read on the hot path:
 
 from __future__ import annotations
 
+import heapq
+import itertools
 import threading
 import time
 from collections import deque
@@ -57,6 +59,7 @@ from typing import Any, Callable, Optional
 from .channel import Channel, READABLE, WRITABLE
 from .context import clear_context, set_context
 from .errors import Deadlock, SequentialSimulationError, TaskKilled
+from .interface import AsyncMMap, MMap
 from .task import (TaskInstance, bind_streams, builder_stack_depth,
                    join_pending_builders)
 
@@ -80,9 +83,14 @@ class SimReport:
     n_channels: int
     tokens: int
     capacity_violations: int = 0
+    async_violations: int = 0   # sequential engine: sync-delivered requests
     error: Optional[str] = None
     instances: list = field(default_factory=list)
     channels: list = field(default_factory=list)
+    # (name, kind, stats dict) per mmap/async_mmap interface; async_mmap
+    # request counters (incl. max_outstanding_*) are always recorded, MMap
+    # load/store counters only under track_stats
+    interfaces: list = field(default_factory=list)
     result: Any = None      # return value of the top-level task body
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
@@ -92,15 +100,23 @@ class SimReport:
                 f"tokens={self.tokens}>")
 
 
-def _find_channels(obj: Any, acc: set) -> None:
+def _find_channels(obj: Any, acc: set,
+                   ifaces: Optional[set] = None) -> None:
     if isinstance(obj, Channel):
         acc.add(obj)
+    elif isinstance(obj, AsyncMMap):
+        if ifaces is not None:
+            ifaces.add(obj)
+        acc.update(obj.channels())
+    elif isinstance(obj, MMap):
+        if ifaces is not None:
+            ifaces.add(obj)
     elif isinstance(obj, (list, tuple)):
         for v in obj:
-            _find_channels(v, acc)
+            _find_channels(v, acc, ifaces)
     elif isinstance(obj, dict):
         for v in obj.values():
-            _find_channels(v, acc)
+            _find_channels(v, acc, ifaces)
 
 
 class EngineBase:
@@ -109,10 +125,30 @@ class EngineBase:
     def __init__(self, track_stats: bool = False):
         self.instances: list[TaskInstance] = []
         self.channel_set: set[Channel] = set()
+        self.interface_set: set = set()          # MMap/AsyncMMap objects
+        self._ports: list[AsyncMMap] = []        # async ports needing pump
         self.switches = 0
         self.capacity_violations = 0
+        self.async_violations = 0
         self.track_stats = track_stats
         self.fast_path = False
+        # async-response machinery (paper Table 2's async_mmap): a heap of
+        # (due_tick, seq, deliver_fn) events over a logical clock that
+        # advances with scheduling activity and fast-forwards when every
+        # task is stalled waiting on memory
+        self.clock = 0
+        self._events: list = []
+        self._event_seq = itertools.count()
+        # sequential engine: responses must be delivered synchronously even
+        # into a full response channel (it cannot wait) — the recorded
+        # violation, mirroring its channel-capacity growth
+        self.force_async = False
+        # annotation-driven auto-wrap registry: one MMap wrapper per raw
+        # buffer per run, so two tasks annotated `m: MMap` receiving the
+        # same ndarray share a wrapper (one-writer enforceable) and the
+        # wrapper shows up in interface_set like an explicit mmap
+        self._adopted: dict[int, Any] = {}
+        self._adopt_lock = threading.Lock()
 
     # -- runtime protocol (overridden) --------------------------------------
     def wait(self, chan: Channel, side: str) -> None:
@@ -150,6 +186,78 @@ class EngineBase:
     def join(self, insts: list[TaskInstance]) -> None:
         raise NotImplementedError
 
+    # -- async interface protocol (used by repro.core.interface) -------------
+    def schedule_async(self, delay: int, deliver: Callable) -> None:
+        """Schedule ``deliver(engine)`` at ``clock + delay`` — the
+        response half of an accepted async_mmap request.  ``deliver``
+        returns False to be retried (response channel momentarily full)."""
+        heapq.heappush(self._events,
+                       (self.clock + delay, next(self._event_seq), deliver))
+
+    def iface_pump(self, iface: AsyncMMap) -> None:
+        """Offer queued requests to the memory model.  The thread engine
+        overrides this to hold its lock; single-task engines go direct."""
+        iface.pump(self)
+
+    def adopt_mmap(self, data: Any, name: str) -> MMap:
+        """Return this run's MMap wrapper for a raw buffer passed to an
+        ``MMap``-annotated parameter, creating and registering it on first
+        sight (keyed by buffer identity, which the registry entry pins)."""
+        with self._adopt_lock:
+            m = self._adopted.get(id(data))
+            if m is None:
+                m = MMap(data, name=name)
+                self._adopted[id(data)] = m
+                self.interface_set.add(m)
+            return m
+
+    def _iface_deliver(self, chan: Channel, tok: Any) -> None:
+        """Memory-side push of a response token + reader wakeup."""
+        raise NotImplementedError
+
+    def _iface_pop(self, chan: Channel) -> Any:
+        """Memory-side pop of an accepted request token + writer wakeup."""
+        raise NotImplementedError
+
+    def _deliver_due(self) -> int:
+        """Run every event due at the current clock; returns how many
+        actually delivered.  Deferred deliveries (full response channel)
+        are requeued one tick ahead so a later pass retries them."""
+        delivered = 0
+        requeue = []
+        while self._events and self._events[0][0] <= self.clock:
+            _, _, fn = heapq.heappop(self._events)
+            if fn(self):
+                delivered += 1
+            else:
+                requeue.append((self.clock + 1, next(self._event_seq), fn))
+        for ev in requeue:
+            heapq.heappush(self._events, ev)
+        return delivered
+
+    def _fast_forward(self) -> bool:
+        """No task can run: advance the clock through pending responses,
+        in due order, until one delivers.  A deferred delivery (full
+        response FIFO on a flooded port) must not mask a later-due event
+        on a *different* port, so every event pending at entry gets one
+        attempt.  Returns False only when none delivered — a genuine
+        deadlock."""
+        budget = len(self._events)      # each entry event tried at most once
+        requeue = []
+        delivered = False
+        while self._events and budget > 0 and not delivered:
+            due, _, fn = heapq.heappop(self._events)
+            budget -= 1
+            if due > self.clock:
+                self.clock = due
+            if fn(self):
+                delivered = True
+            else:
+                requeue.append((self.clock + 1, next(self._event_seq), fn))
+        for ev in requeue:
+            heapq.heappush(self._events, ev)
+        return delivered
+
     # -- shared helpers ------------------------------------------------------
     def _stat_push(self, chan: Channel, k: int) -> None:
         """Burst-granular write statistics (one update per batch)."""
@@ -160,21 +268,34 @@ class EngineBase:
 
     def _register(self, inst: TaskInstance) -> None:
         self.instances.append(inst)
-        _find_channels(inst.args, self.channel_set)
-        _find_channels(inst.kwargs, self.channel_set)
+        found_if: set = set()
+        _find_channels(inst.args, self.channel_set, found_if)
+        _find_channels(inst.kwargs, self.channel_set, found_if)
+        for it in found_if:
+            if it in self.interface_set:
+                continue
+            # first sighting under THIS engine: clear run-scoped binding
+            # state so a host-created interface re-simulates cleanly
+            it._reset_run()
+            self.interface_set.add(it)
+            if isinstance(it, AsyncMMap):
+                self._ports.append(it)
 
     def _report(self, ok: bool, wall: float, err: Optional[str],
                 result: Any = None) -> SimReport:
         chans = sorted(self.channel_set, key=lambda c: c.uid)
+        ifaces = sorted(self.interface_set, key=lambda i: i.uid)
         return SimReport(
             engine=self.name, ok=ok, wall_s=wall, switches=self.switches,
             n_instances=len(self.instances), n_channels=len(chans),
             tokens=sum(c.total_written for c in chans),
             capacity_violations=self.capacity_violations,
+            async_violations=self.async_violations,
             error=err,
             instances=[(i.name, i.state) for i in self.instances],
             channels=[(c.name, c.total_written, c.max_occupancy)
                       for c in chans],
+            interfaces=[(i.name, i.iface_kind, i.stats()) for i in ifaces],
             result=result,
         )
 
@@ -196,7 +317,26 @@ class SequentialEngine(EngineBase):
         # single thread, exclusive by construction: direct deque ops are
         # safe whenever stats don't need to observe every token
         self.fast_path = not track_stats
+        self.force_async = True
         self._cur: Optional[TaskInstance] = None
+
+    # async interfaces: a task runs to completion at its invocation point,
+    # so a response can never be overlapped with other work — deliver it
+    # synchronously at accept time and *record* the violation (the same
+    # documented degradation as growing channel capacity above)
+    def schedule_async(self, delay: int, deliver: Callable) -> None:
+        self.async_violations += 1
+        deliver(self)
+
+    def _iface_deliver(self, chan: Channel, tok: Any) -> None:
+        chan._push(tok)
+        if self.track_stats:
+            self._stat_push(chan, 1)
+
+    def _iface_pop(self, chan: Channel) -> Any:
+        if self.track_stats:
+            chan.total_read += 1
+        return chan._pop()
 
     # blocking ops ----------------------------------------------------------
     def wait(self, chan: Channel, side: str) -> None:
@@ -318,7 +458,9 @@ class ThreadEngine(EngineBase):
 
     def __init__(self, track_stats: bool = False):
         super().__init__(track_stats)
-        self._lock = threading.Lock()
+        # re-entrant: async_mmap request acceptance (iface_pump) nests
+        # schedule_async/_iface_pop under the same lock
+        self._lock = threading.RLock()
         self._conds: dict[tuple[int, str], threading.Condition] = {}
         self._finish_cond = threading.Condition(self._lock)
         self._threads: dict[int, threading.Thread] = {}
@@ -372,19 +514,48 @@ class ThreadEngine(EngineBase):
 
     def _maybe_end(self) -> None:
         """Called with the lock held whenever a task becomes blocked."""
-        if self._blocked >= self._live_unfinished() and \
-                self._started >= len(self.instances) and \
-                self._no_progress_possible():
+        if self._blocked < self._live_unfinished() or \
+                self._started < len(self.instances):
+            return
+        while self._no_progress_possible():
+            # every task stalled: pending async memory responses are the
+            # one legitimate way forward — fast-forward the clock and
+            # deliver, repeating until some waiter becomes satisfiable
+            # (the notifies wake it) or the event heap runs dry
+            if self._events and self._fast_forward():
+                continue
             if self._any_nondetached_unfinished():
                 self._trigger_deadlock()
             else:
                 self._trigger_stop()
+            return
+
+    # -- async interface protocol (lock-holding variants) --------------------
+    def iface_pump(self, iface: AsyncMMap) -> None:
+        with self._lock:
+            iface.pump(self)
+
+    def schedule_async(self, delay: int, deliver: Callable) -> None:
+        with self._lock:
+            super().schedule_async(delay, deliver)
+
+    # lock already held on these paths (pump or _deliver_due); push/pop
+    # re-acquire the RLock re-entrantly, keeping wake-up semantics in
+    # exactly one place
+    def _iface_deliver(self, chan: Channel, tok: Any) -> None:
+        self.push(chan, tok)
+
+    def _iface_pop(self, chan: Channel) -> Any:
+        return self.pop(chan)
 
     def wait(self, chan: Channel, side: str) -> None:
         cond = self._cond(chan, side)
         key = (chan.uid, side)
         with self._lock:
             self._check_abort()
+            self.clock += 1
+            if self._events:
+                self._deliver_due()
             if self._satisfied(chan, side):
                 return                      # lost-wakeup guard
             inst = _thread_inst.inst
@@ -394,6 +565,8 @@ class ThreadEngine(EngineBase):
             try:
                 self._maybe_end()
                 self._check_abort()
+                if self._satisfied(chan, side):
+                    return      # _maybe_end's fast-forward delivered here
                 self.switches += 1
                 cond.wait()
                 self._check_abort()
@@ -406,6 +579,9 @@ class ThreadEngine(EngineBase):
     def wait_many(self, keys: list) -> None:
         with self._lock:
             self._check_abort()
+            self.clock += 1
+            if self._events:
+                self._deliver_due()
             if any(self._satisfied(c, s) for c, s in keys):
                 return
             inst = _thread_inst.inst
@@ -729,11 +905,46 @@ class CoroutineEngine(EngineBase):
     def _next_ready(self) -> Optional["_Fiber"]:
         if self._tearing:
             return None                   # teardown: baton -> scheduler
-        while self._ready:
-            f = self._ready.popleft()
-            if not f.done:
-                return f
-        return None
+        if not self._ports and not self._events:
+            # no async interfaces in the program: zero-overhead path
+            while self._ready:
+                f = self._ready.popleft()
+                if not f.done:
+                    return f
+            return None
+        while True:
+            # service step: the clock ticks once per scheduling decision,
+            # queued requests are accepted, due responses delivered (their
+            # wakes append to the ready queue)
+            self.clock += 1
+            for port in self._ports:
+                port.pump(self)
+            if self._events:
+                self._deliver_due()
+            while self._ready:
+                f = self._ready.popleft()
+                if not f.done:
+                    return f
+            # nothing runnable: fast-forward to the next memory response;
+            # if that delivers nothing the stall is a genuine deadlock
+            if not self._fast_forward():
+                return None
+
+    # -- async interface protocol --------------------------------------------
+    def _iface_deliver(self, chan: Channel, tok: Any) -> None:
+        chan._push(tok)
+        if self.track_stats:
+            self._stat_push(chan, 1)
+        if chan._rwait:
+            self._wake(chan._rwait)
+
+    def _iface_pop(self, chan: Channel) -> Any:
+        tok = chan._pop()
+        if self.track_stats:
+            chan.total_read += 1
+        if chan._wwait:
+            self._wake(chan._wwait)
+        return tok
 
     # -- runtime protocol ----------------------------------------------------
     def wait(self, chan: Channel, side: str) -> None:

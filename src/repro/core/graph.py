@@ -21,7 +21,61 @@ from .channel import Channel
 from .compile_cache import structural_digest
 from .engines import EngineBase, SimReport, ENGINES
 from .errors import GraphValidationError
+from .interface import AsyncMMap, MMap
 from .task import TaskInstance
+
+
+@dataclass(frozen=True)
+class InterfaceInfo:
+    """One parameter row of a definition's interface table — the analogue
+    of the argument metadata TAPA's Clang pass extracts from a kernel
+    signature (paper Section 3.4 / Table 2): which interface *kind* each
+    parameter binds (stream / mmap / async_mmap / scalar), its token or
+    element dtype, and the observed transfer direction."""
+    param: str
+    kind: str        # istream/ostream/mmap/async_mmap/scalar/null/other
+    dtype: str
+    direction: str   # in/out/read/write/readwrite/unused
+
+
+def _merge_interface_rows(insts: list) -> tuple:
+    """Fold per-instance binding rows into one per-definition table.
+
+    Instances of one definition may disagree benignly (an edge PE gets
+    ``None`` where an interior PE gets a channel; an unused mmap binding
+    records no direction) — ``null``/``unused`` defer to any concrete
+    observation.  Genuinely conflicting kinds (istream in one instance,
+    ostream in another) are preserved as ``mixed`` so ``validate`` can
+    reject them.
+    """
+    order: list = []
+    kinds: dict = {}
+    dtypes: dict = {}
+    dirs: dict = {}
+    for inst in insts:
+        for b in inst.interfaces:
+            k = b.resolved_kind()
+            d = b.resolved_direction()
+            if b.param not in kinds:
+                order.append(b.param)
+                kinds[b.param], dtypes[b.param], dirs[b.param] = \
+                    k, str(b.dtype), {d}
+                continue
+            cur = kinds[b.param]
+            if cur in ("null", "stream") and k not in ("null", "stream"):
+                kinds[b.param], dtypes[b.param] = k, str(b.dtype)
+            elif k not in ("null", "stream", cur) and cur != "null":
+                kinds[b.param] = "mixed"
+            dirs[b.param].add(d)
+    def direction(p):
+        ds = dirs[p] - {"unused"}
+        if not ds:
+            return "unused"
+        if ds == {"read", "write"} or "readwrite" in ds:
+            return "readwrite"
+        return ds.pop() if len(ds) == 1 else "mixed"
+    return tuple(InterfaceInfo(p, kinds[p], dtypes[p], direction(p))
+                 for p in order)
 
 
 @dataclass(frozen=True)
@@ -32,6 +86,9 @@ class DefinitionInfo:
     n_instances: int
     instance_names: tuple
     defn_hash: str = ""
+    # per-parameter interface table (paper Table 2 kinds), merged across
+    # the definition's instances
+    interfaces: tuple = ()
 
 
 @dataclass
@@ -39,6 +96,7 @@ class Graph:
     """Elaborated task graph."""
     instances: list[TaskInstance]
     channels: list[Channel]
+    interfaces: list = field(default_factory=list)   # MMap/AsyncMMap objects
     report: Optional[SimReport] = None
     _defs: dict = field(default_factory=dict, repr=False)
 
@@ -70,7 +128,8 @@ class Graph:
                                  repr(insts[0].fn)),
                     n_instances=len(insts),
                     instance_names=tuple(x.name for x in insts),
-                    defn_hash=h)
+                    defn_hash=h,
+                    interfaces=_merge_interface_rows(insts))
                 for h, insts in by_hash.items()
             }
         return list(self._defs.values())
@@ -95,9 +154,13 @@ class Graph:
     # ------------------------------------------------------------------
     def validate(self) -> None:
         """Enforce Section 3.1.1: every channel has exactly one producer and
-        one consumer, both instantiated under the same parent task."""
+        one consumer, both instantiated under the same parent task; every
+        mmap has at most one writer; no definition binds one parameter to
+        conflicting interface kinds across its instances."""
         errs = []
         for c in self.channels:
+            if c.iface is not None:
+                continue    # async_mmap port channel: memory is an endpoint
             if c.producer is None:
                 errs.append(f"channel {c.name!r} has no producer")
             if c.consumer is None:
@@ -110,6 +173,20 @@ class Graph:
                     errs.append(
                         f"channel {c.name!r} connects tasks from different "
                         f"parents ({c.producer.name} / {c.consumer.name})")
+        for m in self.interfaces:
+            if isinstance(m, MMap):
+                writers = {b.inst.name for b in m._by_inst.values()
+                           if "write" in b.direction}
+                if len(writers) > 1:
+                    errs.append(f"mmap {m.name!r} has multiple writers "
+                                f"{sorted(writers)} (one-writer rule)")
+        for d in self.definitions:
+            for row in d.interfaces:
+                if row.kind == "mixed" or row.direction == "mixed":
+                    errs.append(
+                        f"definition {d.name!r} binds parameter "
+                        f"{row.param!r} to conflicting interface kinds "
+                        f"across instances")
         if errs:
             raise GraphValidationError("; ".join(errs))
 
@@ -119,17 +196,38 @@ class Graph:
         for i in self.instances:
             shape = "box" if i.children else "ellipse"
             lines.append(f'  t{i.uid} [label="{i.name}", shape={shape}];')
+        for m in self.interfaces:
+            lines.append(f'  m{m.uid} [label="{m.name}\\n{m.iface_kind}", '
+                         f'shape=cylinder];')
         for c in self.channels:
+            if c.iface is not None:
+                continue    # drawn as one memory edge per port, below
             if c.producer is not None and c.consumer is not None:
                 lines.append(
                     f'  t{c.producer.uid} -> t{c.consumer.uid} '
                     f'[label="{c.name}/{c.capacity}"];')
+        for m in self.interfaces:
+            if isinstance(m, AsyncMMap):
+                if m.owner is not None:
+                    lines.append(f'  t{m.owner.uid} -> m{m.uid} '
+                                 f'[dir=both, style=dashed, '
+                                 f'label="lat={m.latency}/d={m.depth}"];')
+                continue
+            for b in m._by_inst.values():
+                d = b.resolved_direction()
+                if d in ("write", "readwrite"):
+                    lines.append(f'  t{b.inst.uid} -> m{m.uid} '
+                                 f'[style=dashed];')
+                if d in ("read", "readwrite", "unused"):
+                    lines.append(f'  m{m.uid} -> t{b.inst.uid} '
+                                 f'[style=dashed];')
         lines.append("}")
         return "\n".join(lines)
 
     def summary(self) -> str:
         return (f"tasks={self.n_tasks} instances={self.n_instances} "
                 f"channels={self.n_channels} "
+                f"interfaces={len(self.interfaces)} "
                 f"dedup={self.dedup_factor():.1f}x")
 
 
@@ -137,8 +235,9 @@ def extract_graph(engine: EngineBase,
                   report: Optional[SimReport] = None) -> Graph:
     """Build the metadata IR from a finished engine run (Section 3.4)."""
     chans = sorted(engine.channel_set, key=lambda c: c.uid)
+    ifaces = sorted(engine.interface_set, key=lambda i: i.uid)
     return Graph(instances=list(engine.instances), channels=chans,
-                 report=report)
+                 interfaces=ifaces, report=report)
 
 
 def elaborate(top: Callable, *args, engine: str = "coroutine",

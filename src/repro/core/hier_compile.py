@@ -44,7 +44,8 @@ import jax
 import numpy as np
 
 from .compile_cache import (CompileCache, aval_signature, default_cache,
-                            instance_key, structural_digest)
+                            instance_key, lower_spec, runtime_value,
+                            structural_digest)
 
 
 @dataclass
@@ -132,6 +133,10 @@ def diff_definitions(prev: Optional[CompileReport],
 
 
 def _compile_one(fn: Callable, args: tuple, kwargs: dict) -> Any:
+    # interface args lower as avals: an mmap buffer is a runtime input of
+    # the executable, never a constant baked into it
+    args = tuple(lower_spec(a) for a in args)
+    kwargs = {k: lower_spec(v) for k, v in kwargs.items()}
     lowered = jax.jit(fn).lower(*args, **kwargs)
     return lowered.compile()
 
@@ -275,11 +280,15 @@ class DataflowProgram:
             ins = [outputs[p] for p in self.wiring.get(idx, [])]
             if idx in feed:
                 ins = [feed[idx]] + ins
+            # mmap-bound args feed their *current* device buffer at call
+            # time (scalars their value); the executable was lowered
+            # against avals, so fresh data needs no recompilation
+            bound = tuple(runtime_value(a) for a in inst.args)
+            bkw = {k: runtime_value(v) for k, v in inst.kwargs.items()}
             if inst.executable is not None:
-                outputs[idx] = inst.executable(*ins, *inst.args,
-                                               **inst.kwargs)
+                outputs[idx] = inst.executable(*ins, *bound, **bkw)
             else:
-                outputs[idx] = inst.fn(*ins, *inst.args, **inst.kwargs)
+                outputs[idx] = inst.fn(*ins, *bound, **bkw)
         outs = [outputs[i] for i in self.sinks()]
         return outs[0] if len(outs) == 1 else tuple(outs)
 

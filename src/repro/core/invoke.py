@@ -25,10 +25,49 @@ from __future__ import annotations
 
 from typing import Any, Callable, Optional
 
+from .channel import Channel
 from .engines import ENGINES
 from .errors import Deadlock
 from .graph import elaborate
 from .hier_compile import StageInstance, compile_stages
+
+
+_DROP = object()
+
+
+def _strip_channels(a: Any) -> Any:
+    """Channels (and channel-only containers) become _DROP; containers
+    mixing channels with other values keep the non-channel members."""
+    if isinstance(a, Channel):
+        return _DROP
+    if isinstance(a, (list, tuple)):
+        kept = [v for v in (_strip_channels(x) for x in a) if v is not _DROP]
+        if not kept and a:
+            return _DROP            # container held only channels
+        return type(a)(kept) if isinstance(a, tuple) else kept
+    if isinstance(a, dict):
+        kept = {k: v for k, v in ((k, _strip_channels(x))
+                                  for k, x in a.items()) if v is not _DROP}
+        if not kept and a:
+            return _DROP
+        return kept
+    return a
+
+
+def _stage_args(args: tuple, kwargs: dict) -> tuple[tuple, dict]:
+    """Project a task instance's invoke args onto what its compiled stage
+    receives: channels vanish (their traffic becomes dataflow wiring),
+    while mmap/async_mmap/scalar interface args — and plain values — carry
+    through, positionally and by keyword.  The interface objects
+    themselves are kept: the structural key then hashes them by aval, and
+    execution feeds the device buffer
+    (``compile_cache.lower_spec``/``runtime_value``)."""
+    a = tuple(v for v in (_strip_channels(x) for x in args)
+              if v is not _DROP)
+    k = {key: v for key, v in ((key, _strip_channels(x))
+                               for key, x in kwargs.items())
+         if v is not _DROP}
+    return a, k
 
 
 def invoke(top: Callable, *args, target: str = "sim",
@@ -54,9 +93,13 @@ def invoke(top: Callable, *args, target: str = "sim",
         graph = elaborate(top, *args, engine=engine, **kwargs)
         if graph.report is not None and not graph.report.ok:
             raise Deadlock(f"elaboration failed: {graph.report.error}")
-        stages = [StageInstance(fn=i.fn, args=i.args, kwargs=i.kwargs,
-                                name=i.name)
-                  for i in graph.instances if not i.children]
+        stages = []
+        for i in graph.instances:
+            if i.children:
+                continue
+            sa, sk = _stage_args(i.args, i.kwargs)
+            stages.append(StageInstance(fn=i.fn, args=sa, kwargs=sk,
+                                        name=i.name))
         if mesh is not None:
             with mesh:
                 compile_stages(stages, mode=compile_mode)

@@ -15,13 +15,18 @@ non-detached children when its body returns (TAPA joins at the destructor of
 the ``tapa::task()`` temporary — end-of-body is the Python analogue and is
 also what ``with repro.task() as t:`` gives explicitly).
 
-Stream-direction binding: a ``Channel`` argument is converted to an
-:class:`IStream` or :class:`OStream` view according to the callee's
-parameter annotation; unannotated parameters receive a lazy ``AutoStream``
-that binds its direction on first use.  Either way the channel's
-producer/consumer endpoints are registered for graph metadata extraction
-(Section 3.4) and validated to the one-producer/one-consumer rule
-(Section 3.1.1).
+Interface binding (Section 3.1.2, Table 2): a ``Channel`` argument is
+converted to an :class:`IStream` or :class:`OStream` view according to the
+callee's parameter annotation; unannotated parameters receive a lazy
+``AutoStream`` that binds its direction on first use.  ``MMap`` /
+``AsyncMMap`` arguments bind as external-memory interfaces (a raw ndarray
+passed for an ``MMap``-annotated parameter is wrapped on the way in),
+``Scalar`` wrappers unwrap to their value, and plain Python scalars are
+recorded as scalar interfaces.  Every binding registers endpoints for
+graph metadata extraction (Section 3.4) — the per-definition interface
+table — and is validated to the one-producer/one-consumer rule for
+channels, the one-writer rule for mmaps, and the one-port rule for
+async_mmaps (Section 3.1.1).
 """
 
 from __future__ import annotations
@@ -30,9 +35,13 @@ import inspect
 import itertools
 from typing import Any, Callable, Optional
 
+import numpy as np
+
 from .channel import Channel, IStream, OStream
 from .context import current_builder_stack, current_runtime, current_task
 from .errors import ChannelMisuse
+from .interface import (AsyncMMap, Interface, InterfaceBinding, MMap,
+                        Scalar)
 
 _inst_uid = itertools.count()
 
@@ -42,7 +51,7 @@ class TaskInstance:
     #Tasks from #Task Instances; this is the latter)."""
 
     __slots__ = ("uid", "fn", "args", "kwargs", "detach", "name", "parent",
-                 "children", "state", "error", "level")
+                 "children", "state", "error", "level", "interfaces")
 
     def __init__(self, fn: Callable, args: tuple, kwargs: dict,
                  detach: bool, parent: Optional["TaskInstance"],
@@ -58,6 +67,9 @@ class TaskInstance:
         self.state = "created"   # created/running/blocked/finished/failed
         self.error: Optional[BaseException] = None
         self.level = 0 if parent is None else parent.level + 1
+        # per-parameter interface table (kind/dtype/direction), filled by
+        # bind_streams — the row data behind Graph.definitions[*].interfaces
+        self.interfaces: list[InterfaceBinding] = []
 
     @property
     def definition(self) -> Callable:
@@ -121,66 +133,121 @@ class AutoStream:
     def try_close(self): return self._as(OStream).try_close()
 
 
-def _annotation_direction(ann: Any) -> Optional[type]:
-    """Map a parameter annotation to IStream/OStream (handles string
-    annotations from ``from __future__ import annotations``)."""
+_ANN_KINDS = (("IStream", IStream), ("OStream", OStream), ("AsyncMMap", AsyncMMap),
+              ("MMap", MMap), ("Scalar", Scalar))
+
+
+def _annotation_kind(ann: Any) -> Optional[type]:
+    """Map a parameter annotation to its interface class — IStream/OStream/
+    MMap/AsyncMMap/Scalar (handles string annotations from
+    ``from __future__ import annotations``; AsyncMMap is matched before
+    MMap, which is a substring of it)."""
     if ann is inspect.Parameter.empty:
         return None
     if isinstance(ann, str):
-        if "IStream" in ann:
-            return IStream
-        if "OStream" in ann:
-            return OStream
+        for token, cls in _ANN_KINDS:
+            if token in ann:
+                return cls
         return None
     origin = getattr(ann, "__origin__", ann)
-    if origin is IStream or (inspect.isclass(origin) and
-                             issubclass(origin, IStream)):
-        return IStream
-    if origin is OStream or (inspect.isclass(origin) and
-                             issubclass(origin, OStream)):
-        return OStream
+    for _, cls in _ANN_KINDS:
+        if origin is cls or (inspect.isclass(origin) and
+                             issubclass(origin, cls)):
+            return cls
     return None
 
 
-def _convert_arg(val: Any, ann: Any, inst: TaskInstance) -> Any:
-    """Convert channel arguments to directed stream views."""
+_annotation_direction = _annotation_kind        # pre-interface-layer alias
+
+_SCALAR_TYPES = (bool, int, float, complex, str, bytes, np.integer,
+                 np.floating, np.bool_)
+
+
+def _record(inst: TaskInstance, name: str, kind: str, dtype: Any,
+            ref: Any) -> InterfaceBinding:
+    b = InterfaceBinding(name, kind, dtype, ref, inst)
+    inst.interfaces.append(b)
+    return b
+
+
+def _convert_arg(val: Any, ann: Any, inst: TaskInstance, name: str) -> Any:
+    """Convert one argument to its bound interface view and record the
+    binding in the instance's interface table."""
     if isinstance(val, Channel):
-        d = _annotation_direction(ann)
+        d = _annotation_kind(ann)
         if d is IStream:
             val._bind("consumer", inst)
+            _record(inst, name, "istream", val.dtype, val)
             return IStream(val)
         if d is OStream:
             val._bind("producer", inst)
+            _record(inst, name, "ostream", val.dtype, val)
             return OStream(val)
+        # direction unannotated: binds on first use, table resolves late
+        _record(inst, name, "stream", val.dtype, val)
         return AutoStream(val, inst)
+    if isinstance(val, (MMap, AsyncMMap)):
+        b = _record(inst, name, val.iface_kind, str(val.dtype), val)
+        val._bind_task(b)
+        return val
+    if isinstance(val, Scalar):
+        _record(inst, name, "scalar", val.dtype, val)
+        return val.value
+    if isinstance(val, np.ndarray) and _annotation_kind(ann) is MMap:
+        # annotation-driven wrap: a raw array passed for an MMap parameter.
+        # The wrapper is adopted from the engine (one per buffer per run)
+        # so it joins interface_set and the one-writer rule holds across
+        # tasks that received the same raw array.
+        rt = current_runtime()
+        wrapped = rt.adopt_mmap(val, name) if rt is not None \
+            else MMap(val, name=name)
+        b = _record(inst, name, "mmap", str(wrapped.dtype), wrapped)
+        wrapped._bind_task(b)
+        return wrapped
+    if val is None:
+        _record(inst, name, "null", "none", None)
+        return val
+    if isinstance(val, _SCALAR_TYPES):
+        _record(inst, name, "scalar", type(val).__name__, None)
+        return val
     if isinstance(val, (list, tuple)) and any(
-            isinstance(v, Channel) for v in val):
-        conv = [_convert_arg(v, ann, inst) for v in val]
+            isinstance(v, (Channel, Interface)) for v in val):
+        conv = [_convert_arg(v, ann, inst, f"{name}[{i}]")
+                for i, v in enumerate(val)]
         return type(val)(conv) if isinstance(val, tuple) else conv
+    _record(inst, name, "other", type(val).__name__, None)
     return val
 
 
 def bind_streams(inst: TaskInstance) -> tuple[tuple, dict]:
-    """Resolve the instance's channel args into stream views, registering
-    channel endpoints.  Called by engines just before running the body."""
+    """Resolve the instance's channel/interface args into bound views,
+    registering endpoints and the per-parameter interface table.  Called by
+    engines just before running the body."""
     fn = inst.fn
     try:
         params = list(inspect.signature(fn).parameters.values())
     except (TypeError, ValueError):
         params = []
+    inst.interfaces = []
     args = []
     for i, a in enumerate(inst.args):
         ann = inspect.Parameter.empty
+        name = f"arg{i}"
         if i < len(params):
             p = params[i]
             if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
                 ann = p.annotation
+                name = p.name
             elif p.kind is p.VAR_POSITIONAL:
                 ann = p.annotation
-        args.append(_convert_arg(a, ann, inst))
+                name = f"{p.name}[{i - len(params) + 1}]"
+        elif params and params[-1].kind is params[-1].VAR_POSITIONAL:
+            ann = params[-1].annotation
+            name = f"{params[-1].name}[{i - len(params) + 1}]"
+        args.append(_convert_arg(a, ann, inst, name))
     by_name = {p.name: p.annotation for p in params}
     kwargs = {
-        k: _convert_arg(v, by_name.get(k, inspect.Parameter.empty), inst)
+        k: _convert_arg(v, by_name.get(k, inspect.Parameter.empty), inst, k)
         for k, v in inst.kwargs.items()
     }
     return tuple(args), kwargs

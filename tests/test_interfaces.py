@@ -1,0 +1,561 @@
+"""Typed interface layer: mmap / async_mmap / scalar (paper Table 2).
+
+Covers the engine conformance matrix (same stream+mmap+EoT body under all
+three engines), async_mmap request/response overlap, the one-writer and
+one-port rules, annotation-driven binding, the per-definition interface
+table in the graph IR, and the zero-closure-capture property of the
+migrated apps.  The XLA-side contract (mmap args as device buffers, value-
+independent structural keys) lives in the ``slow``-marked tests at the
+bottom.
+"""
+
+import inspect
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import (AsyncMMap, ChannelMisuse, InterfaceInfo, MMap,
+                        Scalar, instance_key)
+from repro.core.engines import ENGINES
+from repro.core.graph import elaborate
+
+ALL_ENGINES = ("sequential", "thread", "coroutine")
+
+
+# ---------------------------------------------------------------------------
+# conformance matrix: one body, every interface kind, every engine
+# ---------------------------------------------------------------------------
+
+def Loader(src: MMap, out, rows: int):
+    """mmap -> stream: one burst load, one EoT-delimited transaction."""
+    out.write_burst(list(src.read_burst(0, rows)))
+    out.close()
+
+
+def Doubler(inp, out, gain):
+    for row in inp:                 # drains one transaction
+        out.write(row * gain)
+    out.close()
+
+
+def Storer(inp, dst: MMap):
+    rows = inp.read_transaction()
+    dst.write_burst(0, np.stack(rows))
+
+
+def _mk_pipeline(n_rows=6, width=4):
+    data = np.arange(n_rows * width, dtype=np.float64).reshape(n_rows, width)
+    src, dst = repro.mmap(data, "src"), repro.mmap(np.zeros_like(data), "dst")
+
+    def Top(a: MMap, b: MMap):
+        c1, c2 = repro.channel(2), repro.channel(3)
+        repro.task() \
+            .invoke(Loader, a, c1, n_rows) \
+            .invoke(Doubler, c1, c2, repro.scalar(2.0)) \
+            .invoke(Storer, c2, b)
+
+    return Top, (src, dst), data, dst
+
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+@pytest.mark.parametrize("track_stats", [False, True])
+def test_stream_mmap_eot_conformance(engine, track_stats):
+    """The same stream+mmap+EoT body produces identical memory contents
+    under every engine, with and without statistics."""
+    top, args, data, dst = _mk_pipeline()
+    rep = ENGINES[engine](track_stats=track_stats).run(top, *args)
+    assert rep.ok, rep.error
+    np.testing.assert_allclose(dst.data, data * 2.0)
+    if track_stats:
+        stats = {name: s for name, kind, s in rep.interfaces}
+        assert stats["src"]["load_elems"] == data.size
+        assert stats["dst"]["store_elems"] == data.size
+
+
+def AsyncGather(mem: AsyncMMap, out, n: int):
+    out.write_burst(mem.read_pipelined(range(n)))
+    out.close()
+
+
+def _async_top(depth, latency=4, n=16):
+    data = np.arange(100, 100 + n, dtype=np.int64)
+    port = repro.async_mmap(data, latency=latency, depth=depth, name="port")
+    sink: list = []
+
+    def Top(mem: AsyncMMap):
+        ch = repro.channel(capacity=n)
+        repro.task() \
+            .invoke(AsyncGather, mem, ch, n) \
+            .invoke(lambda inp, acc: acc.extend(inp.read_transaction()),
+                    ch, sink, name="Sink")
+
+    return Top, (port,), data, sink
+
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_async_mmap_conformance(engine):
+    """Pipelined async reads return every element, in order, on all three
+    engines; the sequential engine *records* its synchronous deliveries."""
+    top, args, data, sink = _async_top(depth=4)
+    rep = ENGINES[engine](track_stats=True).run(top, *args)
+    assert rep.ok, rep.error
+    assert sink == list(data)
+    if engine == "sequential":
+        assert rep.async_violations > 0     # cannot overlap: recorded
+    else:
+        assert rep.async_violations == 0
+
+
+def test_async_mmap_write_path_all_engines():
+    for engine in ALL_ENGINES:
+        data = np.zeros(8, np.int64)
+        port = repro.async_mmap(data, latency=3, depth=2, name="w")
+
+        def Writer(mem: AsyncMMap):
+            acked = 0
+            for i in range(8):
+                mem.write_addr.write(i)
+                mem.write_data.write(10 * i)
+                while mem.write_resp.try_read()[0]:
+                    acked += 1
+            while acked < 8:
+                mem.write_resp.read()
+                acked += 1
+
+        def Top(mem: AsyncMMap):
+            repro.task().invoke(Writer, mem)
+
+        rep = ENGINES[engine]().run(Top, port)
+        assert rep.ok, (engine, rep.error)
+        assert list(data) == [10 * i for i in range(8)], engine
+
+
+# ---------------------------------------------------------------------------
+# overlap: the point of the five-channel decomposition
+# ---------------------------------------------------------------------------
+
+def test_async_mmap_outstanding_depth_overlaps():
+    """With depth > 1 the coroutine engine shows genuine request/response
+    overlap: several reads in flight at once and fewer scheduler switches
+    than the depth-1 serialization of the same access stream."""
+    results = {}
+    for depth in (1, 4):
+        top, args, data, sink = _async_top(depth=depth)
+        eng = ENGINES["coroutine"](track_stats=True)
+        rep = eng.run(top, *args)
+        assert rep.ok and sink == list(data)
+        stats = {name: s for name, kind, s in rep.interfaces}
+        results[depth] = (stats["port"]["max_outstanding_reads"],
+                          rep.switches)
+    assert results[1][0] == 1
+    assert results[4][0] == 4                   # measurable overlap
+    assert results[4][1] < results[1][1]        # fewer stalls when deep
+
+
+@pytest.mark.parametrize("engine", ["coroutine", "thread"])
+def test_deferred_port_does_not_mask_later_event(engine):
+    """A flooded port whose deliveries defer (undrained response FIFO)
+    must not shadow a later-due response on a *different* port: the
+    fast-forward tries every pending event, not just the earliest."""
+    a_port = repro.async_mmap(np.arange(8), latency=2, depth=2, name="a")
+    b_port = repro.async_mmap(np.arange(100, 108), latency=50, depth=2,
+                              name="b")
+    out: list = []
+
+    def Flooder(mem: AsyncMMap):
+        for i in range(8):
+            mem.read_addr.write(i)      # never drains read_data
+        while True:
+            pass_token = mem.write_resp.try_read()  # idle forever
+            if not pass_token[0]:
+                break
+
+    def Reader(mem: AsyncMMap, sink):
+        mem.read_addr.write(3)
+        sink.append(mem.read_data.read())
+
+    def Top(a: AsyncMMap, b: AsyncMMap):
+        repro.task() \
+            .invoke(Flooder, a, detach=True) \
+            .invoke(Reader, b, out)
+
+    rep = ENGINES[engine]().run(Top, a_port, b_port)
+    assert rep.ok, (engine, rep.error)
+    assert out == [103]
+
+
+def test_async_mmap_latency_zero_and_depth_one():
+    top, args, data, sink = _async_top(depth=1, latency=0)
+    rep = ENGINES["coroutine"]().run(top, *args)
+    assert rep.ok and sink == list(data)
+
+
+# ---------------------------------------------------------------------------
+# binding rules
+# ---------------------------------------------------------------------------
+
+def test_mmap_one_writer_rule():
+    m = repro.mmap(np.zeros(4))
+
+    def W(mm: MMap, i):
+        mm[i] = 1.0
+
+    def Top(mm: MMap):
+        repro.task().invoke(W, mm, 0).invoke(W, mm, 1)
+
+    rep = ENGINES["coroutine"]().run(Top, m)
+    assert not rep.ok and "one-writer" in rep.error
+
+
+def test_mmap_many_readers_ok():
+    m = repro.mmap(np.arange(4.0))
+    acc: list = []
+
+    def R(mm: MMap, sink, i):
+        sink.append(mm[i])
+
+    def Top(mm: MMap):
+        t = repro.task()
+        for i in range(4):
+            t = t.invoke(R, mm, acc, i)
+
+    rep = ENGINES["coroutine"]().run(Top, m)
+    assert rep.ok and sorted(acc) == [0.0, 1.0, 2.0, 3.0]
+
+
+def test_async_mmap_exclusive_port():
+    """Two sibling tasks may not share one async port (it models a single
+    memory channel); a parent passing it through to one child is fine."""
+    port = repro.async_mmap(np.arange(4), name="p")
+
+    def U(mem: AsyncMMap):
+        pass
+
+    def Top(mem: AsyncMMap):
+        repro.task().invoke(U, mem).invoke(U, mem, name="U2")
+
+    rep = ENGINES["coroutine"]().run(Top, port)
+    assert not rep.ok and "one memory port" in rep.error
+
+
+def test_scalar_unwraps_and_ndarray_autowraps():
+    got = {}
+
+    def Child(m: MMap, k: Scalar, plain):
+        got["m"] = type(m).__name__
+        got["k"] = k
+        got["plain"] = plain
+        got["sum"] = float(np.sum(m.read_burst(0, 2)))
+
+    def Top(arr, k):
+        repro.task().invoke(Child, arr, k, 7)
+
+    # raw ndarray + MMap annotation -> auto-wrapped; Scalar -> raw value
+    rep = ENGINES["coroutine"]().run(
+        Top, np.ones((2, 3)), repro.scalar(5, dtype="int32"))
+    assert rep.ok, rep.error
+    assert got == {"m": "MMap", "k": 5, "plain": 7, "sum": 6.0}
+
+
+def test_autowrap_shares_wrapper_and_enforces_one_writer():
+    """Two MMap-annotated tasks receiving the same *raw* ndarray share one
+    engine-adopted wrapper: the one-writer rule holds and the interface
+    shows up in the report, exactly as for an explicit repro.mmap."""
+    buf = np.zeros(4)
+
+    def W(m: MMap, i):
+        m[i] = 1.0
+
+    def Top(arr):
+        repro.task().invoke(W, arr, 0).invoke(W, arr, 1)
+
+    eng = ENGINES["coroutine"]()
+    rep = eng.run(Top, buf)
+    assert not rep.ok and "one-writer" in rep.error
+    assert len(rep.interfaces) == 1 and rep.interfaces[0][1] == "mmap"
+
+
+def test_async_mmap_direction_observed():
+    """An actively-driven async port reports its observed direction in
+    the per-definition table, not 'unused'."""
+    top, args, data, sink = _async_top(depth=2)
+    eng = ENGINES["coroutine"]()
+    rep = eng.run(top, *args)
+    assert rep.ok
+    from repro.core.graph import extract_graph
+    rows = _table(extract_graph(eng, rep), "AsyncGather")
+    assert rows["mem"].kind == "async_mmap"
+    assert rows["mem"].direction == "read"
+
+
+def test_request_channels_reject_eot():
+    port = repro.async_mmap(np.arange(4), name="p")
+
+    def U(mem: AsyncMMap):
+        mem.read_addr.close()
+
+    def Top(mem: AsyncMMap):
+        repro.task().invoke(U, mem)
+
+    rep = ENGINES["coroutine"]().run(Top, port)
+    assert not rep.ok and "EoT" in rep.error
+
+
+# ---------------------------------------------------------------------------
+# graph IR: the per-definition interface table
+# ---------------------------------------------------------------------------
+
+def _table(graph, defn_name):
+    for d in graph.definitions:
+        if d.name == defn_name:
+            return {r.param: r for r in d.interfaces}
+    raise AssertionError(f"definition {defn_name} not found")
+
+
+def test_graph_interface_table_smoke():
+    top, args, data, dst = _mk_pipeline()
+    g = elaborate(top, *args)
+    g.validate()
+    rows = _table(g, "Loader")
+    assert isinstance(next(iter(rows.values())), InterfaceInfo)
+    assert rows["src"].kind == "mmap" and rows["src"].direction == "read"
+    assert rows["out"].kind == "ostream"
+    assert rows["rows"].kind == "scalar"
+    rows = _table(g, "Storer")
+    assert rows["dst"].kind == "mmap" and rows["dst"].direction == "write"
+    assert rows["inp"].kind == "istream"
+
+
+@pytest.mark.parametrize("app", ["gemm", "gaussian", "page_rank", "cannon"])
+def test_migrated_apps_interface_tables(app):
+    """Every migrated app exposes a per-definition interface table with
+    its memory traffic typed as mmap/async_mmap and its run parameters as
+    scalars — and validates."""
+    from repro.apps import APPS
+
+    mod = APPS[app]
+    top, args, _ = mod.build()
+    eng = ENGINES["coroutine"]()
+    rep = eng.run(top, *args)
+    assert rep.ok, rep.error
+    from repro.core.graph import extract_graph
+    g = extract_graph(eng, rep)
+    g.validate()
+    kinds = {r.kind for d in g.definitions for r in d.interfaces}
+    assert "mmap" in kinds and "scalar" in kinds
+    if app == "page_rank":
+        assert "async_mmap" in kinds
+    # the DOT export names the memory interfaces
+    dot = g.to_dot()
+    assert "cylinder" in dot
+
+
+@pytest.mark.parametrize("app", ["gemm", "gaussian", "page_rank", "cannon"])
+def test_migrated_apps_zero_closure_captured_arrays(app):
+    """No task definition in the migrated apps closure-captures an array:
+    data reaches the graph only through declared interfaces."""
+    from repro.apps import APPS
+
+    mod = APPS[app]
+    top, args, _ = mod.build()
+    eng = ENGINES["coroutine"]()
+    rep = eng.run(top, *args)
+    assert rep.ok, rep.error
+    for inst in eng.instances:
+        closure = getattr(inst.fn, "__closure__", None) or ()
+        for name, cell in zip(inst.fn.__code__.co_freevars, closure):
+            try:
+                v = cell.cell_contents
+            except ValueError:
+                continue
+            assert not isinstance(v, np.ndarray), (
+                f"{app}: task {inst.name} closure-captures array {name!r}")
+
+
+def test_mmap_direction_readwrite_merges():
+    m = repro.mmap(np.zeros(4), "rw")
+
+    def T(mm: MMap):
+        mm[0] = 1.0
+        assert mm[0] == 1.0
+
+    def Top(mm: MMap):
+        repro.task().invoke(T, mm)
+
+    eng = ENGINES["coroutine"]()
+    rep = eng.run(Top, m)
+    assert rep.ok
+    from repro.core.graph import extract_graph
+    g = extract_graph(eng, rep)
+    rows = _table(g, "T")
+    assert rows["mm"].direction == "readwrite"
+
+
+# ---------------------------------------------------------------------------
+# thread engine: burst wakeups (no direct coverage before this matrix)
+# ---------------------------------------------------------------------------
+
+def test_thread_engine_burst_wakeups():
+    """A blocked burst reader is woken by a burst write and vice versa:
+    capacity (2) is smaller than the burst (8), so both sides park and are
+    repeatedly woken at batch granularity under the preemptive engine."""
+    out: list = []
+
+    def P(o):
+        o.write_burst(list(range(8)))
+        o.close()
+
+    def C(i, sink):
+        while True:
+            chunk = i.read_burst(8)
+            sink.extend(chunk)
+            if len(chunk) < 8:
+                break
+        i.open()
+
+    def Top(sink):
+        ch = repro.channel(capacity=2)
+        repro.task().invoke(P, ch).invoke(C, ch, sink)
+
+    rep = ENGINES["thread"]().run(Top, out)
+    assert rep.ok, rep.error
+    assert out == list(range(8))
+
+
+def test_thread_engine_async_under_contention():
+    """Many concurrent async ports under the preemptive engine: the
+    RLock-guarded pump/deliver path must neither race nor deadlock."""
+    n_ports, n = 4, 12
+    datas = [np.arange(p * 100, p * 100 + n, dtype=np.int64)
+             for p in range(n_ports)]
+    ports = [repro.async_mmap(d, latency=2, depth=3, name=f"p{i}")
+             for i, d in enumerate(datas)]
+    sinks: list = [[] for _ in range(n_ports)]
+
+    def G(mem: AsyncMMap, sink):
+        sink.extend(mem.read_pipelined(range(n)))
+
+    def Top(ps):
+        t = repro.task()
+        for i, p in enumerate(ps):
+            t = t.invoke(G, p, sinks[i], name=f"G{i}")
+
+    rep = ENGINES["thread"]().run(Top, ports)
+    assert rep.ok, rep.error
+    for i in range(n_ports):
+        assert sinks[i] == list(datas[i])
+
+
+# ---------------------------------------------------------------------------
+# compile path: mmap args are device buffers, not baked constants
+# ---------------------------------------------------------------------------
+
+def test_instance_key_value_independent_for_mmap():
+    """Two stage instances that differ only in mmap *data* share one
+    structural key (they compile once); closure-captured arrays — the
+    pre-interface idiom — still hash apart."""
+    def stage(x, m):
+        return x + 1
+
+    a = repro.mmap(np.zeros((4, 4), np.float32))
+    b = repro.mmap(np.ones((4, 4), np.float32))
+    spec = np.zeros((4, 4), np.float32)
+    assert instance_key(stage, (spec, a)) == instance_key(stage, (spec, b))
+    # different aval -> different key
+    c = repro.mmap(np.ones((8, 4), np.float32))
+    assert instance_key(stage, (spec, a)) != instance_key(stage, (spec, c))
+    # the closure-capture idiom hashes by content (so it *cannot* dedup)
+    def mk(arr):
+        return lambda x: x + arr
+    assert instance_key(mk(np.zeros(4)), (spec,)) != \
+        instance_key(mk(np.ones(4)), (spec,))
+
+
+def test_scalar_in_key_by_value():
+    def stage(x, k):
+        return x * k
+
+    spec = np.zeros((2, 2), np.float32)
+    assert instance_key(stage, (spec, repro.scalar(2))) == \
+        instance_key(stage, (spec, repro.scalar(2)))
+    assert instance_key(stage, (spec, repro.scalar(2))) != \
+        instance_key(stage, (spec, repro.scalar(3)))
+
+
+@pytest.mark.slow
+def test_dataflow_program_feeds_mmap_buffers():
+    """A compiled stage with an mmap arg executes against the buffer's
+    *current* contents — edit the array in place, rerun, no recompile."""
+    import jax.numpy as jnp
+
+    from repro.core.hier_compile import (StageInstance, build_dataflow,
+                                         compile_stages)
+
+    buf = np.full((4,), 2.0, np.float32)
+    m = repro.mmap(buf, "weights")
+
+    def scale(x, w):
+        return x * w
+
+    inst = StageInstance(fn=scale,
+                        args=(jnp.zeros((4,), jnp.float32), m),
+                        name="scale")
+    rep = compile_stages([inst], mode="hierarchical", cache=False)
+    assert rep.n_compiled == 1
+    prog = build_dataflow([inst], wiring={})
+    x = jnp.ones((4,), jnp.float32)
+    np.testing.assert_allclose(np.asarray(prog(x)), np.full(4, 2.0))
+    buf *= 3.0                              # in-place edit, same aval
+    np.testing.assert_allclose(np.asarray(prog(x)), np.full(4, 6.0))
+
+
+@pytest.mark.slow
+def test_compile_stages_dedups_across_mmap_values():
+    """N instances over different mmap buffers of one definition compile
+    exactly once (the dedup the paper's hierarchical codegen exploits and
+    closure capture defeated)."""
+    import jax.numpy as jnp
+
+    from repro.core.hier_compile import StageInstance, compile_stages
+
+    def stage(x, m):
+        return x @ m
+
+    spec = jnp.zeros((4, 4), jnp.float32)
+    insts = [
+        StageInstance(fn=stage,
+                      args=(spec, repro.mmap(
+                          np.random.rand(4, 4).astype(np.float32))),
+                      name=f"s{i}")
+        for i in range(5)
+    ]
+    rep = compile_stages(insts, mode="hierarchical", cache=False)
+    assert rep.n_instances == 5 and rep.n_unique == 1
+    assert rep.n_compiled == 1
+
+
+def test_interfaces_reusable_across_engine_runs():
+    """A host-created interface re-simulates under fresh engines: run-
+    scoped binding state (writer, port ownership, FIFO contents) resets
+    at registration, so elaboration after simulation just works."""
+    top, args, data, dst = _mk_pipeline()
+    for engine in ("coroutine", "thread", "coroutine"):
+        dst.data[...] = 0.0
+        rep = ENGINES[engine]().run(top, *args)
+        assert rep.ok, (engine, rep.error)
+        np.testing.assert_allclose(dst.data, data * 2.0)
+    # async ports too
+    top, pargs, pdata, sink = _async_top(depth=3)
+    for engine in ("coroutine", "thread"):
+        del sink[:]
+        rep = ENGINES[engine]().run(top, *pargs)
+        assert rep.ok and sink == list(pdata), engine
+
+
+def test_sim_report_repr_mentions_interfaces():
+    top, args, data, dst = _mk_pipeline()
+    rep = ENGINES["coroutine"](track_stats=True).run(top, *args)
+    assert len(rep.interfaces) == 2
+    names = {n for n, k, s in rep.interfaces}
+    assert names == {"src", "dst"}
