@@ -10,6 +10,7 @@ Sections:
   Fig. 7    simulation time, 3 engines x 7 benchmarks     (sim_time.py)
   Fig. 8    hierarchical vs monolithic codegen + the
             cold/warm/incremental compile-cache gates     (codegen_time.py)
+  S:Synth   whole-graph synthesis vs its simulation twin  (synth_time.py)
   S:Serve   decode tokens/sec, per-slot vs batched        (serve_time.py)
   S:Dry-run 80-cell lower+compile summary                 (out/dryrun.json)
   S:Roofline three-term table                             (roofline.py)
@@ -113,7 +114,8 @@ def main(argv=None) -> int:
                     help="CI smoke: shrink the simulation/throughput sizes")
     args = ap.parse_args(argv)
 
-    from benchmarks import codegen_time, loc, serve_time, sim_time
+    from benchmarks import (codegen_time, loc, serve_time, sim_time,
+                            synth_time)
 
     section("Fig. 5/6 — lines of code (with vs without TAPA APIs)")
     loc.main()
@@ -123,6 +125,9 @@ def main(argv=None) -> int:
     section("Fig. 8 + cache — code generation: hierarchical vs monolithic, "
             "cold/warm/incremental (emits BENCH_codegen_time.json)")
     codegen_res = codegen_time.main(["--quick"] if args.quick else [])
+    section("S:Synth — whole-graph synthesis vs its coroutine simulation "
+            "twin (emits BENCH_synth_time.json)")
+    synth_res = synth_time.main(["--quick"] if args.quick else [])
     section("S:Serve — decode tokens/sec, per-slot seed vs batched packed "
             "slots (emits BENCH_serve_time.json)")
     serve_res = serve_time.main(["--quick"] if args.quick else [])
@@ -140,6 +145,7 @@ def main(argv=None) -> int:
     # BENCH_*.json files share one schema (benchmark/config/rows/gates)
     return 1 if (sim_res.get("throughput_regression")
                  or codegen_res.get("codegen_regression")
+                 or synth_res["gate"]["synth_regression"]
                  or serve_res["gate"]["serve_regression"]) else 0
 
 

@@ -1,0 +1,174 @@
+"""Synthesized-vs-simulated throughput: the whole-graph XLA program
+against its own simulation twin (emits ``BENCH_synth_time.json``).
+
+A deep streaming pipeline — Source -> N x Relay -> Sink, moving a fixed
+token volume in bursts over typed fixed-capacity channels — is built once
+in step-function form and run two ways:
+
+  coroutine_twin   the StepTask bodies executed by the coroutine engine
+                   (run-to-block scheduling, real blocking streams) — the
+                   correctness side of the paper's Fig. 2 cycle;
+  compiled         the same graph lowered by ``CompiledEngine`` into one
+                   jitted program (ring buffers + guarded steps inside a
+                   ``lax.while_loop``), through the persistent compile
+                   cache.
+
+Acceptance gate: compiled tokens/sec >= 10x the coroutine twin.  The
+compiled row is measured hot (the first run pays the XLA compile and
+primes the cache; a second process would pay nothing — subprocess-tested
+in tests/test_synth.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from benchmarks._bench import bench_path, write_bench
+except ImportError:                     # script mode: python benchmarks/...
+    from _bench import bench_path, write_bench
+
+BENCH_JSON = bench_path("synth_time")
+
+GATE_X = 10.0
+
+
+def build_pipeline(n_tokens: int, stages: int, burst: int, capacity: int):
+    """Step-form Source -> stages x Relay -> Sink; the sink writes every
+    token into a result mmap (verifiable end to end)."""
+    import jax.numpy as jnp
+
+    import repro
+    from repro import StepTask, channel, mmap
+
+    assert n_tokens % burst == 0
+    fires = n_tokens // burst
+
+    def source_step(k, out):
+        out.write_burst(k * burst + jnp.arange(burst, dtype=jnp.int32))
+        return k + 1
+
+    def relay_step(state, inp, out):
+        out.write_burst(inp.read_burst(burst))
+        return state
+
+    def sink_step(k, inp, res):
+        res.write_burst(k * burst, inp.read_burst(burst))
+        return k + 1
+
+    Source = StepTask(source_step, steps=fires, init=jnp.int32(0),
+                      name="Source")
+    Relay = StepTask(relay_step, steps=fires, name="Relay")
+    Sink = StepTask(sink_step, steps=fires, init=jnp.int32(0), name="Sink")
+
+    buf = np.zeros(n_tokens, np.int32)
+    res = mmap(buf, "res")
+
+    def Top(res):
+        chans = [channel(capacity, f"c{i}", dtype=np.int32, shape=())
+                 for i in range(stages + 1)]
+        t = repro.task().invoke(Source, chans[0])
+        for s in range(stages):
+            t = t.invoke(Relay, chans[s], chans[s + 1], name=f"Relay{s}")
+        t.invoke(Sink, chans[stages], res)
+
+    return Top, (res,), buf
+
+
+def measure(n_tokens: int, stages: int, burst: int, capacity: int,
+            repeats: int) -> dict:
+    import repro
+
+    hops = n_tokens * (stages + 1)
+    rows = []
+
+    # -- coroutine twin ------------------------------------------------------
+    best = None
+    switches = None
+    for _ in range(repeats):
+        top, args, buf = build_pipeline(n_tokens, stages, burst, capacity)
+        rep = repro.ENGINES["coroutine"]().run(top, *args)
+        assert rep.ok, rep.error
+        assert np.array_equal(buf, np.arange(n_tokens)), "twin corrupted"
+        if best is None or rep.wall_s < best:
+            best, switches = rep.wall_s, rep.switches
+    rows.append({"variant": "coroutine_twin",
+                 "tokens_per_sec": round(hops / best, 1),
+                 "switches": switches, "wall_s": round(best, 6)})
+
+    # -- compiled ------------------------------------------------------------
+    # first run pays the XLA compile (and primes the persistent cache);
+    # measured rows run hot, like any serving path after warmup
+    top, args, buf = build_pipeline(n_tokens, stages, burst, capacity)
+    eng = repro.ENGINES["compiled"]()
+    rep = eng.run(top, *args)
+    assert rep.ok, rep.error
+    cold_source = eng.compile_source
+    best = None
+    sweeps = None
+    for _ in range(repeats):
+        top, args, buf = build_pipeline(n_tokens, stages, burst, capacity)
+        eng = repro.ENGINES["compiled"]()
+        t0 = time.perf_counter()
+        rep = eng.run(top, *args)
+        wall = time.perf_counter() - t0
+        assert rep.ok, rep.error
+        assert np.array_equal(buf, np.arange(n_tokens)), "synth corrupted"
+        assert eng.compile_source in ("memory", "disk"), eng.compile_source
+        if best is None or wall < best:
+            best, sweeps = wall, eng.n_sweeps
+    rows.append({"variant": "compiled",
+                 "tokens_per_sec": round(hops / best, 1),
+                 "sweeps": sweeps, "wall_s": round(best, 6),
+                 "cold_source": cold_source})
+
+    speedup = round(rows[1]["tokens_per_sec"] / rows[0]["tokens_per_sec"], 2)
+    return {
+        "config": {"n_tokens": n_tokens, "stages": stages, "burst": burst,
+                   "capacity": capacity, "repeats": repeats,
+                   "hops": hops},
+        "rows": rows,
+        "compiled_speedup_vs_twin": speedup,
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller token volume, single repeat")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        out = measure(n_tokens=4096, stages=8, burst=64, capacity=64,
+                      repeats=1)
+    else:
+        out = measure(n_tokens=16384, stages=8, burst=64, capacity=64,
+                      repeats=2)
+
+    cfg = out["config"]
+    print(f"pipeline: {cfg['stages']} stages x {cfg['n_tokens']} tokens, "
+          f"burst={cfg['burst']}, capacity={cfg['capacity']}")
+    print(f"{'variant':<16} {'tokens/s':>14} {'wall_ms':>9}")
+    for r in out["rows"]:
+        print(f"{r['variant']:<16} {r['tokens_per_sec']:>14.0f} "
+              f"{r['wall_s']*1e3:>9.1f}")
+    print(f"compiled vs coroutine twin: "
+          f"{out['compiled_speedup_vs_twin']}x (gate: >= {GATE_X}x)")
+
+    out["gate"] = {"required_x": GATE_X,
+                   "synth_regression":
+                       out["compiled_speedup_vs_twin"] < GATE_X}
+    write_bench("synth_time", out)
+    print(f"wrote {BENCH_JSON}")
+    if out["gate"]["synth_regression"]:
+        print(f"SYNTH THROUGHPUT REGRESSION: "
+              f"{out['compiled_speedup_vs_twin']}x < required {GATE_X}x")
+    return out
+
+
+if __name__ == "__main__":
+    res = main()
+    raise SystemExit(1 if res["gate"]["synth_regression"] else 0)

@@ -33,7 +33,8 @@ from .core import (EOT, Channel, IStream, OStream, channel, select, run,
                    Deadlock,
                    SequentialSimulationError, EndOfTransaction,
                    ChannelMisuse, StageInstance, compile_stages,
-                   DataflowProgram)
+                   DataflowProgram,
+                   ChannelInfo, CompiledEngine, StepTask, SynthesisError)
 
 __version__ = "1.1.0"
 
@@ -44,5 +45,7 @@ __all__ = [
     "elaborate", "Graph", "InterfaceInfo", "SimReport", "ENGINES",
     "Deadlock",
     "SequentialSimulationError", "EndOfTransaction", "ChannelMisuse",
-    "StageInstance", "compile_stages", "DataflowProgram", "__version__",
+    "StageInstance", "compile_stages", "DataflowProgram",
+    "ChannelInfo", "CompiledEngine", "StepTask", "SynthesisError",
+    "__version__",
 ]

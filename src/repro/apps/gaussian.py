@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core import MMap, channel, mmap, task
+from ..core import MMap, StepTask, channel, mmap, task
 from .base import AppResult, simulate
 
 K = np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]], np.float32) / 16.0
@@ -128,6 +128,103 @@ def build(h: int = 12, w: int = 12, iters: int = 4, lanes: int = 1,
 def run(engine: str = "coroutine", **kw) -> AppResult:
     top, args, check = build(**kw)
     return simulate("gaussian", top, args, engine, check)
+
+
+# ---------------------------------------------------------------------------
+# step-function form (whole-graph synthesis, docs/synthesis.md)
+# ---------------------------------------------------------------------------
+
+def build_step(h: int = 12, w: int = 12, iters: int = 4, seed: int = 0):
+    """The stencil chain in traceable step-function form — the
+    **burst-heavy** case: every firing moves a whole image row as one
+    ``read_burst(w)``/``write_burst`` over a scalar-token channel, which
+    synthesis lowers to a w-wide gather/scatter on the ring buffer.
+
+    Each stencil stage keeps two rows of state (the SODA reuse buffer)
+    across three phases: a 1-firing warmup fills the window, the h-1
+    steady-state firings read row i and emit output row i-1, and a
+    1-firing flush drains the final boundary row.  The frame enters
+    through a read mmap and leaves through a write mmap, row by row.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    img = rng.standard_normal((h, w)).astype(np.float32)
+    result = np.zeros_like(img)
+
+    img_mm = mmap(img, "img")
+    res_mm = mmap(result, "result")
+
+    def source_step(k, img_m: MMap, out):
+        row = jnp.asarray(img_m.read_burst(k, 1))[0]
+        out.write_burst(row)
+        return k + 1
+
+    # bit-parity contract (docs/synthesis.md): the window math goes
+    # through a jitted helper so the twin executes the same contracted
+    # kernel the whole-graph program inlines
+    @jax.jit
+    def _out_row(i, pp, p, cur):
+        win = (K[0, 0] * pp[:-2] + K[0, 1] * pp[1:-1] + K[0, 2] * pp[2:] +
+               K[1, 0] * p[:-2] + K[1, 1] * p[1:-1] + K[1, 2] * p[2:] +
+               K[2, 0] * cur[:-2] + K[2, 1] * cur[1:-1] + K[2, 2] * cur[2:])
+        # row 0 is a boundary: emitted as-is (and so are the edge columns)
+        mid = jnp.where(i - 1 == 0, p[1:-1], win)
+        return jnp.concatenate([p[:1], mid, p[-1:]])
+
+    def stencil_warmup(state, inp, out):
+        i, pp, p = state
+        row = inp.read_burst(w)
+        return (i + 1, row, row)
+
+    def stencil_step(state, inp, out):
+        i, pp, p = state            # reading row i; emitting row i-1
+        cur = inp.read_burst(w)
+        out.write_burst(_out_row(i, pp, p, cur))
+        return (i + 1, p, cur)
+
+    def stencil_flush(state, inp, out):
+        i, pp, p = state
+        out.write_burst(p)          # last row: boundary copy
+        return state
+
+    def sink_step(k, inp, res: MMap):
+        row = inp.read_burst(w)
+        res.write_burst(k, row[None, :])
+        return k + 1
+
+    SourceS = StepTask(source_step, steps=h, init=jnp.int32(0),
+                       name="Source")
+    StencilS = StepTask(stencil_step, steps=h - 1, warmup=stencil_warmup,
+                        flush=stencil_flush,
+                        init=(jnp.int32(0), jnp.zeros(w, jnp.float32),
+                              jnp.zeros(w, jnp.float32)), name="Stencil")
+    SinkS = StepTask(sink_step, steps=h, init=jnp.int32(0), name="Sink")
+
+    def Top(src: MMap, dst: MMap):
+        chans = [channel(2 * w, f"s{i}", dtype=np.float32, shape=())
+                 for i in range(iters + 1)]
+        t = task().invoke(SourceS, src, chans[0])
+        for i in range(iters):
+            t = t.invoke(StencilS, chans[i], chans[i + 1],
+                         name=f"Stencil{i}")
+        t.invoke(SinkS, chans[iters], dst)
+
+    def check():
+        ref = img
+        for _ in range(iters):
+            ref = _stencil_ref(ref)
+        err = float(np.max(np.abs(result - ref)))
+        return err < 1e-4, err
+
+    return Top, (img_mm, res_mm), check
+
+
+def run_step(engine: str = "coroutine", **kw) -> AppResult:
+    """Run the step-form graph — ``engine="compiled"`` synthesizes it."""
+    top, args, check = build_step(**kw)
+    return simulate("gaussian_step", top, args, engine, check)
 
 
 # ---------------------------------------------------------------------------

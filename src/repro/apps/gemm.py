@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core import MMap, OStream, channel, mmap, task
+from ..core import MMap, OStream, StepTask, channel, mmap, task
 from .base import AppResult, simulate
 
 
@@ -113,3 +113,111 @@ def run(engine: str = "coroutine", P: int = 4, n: int = 8, K: int = 4,
         seed: int = 0) -> AppResult:
     top, args, check = build(P=P, n=n, K=K, seed=seed)
     return simulate("gemm", top, args, engine, check)
+
+
+# ---------------------------------------------------------------------------
+# step-function form (whole-graph synthesis, docs/synthesis.md)
+# ---------------------------------------------------------------------------
+
+def build_step(P: int = 4, n: int = 8, K: int = 4, seed: int = 0):
+    """The same systolic array in traceable step-function form.
+
+    Feeders fire K times emitting one (n, n) block per firing (the A
+    column / B row selected by a dynamic slice on the firing counter),
+    PEs fire K times (read a+b, forward, accumulate) then flush their
+    resident C block once, and each row's collector fires once, draining
+    its P result channels into its C-row mmap view.  Array tokens make
+    the channels wide: the a/b rings hold (capacity, n, n) blocks.
+
+    Runs identically under every simulation engine (the StepTask twin)
+    and under ``CompiledEngine`` as one jitted program.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((P * n, K * n)).astype(np.float32)
+    B = rng.standard_normal((K * n, P * n)).astype(np.float32)
+    C = np.zeros((P * n, P * n), np.float32)
+
+    a_mm = mmap(A, "A")
+    b_mm = mmap(B, "B")
+    c_rows = [mmap(C[i * n:(i + 1) * n, :], f"C{i}") for i in range(P)]
+
+    def afeeder_step(k, a: MMap, out, i: int):
+        rows = jnp.asarray(a.read_burst(i * n, n))      # (n, K*n), static i
+        out.write(jax.lax.dynamic_slice_in_dim(rows, k * n, n, axis=1))
+        return k + 1
+
+    def bfeeder_step(k, b: MMap, out, j: int):
+        rows = jnp.asarray(b.read_burst(k * n, n))      # (n, P*n), dynamic k
+        out.write(rows[:, j * n:(j + 1) * n])
+        return k + 1
+
+    # bit-parity contract (docs/synthesis.md): the MAC goes through a
+    # jitted helper so the twin executes the same contracted kernel the
+    # whole-graph program inlines
+    _mac = jax.jit(lambda acc, a, b: acc + a @ b)
+
+    def pe_step(acc, a_in, b_in, a_out, b_out, c_out):
+        a = a_in.read()
+        b = b_in.read()
+        if a_out is not None:
+            a_out.write(a)
+        if b_out is not None:
+            b_out.write(b)
+        return _mac(acc, a, b)
+
+    def pe_flush(acc, a_in, b_in, a_out, b_out, c_out):
+        c_out.write(acc)
+        return acc
+
+    def collector_step(state, c_row: MMap, c_ins, i: int):
+        for j, ch in enumerate(c_ins):
+            c_row[:, j * n:(j + 1) * n] = ch.read()
+        return state
+
+    AFeederS = StepTask(afeeder_step, steps=K, init=jnp.int32(0),
+                        name="AFeeder")
+    BFeederS = StepTask(bfeeder_step, steps=K, init=jnp.int32(0),
+                        name="BFeeder")
+    PES = StepTask(pe_step, steps=K, flush=pe_flush,
+                   init=jnp.zeros((n, n), jnp.float32), name="PE")
+    CollectorS = StepTask(collector_step, steps=1, name="Collector")
+
+    def Top(a: MMap, b: MMap, c_views):
+        blk = dict(dtype=np.float32, shape=(n, n))
+        a_ch = [[channel(2, f"a{i}_{j}", **blk) for j in range(P)]
+                for i in range(P)]
+        b_ch = [[channel(2, f"b{i}_{j}", **blk) for j in range(P)]
+                for i in range(P)]
+        c_ch = [[channel(1, f"c{i}_{j}", **blk) for j in range(P)]
+                for i in range(P)]
+        t = task()
+        for i in range(P):
+            t = t.invoke(AFeederS, a, a_ch[i][0], i, name=f"AFeeder{i}")
+            t = t.invoke(BFeederS, b, b_ch[0][i], i, name=f"BFeeder{i}")
+        for i in range(P):
+            for j in range(P):
+                t = t.invoke(
+                    PES, a_ch[i][j], b_ch[i][j],
+                    a_ch[i][j + 1] if j + 1 < P else None,
+                    b_ch[i + 1][j] if i + 1 < P else None,
+                    c_ch[i][j], name=f"PE{i}_{j}")
+        for i in range(P):
+            t = t.invoke(CollectorS, c_views[i], c_ch[i], i,
+                         name=f"Collector{i}")
+
+    def check():
+        ref = A @ B
+        err = float(np.max(np.abs(C - ref)))
+        return err < 1e-3 * K * n, err
+
+    return Top, (a_mm, b_mm, c_rows), check
+
+
+def run_step(engine: str = "coroutine", P: int = 4, n: int = 8, K: int = 4,
+             seed: int = 0) -> AppResult:
+    """Run the step-form graph — ``engine="compiled"`` synthesizes it."""
+    top, args, check = build_step(P=P, n=n, K=K, seed=seed)
+    return simulate("gemm_step", top, args, engine, check)

@@ -26,7 +26,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core import AsyncMMap, MMap, async_mmap, channel, mmap, task
+from ..core import (AsyncMMap, MMap, StepTask, async_mmap, channel, mmap,
+                    task)
 from .base import AppResult, simulate
 
 DAMPING = 0.85
@@ -167,3 +168,139 @@ def build(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,
 def run(engine: str = "coroutine", **kw) -> AppResult:
     top, args, check = build(**kw)
     return simulate("page_rank", top, args, engine, check)
+
+
+# ---------------------------------------------------------------------------
+# step-function form (whole-graph synthesis, docs/synthesis.md)
+# ---------------------------------------------------------------------------
+
+def build_step(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,
+               n_iters: int = 5, seed: int = 0):
+    """PageRank in traceable step-function form — the mmap-fed **feedback
+    loop** case: Ctrl broadcasts the rank vector to the scatter PEs each
+    iteration and reads their contributions back, so the dataflow graph
+    has a cycle (which the sequential engine must fail on, paper Fig. 7)
+    that the whole-graph ``lax.while_loop`` executes natively.
+
+    Each PE's edge list and the shared out-degree vector live behind
+    read-only mmaps; the initial ranks enter through an mmap and the
+    converged ranks leave through one (arrays stay float32: jax's
+    canonical dtype, so the twin and the compiled program agree bit for
+    bit).  Tokens are whole rank/contribution vectors — one token per PE
+    per iteration.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_vertices, n_edges).astype(np.int32)
+    out_deg = np.maximum(np.bincount(src, minlength=n_vertices), 1)
+
+    part = (n_vertices + n_pe - 1) // n_pe
+    pe_edges = [np.array([(int(s), int(d)) for s, d in zip(src, dst)
+                          if d // part == p], np.int32).reshape(-1, 2)
+                for p in range(n_pe)]
+
+    # Build-time gather plan per PE: pad each vertex's incoming-edge list
+    # to the partition's max in-degree; slot (v, k) holds the edge index
+    # whose weight feeds vertex v (or the one-past-the-end sentinel, a
+    # zero weight).  The per-firing accumulation is then an *unrolled
+    # fixed-order* chain of elementwise adds — bit-stable under any XLA
+    # fusion, unlike scatter-add, whose duplicate-index order is
+    # compilation-dependent (and would break sim-vs-synth bit parity).
+    def _gather_plan(e):
+        by_v: dict[int, list] = {}
+        for k, (_, d) in enumerate(e):
+            by_v.setdefault(int(d), []).append(k)
+        width = max((len(v) for v in by_v.values()), default=1)
+        idx = np.full((n_vertices, width), len(e), np.int32)   # sentinel
+        for v, ks in by_v.items():
+            idx[v, :len(ks)] = ks
+        return idx
+
+    gather_plans = [_gather_plan(pe_edges[p]) for p in range(n_pe)]
+
+    r0 = np.full(n_vertices, 1.0 / n_vertices, np.float32)
+    ranks = np.zeros(n_vertices, np.float32)
+
+    r0_mm = mmap(r0, "ranks0")
+    out_mm = mmap(ranks, "ranks")
+    deg_mm = mmap(out_deg.astype(np.float32), "out_deg")
+    edge_mms = [mmap(pe_edges[p], f"edges{p}") for p in range(n_pe)]
+    plan_mms = [mmap(gather_plans[p], f"gather{p}") for p in range(n_pe)]
+
+    def scatter_step(state, edges: MMap, plan: MMap, deg: MMap, ranks_in,
+                     upd_out):
+        r = ranks_in.read()
+        e = jnp.asarray(edges.read_burst(0, len(edges)))
+        idx = jnp.asarray(plan.read_burst(0, n_vertices))
+        degv = jnp.asarray(deg.read_burst(0, n_vertices))
+        w = r[e[:, 0]] / degv[e[:, 0]]
+        wext = jnp.concatenate([w, jnp.zeros(1, jnp.float32)])
+        contrib = wext[idx[:, 0]]
+        for k in range(1, idx.shape[1]):        # static, fixed-order sum
+            contrib = contrib + wext[idx[:, k]]
+        upd_out.write(contrib)
+        return state
+
+    # bit-parity contract (docs/synthesis.md): firing math that XLA may
+    # FMA-contract goes through a jitted helper, so the twin executes the
+    # same contracted kernel the whole-graph program inlines
+    _mix = jax.jit(lambda total: ((1 - DAMPING) / n_vertices +
+                                  DAMPING * total).astype(jnp.float32))
+
+    def _combine(upd_ins):
+        total = upd_ins[0].read()
+        for ci in upd_ins[1:]:
+            total = total + ci.read()
+        return _mix(total)
+
+    def ctrl_warmup(r, ranks0: MMap, out: MMap, rank_outs, upd_ins):
+        r = jnp.asarray(ranks0.read_burst(0, n_vertices))
+        for o in rank_outs:
+            o.write(r)
+        return r
+
+    def ctrl_step(r, ranks0: MMap, out: MMap, rank_outs, upd_ins):
+        r = _combine(upd_ins)
+        for o in rank_outs:
+            o.write(r)
+        return r
+
+    def ctrl_flush(r, ranks0: MMap, out: MMap, rank_outs, upd_ins):
+        r = _combine(upd_ins)
+        out.write_burst(0, r)
+        return r
+
+    ScatterS = StepTask(scatter_step, steps=n_iters, name="Scatter")
+    CtrlS = StepTask(ctrl_step, steps=n_iters - 1, warmup=ctrl_warmup,
+                     flush=ctrl_flush,
+                     init=jnp.zeros(n_vertices, jnp.float32), name="Ctrl")
+
+    def Top(r0m: MMap, outm: MMap, degm: MMap, eports, plans):
+        vec = dict(dtype=np.float32, shape=(n_vertices,))
+        rank_ch = [channel(1, f"rank{p}", **vec) for p in range(n_pe)]
+        upd_ch = [channel(1, f"upd{p}", **vec) for p in range(n_pe)]
+        t = task()
+        for p in range(n_pe):
+            t = t.invoke(ScatterS, eports[p], plans[p], degm, rank_ch[p],
+                         upd_ch[p], name=f"Scatter{p}")
+        t.invoke(CtrlS, r0m, outm, rank_ch, upd_ch)
+
+    def check():
+        ref = np.full(n_vertices, 1.0 / n_vertices, np.float64)
+        for _ in range(n_iters):
+            contrib = np.zeros(n_vertices, np.float64)
+            np.add.at(contrib, dst, ref[src] / out_deg[src])
+            ref = (1 - DAMPING) / n_vertices + DAMPING * contrib
+        err = float(np.max(np.abs(ranks - ref)))
+        return err < 1e-5, err
+
+    return Top, (r0_mm, out_mm, deg_mm, edge_mms, plan_mms), check
+
+
+def run_step(engine: str = "coroutine", **kw) -> AppResult:
+    """Run the step-form graph — ``engine="compiled"`` synthesizes it."""
+    top, args, check = build_step(**kw)
+    return simulate("page_rank_step", top, args, engine, check)

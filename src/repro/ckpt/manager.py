@@ -100,11 +100,22 @@ class CheckpointManager:
              extra: Optional[dict] = None, blocking: bool = True) -> Path:
         """Snapshot to host memory now; write (possibly async) to disk."""
         self.wait()
+
         # synchronous snapshot: device -> host copy happens here, so the
-        # training loop may donate/overwrite the arrays right after return
-        host_p = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), params)
-        host_o = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
-                              opt_state)
+        # training loop may donate/overwrite the arrays right after return.
+        # device_get is zero-copy whenever it can be (numpy leaves come
+        # back as the SAME buffer; on the CPU backend jax Arrays come back
+        # as a view of the device buffer), so any result that does not own
+        # fresh memory must be copied — otherwise a post-save in-place
+        # update or donation would corrupt the in-flight async write.
+        def _snap(x):
+            arr = np.asarray(jax.device_get(x))
+            if isinstance(x, np.ndarray) or not arr.flags.owndata:
+                arr = arr.copy()
+            return arr
+
+        host_p = jax.tree.map(_snap, params)
+        host_o = jax.tree.map(_snap, opt_state)
         extra = dict(extra or {})
 
         def write():

@@ -16,14 +16,15 @@ from .engines import (ENGINES, CoroutineEngine, EngineBase, SequentialEngine,
                       SimReport, ThreadEngine, run)
 from .errors import (ChannelMisuse, Deadlock, EndOfTransaction,
                      GraphValidationError, ReproError,
-                     SequentialSimulationError, TaskKilled)
-from .graph import (DefinitionInfo, Graph, InterfaceInfo, elaborate,
-                    extract_graph)
+                     SequentialSimulationError, SynthesisError, TaskKilled)
+from .graph import (ChannelInfo, DefinitionInfo, Graph, InterfaceInfo,
+                    elaborate, extract_graph)
 from .hier_compile import (CompileReport, DataflowProgram, StageInstance,
                            build_dataflow, compile_stages, diff_definitions)
 from .interface import (AsyncMMap, Interface, InterfaceBinding, MMap,
                         Scalar, async_mmap, mmap, scalar)
 from .invoke import invoke
+from .synth import CompiledEngine, StepTask     # registers ENGINES["compiled"]
 from .task import TaskBuilder, TaskInstance, task
 
 __all__ = [
@@ -40,4 +41,5 @@ __all__ = [
     "lower_spec", "runtime_value", "structural_digest",
     "AsyncMMap", "Interface", "InterfaceBinding", "MMap", "Scalar",
     "async_mmap", "mmap", "scalar",
+    "ChannelInfo", "CompiledEngine", "StepTask", "SynthesisError",
 ]

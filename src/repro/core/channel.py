@@ -40,6 +40,8 @@ import itertools
 from collections import deque
 from typing import Any, Generic, Optional, Sequence, TypeVar
 
+import numpy as np
+
 from .context import current_runtime
 from .errors import ChannelMisuse, EndOfTransaction
 
@@ -69,6 +71,18 @@ READABLE = "readable"
 WRITABLE = "writable"
 
 
+def _norm_dtype(dtype: Any) -> Any:
+    """Normalize a declared element dtype through numpy when possible;
+    anything numpy cannot interpret is kept verbatim (documentation-only,
+    never enforced)."""
+    if dtype is None:
+        return None
+    try:
+        return np.dtype(dtype)
+    except TypeError:
+        return dtype
+
+
 class Channel(Generic[T]):
     """Bounded FIFO channel (paper Section 3.1.1/3.1.3).
 
@@ -85,20 +99,27 @@ class Channel(Generic[T]):
     """
 
     __slots__ = (
-        "name", "capacity", "dtype", "_q", "uid",
+        "name", "capacity", "dtype", "shape", "_q", "uid",
         "producer", "consumer", "parent", "iface",
         "total_written", "total_read", "max_occupancy",
         "_rwait", "_wwait", "_eot_count",
     )
 
     def __init__(self, capacity: int = 2, name: Optional[str] = None,
-                 dtype: Any = None):
-        if capacity < 1:
-            raise ValueError("channel capacity must be >= 1")
+                 dtype: Any = None, shape: Optional[tuple] = None):
+        if not isinstance(capacity, int) or isinstance(capacity, bool) \
+                or capacity < 1:
+            raise ValueError("channel capacity must be a static int >= 1")
         self.uid = next(_uid)
         self.name = name or f"ch{self.uid}"
         self.capacity = capacity
-        self.dtype = dtype
+        # element spec (paper: tapa::channel<T, capacity> — T is part of the
+        # type).  ``dtype`` is normalized when numpy understands it; a
+        # non-normalizable dtype stays as documentation only.  ``shape`` is
+        # the per-token array shape (() for scalar tokens); synthesis
+        # requires both, simulation enforces them under track_stats.
+        self.dtype = _norm_dtype(dtype)
+        self.shape = tuple(shape) if shape is not None else None
         self._q: deque = deque()
         # Per-channel waiter lists (coroutine engine: (fiber, epoch) pairs).
         self._rwait: deque = deque()
@@ -117,6 +138,46 @@ class Channel(Generic[T]):
         self.total_written = 0
         self.total_read = 0
         self.max_occupancy = 0
+
+    # -- element spec ------------------------------------------------------
+    def has_spec(self) -> bool:
+        """True when this channel declares an enforceable element spec."""
+        return self.shape is not None or isinstance(self.dtype, np.dtype)
+
+    def check_token(self, tok: Any, task: Any = None) -> None:
+        """Validate one data token against the declared element spec.
+
+        Engines call this under ``track_stats`` (the debug mode) on every
+        push; the error names the channel and the pushing task so a typed
+        graph fails at the *write* that broke the contract, not at some
+        downstream consumer."""
+        if tok is EOT:
+            return
+        who = f" (task {task.name!r})" if task is not None else ""
+        if self.shape is not None:
+            got = tuple(np.shape(tok))
+            if got != self.shape:
+                raise ChannelMisuse(
+                    f"channel {self.name!r} declares element shape "
+                    f"{self.shape}; got a token of shape {got}{who}")
+        if isinstance(self.dtype, np.dtype):
+            got_dt = getattr(tok, "dtype", None)
+            if got_dt is not None:
+                if np.dtype(got_dt) != self.dtype:
+                    raise ChannelMisuse(
+                        f"channel {self.name!r} declares element dtype "
+                        f"{self.dtype}; got a token of dtype {got_dt}{who}")
+            else:
+                # Python scalars are checked by kind only (an int literal
+                # on an int32 channel is fine); arbitrary objects on a
+                # dtype-declared channel are not
+                ok = isinstance(tok, (bool, int, float, complex)) and \
+                    np.dtype(type(tok)).kind == self.dtype.kind
+                if not ok:
+                    raise ChannelMisuse(
+                        f"channel {self.name!r} declares element dtype "
+                        f"{self.dtype}; got a {type(tok).__name__} "
+                        f"token{who}")
 
     # -- raw state ---------------------------------------------------------
     def is_empty(self) -> bool:
@@ -501,9 +562,14 @@ class OStream(Generic[T]):
 
 
 def channel(capacity: int = 2, name: Optional[str] = None,
-            dtype: Any = None) -> Channel:
-    """Instantiate a channel — ``tapa::channel<T, capacity>`` (Listing 5)."""
-    return Channel(capacity=capacity, name=name, dtype=dtype)
+            dtype: Any = None, shape: Optional[tuple] = None) -> Channel:
+    """Instantiate a channel — ``tapa::channel<T, capacity>`` (Listing 5).
+
+    ``dtype``/``shape`` declare the element spec (the ``T``): engines
+    enforce it on every push under ``track_stats``, and synthesis
+    (:mod:`repro.core.synth`) requires it to size the on-device ring
+    buffer."""
+    return Channel(capacity=capacity, name=name, dtype=dtype, shape=shape)
 
 
 def select(*streams) -> None:

@@ -190,6 +190,10 @@ def _enc(h, v: Any, depth: int = 0, seen: Optional[set] = None) -> None:
     elif isinstance(v, (types.FunctionType, types.MethodType, partial)) \
             or callable(v) and not isinstance(v, type):
         _enc_fn(h, v, depth, seen)
+    elif isinstance(v, type):
+        # classes hash by qualified name — never by their descriptor
+        # attributes (a class with shape/dtype __slots__ is not an array)
+        h.update(f"cls:{v.__module__}.{v.__qualname__}".encode())
     elif isinstance(v, np.ndarray):
         h.update(f"nd:{v.dtype}:{v.shape}".encode())
         h.update(np.ascontiguousarray(v).tobytes())

@@ -57,7 +57,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from .channel import Channel, READABLE, WRITABLE
-from .context import clear_context, set_context
+from .context import clear_context, current_task, set_context
 from .errors import Deadlock, SequentialSimulationError, TaskKilled
 from .interface import AsyncMMap, MMap
 from .task import (TaskInstance, bind_streams, builder_stack_depth,
@@ -266,6 +266,17 @@ class EngineBase:
         if occ > chan.max_occupancy:
             chan.max_occupancy = occ
 
+    def _check_spec(self, chan: Channel, toks) -> None:
+        """Element-spec enforcement (``Channel(dtype=..., shape=...)``).
+
+        Called by the engines' push paths under ``track_stats`` — the same
+        opt-in that disables the fast path, so every token is observed.
+        The error names the channel and the pushing task."""
+        if chan.has_spec():
+            inst = current_task()
+            for t in toks:
+                chan.check_token(t, inst)
+
     def _register(self, inst: TaskInstance) -> None:
         self.instances.append(inst)
         found_if: set = set()
@@ -369,6 +380,8 @@ class SequentialEngine(EngineBase):
         return self.wait(keys[0][0], keys[0][1])
 
     def push(self, chan: Channel, tok: Any) -> None:
+        if self.track_stats:
+            self._check_spec(chan, (tok,))
         chan._push(tok)
         if self.track_stats:
             self._stat_push(chan, 1)
@@ -379,6 +392,8 @@ class SequentialEngine(EngineBase):
         return chan._pop()
 
     def push_burst(self, chan: Channel, toks: list) -> None:
+        if self.track_stats:
+            self._check_spec(chan, toks)
         chan._q.extend(toks)
         if self.track_stats:
             self._stat_push(chan, len(toks))
@@ -623,6 +638,8 @@ class ThreadEngine(EngineBase):
 
     def push(self, chan: Channel, tok: Any) -> None:
         with self._lock:
+            if self.track_stats:
+                self._check_spec(chan, (tok,))
             chan._push(tok)
             if self.track_stats:
                 self._stat_push(chan, 1)
@@ -644,6 +661,8 @@ class ThreadEngine(EngineBase):
         """Batch enqueue: one lock round-trip and one reader notify per
         burst instead of per token."""
         with self._lock:
+            if self.track_stats:
+                self._check_spec(chan, toks)
             chan._q.extend(toks)
             if self.track_stats:
                 self._stat_push(chan, len(toks))
@@ -971,6 +990,8 @@ class CoroutineEngine(EngineBase):
         fiber.inst.state = "running"
 
     def push(self, chan: Channel, tok: Any) -> None:
+        if self.track_stats:
+            self._check_spec(chan, (tok,))
         chan._push(tok)              # no lock: exclusivity by construction
         if self.track_stats:
             self._stat_push(chan, 1)
@@ -988,6 +1009,8 @@ class CoroutineEngine(EngineBase):
     def push_burst(self, chan: Channel, toks: list) -> None:
         """Batch enqueue: one deque.extend and at most one reader wake per
         burst — the per-token runtime cost is amortized away."""
+        if self.track_stats:
+            self._check_spec(chan, toks)
         chan._q.extend(toks)
         if self.track_stats:
             self._stat_push(chan, len(toks))

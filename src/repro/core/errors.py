@@ -31,6 +31,18 @@ class GraphValidationError(ReproError):
     """Task-graph metadata failed validation."""
 
 
+class SynthesisError(ReproError):
+    """A task graph cannot be lowered to a single compiled program.
+
+    Raised by :mod:`repro.core.synth` when the graph is outside the
+    synthesizable subset — a task not in step-function form, a channel with
+    no declared element spec, a data-dependent I/O rate, an async_mmap
+    port, a read-and-written mmap, or a phase whose I/O can never fit the
+    channel capacity.  The message names the offending task/channel: the
+    contract is *refuse with a diagnostic, never miscompile*.
+    """
+
+
 class TaskKilled(BaseException):
     """Internal control-flow signal used to tear down detached tasks once all
     non-detached tasks have finished.  Derives from BaseException so that

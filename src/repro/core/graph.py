@@ -14,14 +14,15 @@ and :class:`Channel`.  This module turns that into a queryable IR:
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from .channel import Channel
-from .compile_cache import structural_digest
+from .compile_cache import _enc, _stable_repr, structural_digest
 from .engines import EngineBase, SimReport, ENGINES
 from .errors import GraphValidationError
-from .interface import AsyncMMap, MMap
+from .interface import AsyncMMap, MMap, Scalar
 from .task import TaskInstance
 
 
@@ -76,6 +77,22 @@ def _merge_interface_rows(insts: list) -> tuple:
         return ds.pop() if len(ds) == 1 else "mixed"
     return tuple(InterfaceInfo(p, kinds[p], dtypes[p], direction(p))
                  for p in order)
+
+
+@dataclass(frozen=True)
+class ChannelInfo:
+    """One row of the graph's channel table — the typed, fixed-capacity
+    FIFO record whole-graph synthesis sizes its ring buffers from
+    (hlslib: channels must be typed hardware objects for the lowering to
+    exist).  ``producer``/``consumer`` are instance names (None when
+    unbound); ``dtype``/``shape`` are the declared element spec (None when
+    undeclared — simulation tolerates it, synthesis refuses)."""
+    name: str
+    capacity: int
+    dtype: Any
+    shape: Optional[tuple]
+    producer: Optional[str]
+    consumer: Optional[str]
 
 
 @dataclass(frozen=True)
@@ -152,6 +169,74 @@ class Graph:
         return self.n_instances / max(1, self.n_tasks)
 
     # ------------------------------------------------------------------
+    @property
+    def channel_info(self) -> list[ChannelInfo]:
+        """The per-channel table (name/capacity/element spec/endpoints) —
+        what synthesis consumes, and what Table 3's "#Channels" column
+        summarizes."""
+        return [
+            ChannelInfo(
+                name=c.name, capacity=c.capacity, dtype=c.dtype,
+                shape=c.shape,
+                producer=getattr(c.producer, "name", None),
+                consumer=getattr(c.consumer, "name", None))
+            for c in self.channels if c.iface is None]
+
+    def structural_hash(self) -> str:
+        """Stable digest of the whole graph's *structure*: every instance's
+        definition hash plus its argument wiring — channels by dense index
+        + capacity + element spec, mmaps/async_mmaps by aval and identity
+        index, scalars and plain values by content — and the parent tree.
+
+        Equal hashes mean "lowering this graph produces the same program
+        for the same input avals": mmap buffer *values* and instance/
+        channel *names* are excluded, so N graphs over N datasets share
+        one whole-graph compile (the key ``repro.core.synth`` caches on).
+        """
+        chan_idx = {id(c): i for i, c in enumerate(self.channels)}
+        iface_idx = {id(m): i for i, m in enumerate(self.interfaces)}
+        inst_idx = {id(i): n for n, i in enumerate(self.instances)}
+        digests: dict[int, str] = {}
+        h = hashlib.sha256()
+
+        def enc_arg(v: Any) -> None:
+            if isinstance(v, Channel):
+                h.update(
+                    f"chan:{chan_idx.get(id(v), -1)}:{v.capacity}:"
+                    f"{v.dtype}:{v.shape}".encode())
+            elif isinstance(v, (MMap, AsyncMMap)):
+                h.update(f"{v.iface_kind}:{iface_idx.get(id(v), -1)}:"
+                         f"{v.dtype}:{tuple(v.shape)}".encode())
+            elif isinstance(v, Scalar):
+                h.update(f"scalar:{_stable_repr(v.value)}".encode())
+            elif isinstance(v, (list, tuple)):
+                h.update(f"seq{len(v)}".encode())
+                for x in v:
+                    enc_arg(x)
+            elif isinstance(v, dict):
+                h.update(f"map{len(v)}".encode())
+                for k in sorted(v, key=_stable_repr):
+                    h.update(_stable_repr(k).encode())
+                    enc_arg(v[k])
+            else:
+                _enc(h, v)
+
+        for inst in self.instances:
+            d = digests.get(id(inst.fn))
+            if d is None:
+                d = digests[id(inst.fn)] = structural_digest(inst.fn)
+            h.update(b"inst")
+            h.update(d.encode())
+            h.update(f"p{inst_idx.get(id(inst.parent), -1)}"
+                     f"d{int(inst.detach)}".encode())
+            for a in inst.args:
+                enc_arg(a)
+            for k in sorted(inst.kwargs):
+                h.update(k.encode())
+                enc_arg(inst.kwargs[k])
+        return h.hexdigest()
+
+    # ------------------------------------------------------------------
     def validate(self) -> None:
         """Enforce Section 3.1.1: every channel has exactly one producer and
         one consumer, both instantiated under the same parent task; every
@@ -161,6 +246,13 @@ class Graph:
         for c in self.channels:
             if c.iface is not None:
                 continue    # async_mmap port channel: memory is an endpoint
+            # static-depth rule: a channel's capacity is part of its type
+            # (tapa::channel<T, capacity>) and must stay a positive static
+            # int for the ring-buffer lowering to exist
+            if not isinstance(c.capacity, int) or \
+                    isinstance(c.capacity, bool) or c.capacity < 1:
+                errs.append(f"channel {c.name!r} has non-static depth "
+                            f"{c.capacity!r}")
             if c.producer is None:
                 errs.append(f"channel {c.name!r} has no producer")
             if c.consumer is None:

@@ -1,0 +1,1034 @@
+"""Whole-graph synthesis: lower a task graph to ONE compiled XLA program.
+
+The paper's two-sided contract (Fig. 2) is *simulate for correctness,
+synthesize for QoR*.  Until now this repo's "codegen" jitted stage
+functions one at a time while host Python shuttled every token between
+them — the interconnect (FIFOs, task firing control) stayed in software.
+TAPA's insight is that the win comes from synthesizing exactly that
+interconnect; hlslib's is that channels must become typed, fixed-capacity
+hardware objects for the lowering to exist.  This module is the XLA
+analogue:
+
+* every :class:`~repro.core.channel.Channel` becomes a fixed-capacity
+  **on-device ring buffer** — ``(buf[capacity, *elem_shape], head, size)``
+  carried through a ``lax.while_loop``;
+* every task becomes a **guarded step**: it fires only when its declared
+  reads are available and its writes fit, mirroring the engines' blocking
+  semantics exactly;
+* bursts become slice transfers (gather/scatter over the ring);
+* mmap buffers and scalars flow through the PR-4 ``lower_spec`` path —
+  mmaps are runtime inputs of the executable, scalars static constants.
+
+The synthesizable subset is the **step-function form**: a leaf task is a
+:class:`StepTask` whose phases are pure jax-traceable functions
+
+    ``state, *port_views -> state``
+
+with *static* I/O rates (reads/writes per firing fixed at trace time).
+The same StepTask runs unmodified under the Python engines — its
+``__call__`` is the **simulation twin**, executing the phase functions
+against real blocking streams — so one graph definition is both the
+correctness vehicle and the compiled artifact, bit-for-bit.
+
+Whole-graph lowerings are keyed in the PR-2 compile cache by the graph's
+structural hash + input avals: a second process re-running the same graph
+performs **zero XLA compiles**.
+
+Anything outside the subset is *refused with a diagnostic naming the
+task/channel* (:class:`~repro.core.errors.SynthesisError`), never
+miscompiled: non-step leaf tasks (e.g. availability-routed switches using
+``peek``/``select``), channels without a declared element spec,
+data-dependent I/O rates, async_mmap ports (ROADMAP: synth pipelining),
+and mmaps both written and read across tasks (schedule-dependent).
+See ``docs/synthesis.md``.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import inspect
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .channel import Channel, IStream, OStream
+from .compile_cache import aval_signature, default_cache, _stable_repr
+from .context import clear_context, set_context
+from .engines import ENGINES, EngineBase, SimReport
+from .errors import ChannelMisuse, GraphValidationError, SynthesisError
+from .graph import extract_graph
+from .interface import AsyncMMap, MMap
+from .task import (AutoStream, TaskInstance, bind_streams,
+                   builder_stack_depth, join_pending_builders)
+
+SYNTH_SCHEMA = "synth1"
+
+
+def _canon_dtype(dtype: Any) -> np.dtype:
+    """The dtype a ring buffer (or mmap input) actually carries on device:
+    the declared dtype after jax canonicalization (x64 -> x32 when 64-bit
+    mode is off).  Element checks compare against THIS, so a float64
+    declaration is not misreported as the task's fault."""
+    return np.dtype(jax.dtypes.canonicalize_dtype(np.dtype(dtype)))
+
+
+def _materialize_state(init: Any) -> Any:
+    """Canonicalize an initial-state pytree to jax arrays — the same
+    representation the twin and the compiled program both carry, so float
+    semantics (incl. x64 canonicalization) agree between them."""
+    return jax.tree.map(jnp.asarray, init)
+
+
+def _state_spec(state: Any) -> Any:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), x.dtype), state)
+
+
+# ---------------------------------------------------------------------------
+# the step-function task form
+# ---------------------------------------------------------------------------
+
+class StepTask:
+    """A leaf task in traceable step-function form.
+
+    Up to three phases, each a pure function ``state, *ports -> state``
+    with static per-firing I/O rates:
+
+    * ``warmup`` — fires ``n_warmup`` times (pipeline fill: e.g. read the
+      first stencil row without emitting);
+    * ``step``   — the steady state, fires ``steps`` times;
+    * ``flush``  — fires ``n_flush`` times (drain: e.g. emit the
+      accumulated result block).
+
+    ``init`` is the initial state pytree.  Ports are the invoke arguments:
+    channels appear as stream views (``read``/``read_burst``/``write``/
+    ``write_burst`` only — no EoT, no peek: termination is by firing
+    count), mmaps as memory views, scalars as plain values.
+
+    Calling a StepTask *is* its simulation twin: the classic engines
+    invoke it like any task body, and it runs the phase functions against
+    the real blocking streams.  ``CompiledEngine`` instead lowers every
+    firing into a guarded step of one jitted whole-graph program.
+    """
+
+    is_step_task = True
+
+    def __init__(self, step: Callable, *, steps: int, init: Any = None,
+                 warmup: Optional[Callable] = None, n_warmup: int = 1,
+                 flush: Optional[Callable] = None, n_flush: int = 1,
+                 close_outputs: bool = False, name: Optional[str] = None):
+        if not isinstance(steps, int) or steps < 0:
+            raise ValueError("StepTask steps must be a static int >= 0")
+        self.step = step
+        self.steps = steps
+        self.init = init
+        self.warmup = warmup
+        self.n_warmup = int(n_warmup) if warmup is not None else 0
+        self.flush = flush
+        self.n_flush = int(n_flush) if flush is not None else 0
+        # interop with EoT-consuming free-form tasks: the twin closes every
+        # written stream after its last firing.  EoT is outside the
+        # synthesizable subset, so synthesis refuses such tasks.
+        self.close_outputs = close_outputs
+        self.__name__ = name or getattr(step, "__name__", "step_task")
+        try:
+            sig = inspect.signature(step)
+            params = list(sig.parameters.values())[1:]   # drop ``state``
+            self.__signature__ = sig.replace(parameters=params)
+        except (TypeError, ValueError):
+            pass
+
+    def phases(self) -> list[tuple[str, Callable, int]]:
+        out = []
+        if self.warmup is not None and self.n_warmup:
+            out.append(("warmup", self.warmup, self.n_warmup))
+        if self.steps:
+            out.append(("step", self.step, self.steps))
+        if self.flush is not None and self.n_flush:
+            out.append(("flush", self.flush, self.n_flush))
+        return out
+
+    @property
+    def total_fires(self) -> int:
+        return sum(n for _, _, n in self.phases())
+
+    # -- simulation twin -----------------------------------------------------
+    def __call__(self, *args, **kwargs):
+        streams: list[_TwinStream] = []
+        views = tuple(_twin_view(a, streams) for a in args)
+        kw = {k: _twin_view(v, streams) for k, v in kwargs.items()}
+        state = _materialize_state(self.init)
+        for _, fn, n in self.phases():
+            for _ in range(n):
+                state = fn(state, *views, **kw)
+        if self.close_outputs:
+            for s in streams:
+                # close written streams, and annotated output ports even
+                # when this instance never fired (an empty schedule must
+                # still end its downstream consumer's transaction)
+                if s._wrote or isinstance(s._s, OStream):
+                    s._s.close()
+        return state
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"StepTask({self.__name__!r}, "
+                f"fires={self.total_fires})")
+
+
+class _TwinStream:
+    """Simulation-twin stream view: the synthesizable port API
+    (``read``/``read_burst``/``write``/``write_burst``) over a real
+    blocking stream.  Burst reads stack to an array so the phase function
+    sees the exact value shape synthesis hands it."""
+
+    __slots__ = ("_s", "_wrote")
+
+    def __init__(self, s):
+        self._s = s
+        self._wrote = False
+
+    def read(self):
+        return self._s.read()
+
+    def read_burst(self, n: int):
+        toks = self._s.read_burst(n)
+        if len(toks) != n:
+            raise ChannelMisuse(
+                f"step task read_burst({n}) hit EoT after {len(toks)} "
+                f"tokens on channel {self._s.channel.name!r}; step graphs "
+                f"terminate by firing counts, not EoT")
+        return jnp.stack([jnp.asarray(t) for t in toks])
+
+    def write(self, tok) -> None:
+        self._wrote = True
+        self._s.write(tok)
+
+    def write_burst(self, arr) -> None:
+        self._wrote = True
+        self._s.write_burst(list(arr))
+
+
+def _twin_view(v: Any, streams: Optional[list] = None) -> Any:
+    if isinstance(v, (IStream, OStream, AutoStream)):
+        tw = _TwinStream(v)
+        if streams is not None:
+            streams.append(tw)
+        return tw
+    if isinstance(v, (list, tuple)):
+        return type(v)(_twin_view(x, streams) for x in v)
+    return v
+
+
+# ---------------------------------------------------------------------------
+# trace-time views (shared by the counting pass and the real lowering)
+# ---------------------------------------------------------------------------
+
+class _Ctx:
+    """Mutable trace-time context: the functional channel/mmap states a
+    firing reads and replaces."""
+
+    __slots__ = ("chans", "mmaps")
+
+    def __init__(self, chans: dict, mmaps: dict):
+        self.chans = chans      # ci -> (buf, head, size)
+        self.mmaps = mmaps      # mi -> array
+
+
+class _Recorder:
+    """Counting-pass sink: per-phase I/O rates + endpoint/direction
+    registration.  Absent (None) during the real lowering trace — the
+    counts are already validated identical because the trace is the same
+    Python."""
+
+    def __init__(self, inst: TaskInstance):
+        self.inst = inst
+        self.reads: dict[int, int] = {}
+        self.writes: dict[int, int] = {}
+        self.mmap_loads: dict[int, int] = {}     # element counts
+        self.mmap_stores: dict[int, int] = {}
+        self.mmap_load_ops: dict[int, int] = {}  # transfer counts
+        self.mmap_store_ops: dict[int, int] = {}
+        self.mmap_read: set = set()
+        self.mmap_written: set = set()
+
+
+class _SynthStream:
+    """Trace-time stream view over a ring buffer in the carry."""
+
+    __slots__ = ("_ctx", "_ci", "_chan", "_inst", "_rec")
+
+    def __init__(self, ctx: _Ctx, ci: int, chan: Channel,
+                 inst: TaskInstance, rec: Optional[_Recorder]):
+        self._ctx = ctx
+        self._ci = ci
+        self._chan = chan
+        self._inst = inst
+        self._rec = rec
+
+    # -- reads ---------------------------------------------------------------
+    def read(self):
+        buf, head, size = self._ctx.chans[self._ci]
+        self._account("read", 1)
+        tok = buf[head]
+        cap = self._chan.capacity
+        self._ctx.chans[self._ci] = (buf, (head + 1) % cap, size - 1)
+        return tok
+
+    def read_burst(self, n: int):
+        n = self._static(n, "read_burst")
+        buf, head, size = self._ctx.chans[self._ci]
+        self._account("read", n)
+        cap = self._chan.capacity
+        idx = (head + jnp.arange(n, dtype=jnp.int32)) % cap
+        toks = buf[idx]
+        self._ctx.chans[self._ci] = (buf, (head + n) % cap, size - n)
+        return toks
+
+    # -- writes --------------------------------------------------------------
+    def write(self, tok) -> None:
+        tok = jnp.asarray(tok)
+        self._check_elem(tok, burst=False)
+        buf, head, size = self._ctx.chans[self._ci]
+        self._account("write", 1)
+        cap = self._chan.capacity
+        buf = buf.at[(head + size) % cap].set(tok)
+        self._ctx.chans[self._ci] = (buf, head, size + 1)
+
+    def write_burst(self, arr) -> None:
+        arr = jnp.asarray(arr) if not isinstance(arr, (list, tuple)) \
+            else jnp.stack([jnp.asarray(t) for t in arr])
+        self._check_elem(arr, burst=True)
+        n = int(arr.shape[0])
+        buf, head, size = self._ctx.chans[self._ci]
+        self._account("write", n)
+        cap = self._chan.capacity
+        idx = (head + size + jnp.arange(n, dtype=jnp.int32)) % cap
+        buf = buf.at[idx].set(arr)
+        self._ctx.chans[self._ci] = (buf, head, size + n)
+
+    # -- everything else is outside the synthesizable subset -----------------
+    def _unsupported(self, op: str):
+        raise SynthesisError(
+            f"task {self._inst.name!r} used stream op {op!r} on channel "
+            f"{self._chan.name!r}: step-function tasks may only "
+            f"read/read_burst/write/write_burst (termination is by firing "
+            f"count, availability routing needs the simulation engines)")
+
+    def close(self):
+        self._unsupported("close")
+
+    def peek(self):
+        self._unsupported("peek")
+
+    def eot(self):
+        self._unsupported("eot")
+
+    def open(self):
+        self._unsupported("open")
+
+    def empty(self):
+        self._unsupported("empty")
+
+    def full(self):
+        self._unsupported("full")
+
+    def try_read(self):
+        self._unsupported("try_read")
+
+    def try_write(self, v):
+        self._unsupported("try_write")
+
+    # -- helpers -------------------------------------------------------------
+    def _static(self, n: Any, op: str) -> int:
+        if not isinstance(n, (int, np.integer)):
+            raise SynthesisError(
+                f"task {self._inst.name!r}: {op} size on channel "
+                f"{self._chan.name!r} is data-dependent (a traced value); "
+                f"synthesis needs static I/O rates")
+        return int(n)
+
+    def _check_elem(self, arr, burst: bool) -> None:
+        c = self._chan
+        got_shape = tuple(arr.shape[1:]) if burst else tuple(arr.shape)
+        if got_shape != c.shape:
+            raise SynthesisError(
+                f"task {self._inst.name!r} wrote a token of shape "
+                f"{got_shape} to channel {c.name!r} declaring element "
+                f"shape {c.shape}")
+        if np.dtype(arr.dtype) != _canon_dtype(c.dtype):
+            raise SynthesisError(
+                f"task {self._inst.name!r} wrote a token of dtype "
+                f"{arr.dtype} to channel {c.name!r} declaring element "
+                f"dtype {c.dtype} (canonicalized {_canon_dtype(c.dtype)})")
+
+    def _account(self, op: str, n: int) -> None:
+        rec = self._rec
+        if rec is None:
+            return
+        if op == "read":
+            self._chan._bind("consumer", self._inst)
+            rec.reads[self._ci] = rec.reads.get(self._ci, 0) + n
+        else:
+            self._chan._bind("producer", self._inst)
+            rec.writes[self._ci] = rec.writes.get(self._ci, 0) + n
+
+
+class _SynthMMap:
+    """Trace-time memory view: the MMap API over a carry array, updated
+    functionally.  Loads/stores may use traced indices (they lower to
+    gathers / dynamic slices)."""
+
+    __slots__ = ("_ctx", "_mi", "_mmap", "_inst", "_rec")
+
+    def __init__(self, ctx: _Ctx, mi: int, mmap: MMap,
+                 inst: TaskInstance, rec: Optional[_Recorder]):
+        self._ctx = ctx
+        self._mi = mi
+        self._mmap = mmap
+        self._inst = inst
+        self._rec = rec
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(self._mmap.shape)
+
+    @property
+    def dtype(self):
+        return self._ctx.mmaps[self._mi].dtype
+
+    def __len__(self) -> int:
+        return len(self._mmap)
+
+    def __getitem__(self, idx):
+        v = self._ctx.mmaps[self._mi][idx]
+        self._account("read", v)
+        return v
+
+    def __setitem__(self, idx, value) -> None:
+        value = jnp.asarray(value)
+        self._account("write", value)
+        self._ctx.mmaps[self._mi] = \
+            self._ctx.mmaps[self._mi].at[idx].set(value)
+
+    def read_burst(self, start, n: int):
+        if not isinstance(n, (int, np.integer)):
+            raise SynthesisError(
+                f"task {self._inst.name!r}: mmap {self._mmap.name!r} "
+                f"read_burst size is data-dependent; synthesis needs a "
+                f"static transfer size")
+        out = jax.lax.dynamic_slice_in_dim(
+            self._ctx.mmaps[self._mi], jnp.asarray(start, jnp.int32),
+            int(n), axis=0)
+        self._account("read", out)
+        return out
+
+    def write_burst(self, start, seq) -> None:
+        seq = jnp.asarray(seq)
+        self._account("write", seq)
+        self._ctx.mmaps[self._mi] = jax.lax.dynamic_update_slice_in_dim(
+            self._ctx.mmaps[self._mi], seq, jnp.asarray(start, jnp.int32),
+            axis=0)
+
+    def _account(self, op: str, v) -> None:
+        rec = self._rec
+        if rec is None:
+            return
+        n = int(np.prod(np.shape(v))) if np.shape(v) else 1
+        if op == "read":
+            rec.mmap_read.add(self._mi)
+            rec.mmap_loads[self._mi] = rec.mmap_loads.get(self._mi, 0) + n
+            rec.mmap_load_ops[self._mi] = \
+                rec.mmap_load_ops.get(self._mi, 0) + 1
+        else:
+            rec.mmap_written.add(self._mi)
+            rec.mmap_stores[self._mi] = rec.mmap_stores.get(self._mi, 0) + n
+            rec.mmap_store_ops[self._mi] = \
+                rec.mmap_store_ops.get(self._mi, 0) + 1
+        b = self._mmap._by_inst.get(self._inst.uid)
+        if b is not None:
+            b.direction.add(op)
+
+
+# ---------------------------------------------------------------------------
+# lowering plan
+# ---------------------------------------------------------------------------
+
+class _ChanRef:
+    __slots__ = ("ci",)
+
+    def __init__(self, ci: int):
+        self.ci = ci
+
+
+class _MMapRef:
+    __slots__ = ("mi",)
+
+    def __init__(self, mi: int):
+        self.mi = mi
+
+
+@dataclass
+class _PhasePlan:
+    label: str
+    fn: Callable
+    count: int
+    reads: dict = field(default_factory=dict)    # ci -> tokens per firing
+    writes: dict = field(default_factory=dict)
+    mmap_loads: dict = field(default_factory=dict)    # mi -> elems/firing
+    mmap_stores: dict = field(default_factory=dict)
+    mmap_load_ops: dict = field(default_factory=dict)  # mi -> transfers
+    mmap_store_ops: dict = field(default_factory=dict)
+
+
+@dataclass
+class _TaskPlan:
+    inst: TaskInstance
+    task: StepTask
+    t_args: tuple = ()
+    t_kwargs: dict = field(default_factory=dict)
+    chan_ids: list = field(default_factory=list)
+    mmap_ids: list = field(default_factory=list)
+    phases: list = field(default_factory=list)   # [_PhasePlan]
+    state0: Any = None
+
+    @property
+    def total(self) -> int:
+        return sum(p.count for p in self.phases)
+
+    @property
+    def bounds(self) -> list[int]:
+        out, acc = [], 0
+        for p in self.phases:
+            acc += p.count
+            out.append(acc)
+        return out
+
+
+class _Plan:
+    def __init__(self):
+        self.channels: list[Channel] = []
+        self._chan_idx: dict[int, int] = {}
+        self.mmaps: list[MMap] = []
+        self._mmap_idx: dict[int, int] = {}
+        self.tasks: list[_TaskPlan] = []
+
+    def chan_index(self, c: Channel) -> int:
+        i = self._chan_idx.get(id(c))
+        if i is None:
+            i = self._chan_idx[id(c)] = len(self.channels)
+            self.channels.append(c)
+        return i
+
+    def mmap_index(self, m: MMap) -> int:
+        i = self._mmap_idx.get(id(m))
+        if i is None:
+            i = self._mmap_idx[id(m)] = len(self.mmaps)
+            self.mmaps.append(m)
+        return i
+
+
+def _build_template(v: Any, plan: _Plan, tp: _TaskPlan) -> Any:
+    """Replace bound stream/mmap views with carry references; everything
+    else (scalars, None, raw arrays — trace-time constants) passes
+    through."""
+    if isinstance(v, (IStream, OStream, AutoStream)):
+        ci = plan.chan_index(v.channel)
+        if ci not in tp.chan_ids:
+            tp.chan_ids.append(ci)
+        return _ChanRef(ci)
+    if isinstance(v, MMap):
+        mi = plan.mmap_index(v)
+        if mi not in tp.mmap_ids:
+            tp.mmap_ids.append(mi)
+        return _MMapRef(mi)
+    if isinstance(v, AsyncMMap):
+        raise SynthesisError(
+            f"task {tp.inst.name!r} binds async_mmap {v.name!r}: async "
+            f"memory ports are not synthesizable yet (ROADMAP: async_mmap "
+            f"pipelining in synth); use mmap or the simulation engines")
+    if isinstance(v, (list, tuple)):
+        conv = [_build_template(x, plan, tp) for x in v]
+        return type(v)(conv) if isinstance(v, tuple) else conv
+    return v
+
+
+def _instantiate(t: Any, ctx: _Ctx, plan: _Plan, inst: TaskInstance,
+                 rec: Optional[_Recorder]) -> Any:
+    if isinstance(t, _ChanRef):
+        return _SynthStream(ctx, t.ci, plan.channels[t.ci], inst, rec)
+    if isinstance(t, _MMapRef):
+        return _SynthMMap(ctx, t.mi, plan.mmaps[t.mi], inst, rec)
+    if isinstance(t, (list, tuple)):
+        conv = [_instantiate(x, ctx, plan, inst, rec) for x in t]
+        return type(t)(conv) if isinstance(t, tuple) else conv
+    return t
+
+
+def _chan_specs(plan: _Plan, tp: _TaskPlan) -> tuple:
+    out = []
+    for ci in tp.chan_ids:
+        c = plan.channels[ci]
+        out.append((
+            jax.ShapeDtypeStruct((c.capacity,) + c.shape,
+                                 _canon_dtype(c.dtype)),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32)))
+    return tuple(out)
+
+
+def _mmap_specs(plan: _Plan, tp: _TaskPlan) -> tuple:
+    # canonical dtype: what jnp.asarray(m.data) will produce at run time
+    return tuple(
+        jax.ShapeDtypeStruct(
+            tuple(plan.mmaps[mi].shape),
+            jax.dtypes.canonicalize_dtype(np.dtype(plan.mmaps[mi].dtype)))
+        for mi in tp.mmap_ids)
+
+
+def _phase_probe(plan: _Plan, tp: _TaskPlan, fn: Callable,
+                 rec: Optional[_Recorder]) -> Callable:
+    """The single firing body shared by the counting pass (abstract, via
+    eval_shape) and the real lowering (traced into the while_loop)."""
+
+    def probe(state, chans, mmaps):
+        ctx = _Ctx(dict(zip(tp.chan_ids, chans)),
+                   dict(zip(tp.mmap_ids, mmaps)))
+        args = tuple(_instantiate(t, ctx, plan, tp.inst, rec)
+                     for t in tp.t_args)
+        kw = {k: _instantiate(t, ctx, plan, tp.inst, rec)
+              for k, t in tp.t_kwargs.items()}
+        new_state = fn(state, *args, **kw)
+        return (new_state,
+                tuple(ctx.chans[ci] for ci in tp.chan_ids),
+                tuple(ctx.mmaps[mi] for mi in tp.mmap_ids))
+
+    return probe
+
+
+def _count_phase(plan: _Plan, tp: _TaskPlan, label: str, fn: Callable,
+                 count: int) -> _PhasePlan:
+    rec = _Recorder(tp.inst)
+    probe = _phase_probe(plan, tp, fn, rec)
+    spec = _state_spec(tp.state0)
+    try:
+        out_state, _, _ = jax.eval_shape(
+            probe, spec, _chan_specs(plan, tp), _mmap_specs(plan, tp))
+    except (SynthesisError, ChannelMisuse, GraphValidationError):
+        raise
+    except Exception as e:
+        raise SynthesisError(
+            f"task {tp.inst.name!r}: phase {label!r} failed to trace "
+            f"({type(e).__name__}: {e}); step-function bodies must be "
+            f"jax-traceable with static I/O rates") from e
+    got = jax.tree.map(lambda x: (tuple(x.shape), np.dtype(x.dtype)),
+                       out_state)
+    want = jax.tree.map(lambda x: (tuple(x.shape), np.dtype(x.dtype)), spec)
+    if got != want:
+        raise SynthesisError(
+            f"task {tp.inst.name!r}: phase {label!r} changed the state "
+            f"spec from {want} to {got}; step state must be shape- and "
+            f"dtype-stable across firings")
+    for ci, r in rec.reads.items():
+        c = plan.channels[ci]
+        if r > c.capacity:
+            raise SynthesisError(
+                f"task {tp.inst.name!r}: phase {label!r} reads {r} tokens "
+                f"per firing from channel {c.name!r} of capacity "
+                f"{c.capacity}; it could never fire")
+    for ci, w in rec.writes.items():
+        c = plan.channels[ci]
+        if w > c.capacity:
+            raise SynthesisError(
+                f"task {tp.inst.name!r}: phase {label!r} writes {w} tokens "
+                f"per firing to channel {c.name!r} of capacity "
+                f"{c.capacity}; it could never fire")
+    return _PhasePlan(label=label, fn=fn, count=count, reads=rec.reads,
+                      writes=rec.writes, mmap_loads=rec.mmap_loads,
+                      mmap_stores=rec.mmap_stores,
+                      mmap_load_ops=rec.mmap_load_ops,
+                      mmap_store_ops=rec.mmap_store_ops)
+
+
+# ---------------------------------------------------------------------------
+# the whole-graph program
+# ---------------------------------------------------------------------------
+
+def _build_program(plan: _Plan) -> Callable:
+    """One jitted function for the whole graph.
+
+    carry = (chans, states, mmaps, fires, progress, sweeps, maxocc); one
+    while_loop iteration is one *sweep*: every task instance gets one
+    guarded chance to fire.  The loop runs until every task exhausted its
+    firing budget, or a full sweep made no progress (the compiled analogue
+    of the engines' deadlock detection)."""
+    caps = [c.capacity for c in plan.channels]
+    totals = np.asarray([tp.total for tp in plan.tasks], np.int32)
+    n_chans = len(plan.channels)
+
+    def program(states0: tuple, mmaps0: tuple):
+        chans0 = tuple(
+            (jnp.zeros((c.capacity,) + c.shape, _canon_dtype(c.dtype)),
+             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+            for c in plan.channels)
+        totals_v = jnp.asarray(totals)
+        fires0 = jnp.zeros((len(plan.tasks),), jnp.int32)
+        maxocc0 = jnp.zeros((max(n_chans, 1),), jnp.int32)
+
+        def cond(carry):
+            _, _, _, fires, progress, _, _ = carry
+            return progress & jnp.any(fires < totals_v)
+
+        def body(carry):
+            chans, states, mmaps, fires, _, sweeps, maxocc = carry
+            chans = list(chans)
+            states = list(states)
+            mmaps = list(mmaps)
+            fired_any = jnp.zeros((), jnp.bool_)
+            for ti, tp in enumerate(plan.tasks):
+                f = fires[ti]
+                guards = []
+                for ph in tp.phases:
+                    g = jnp.ones((), jnp.bool_)
+                    for ci, r in ph.reads.items():
+                        g = g & (chans[ci][2] >= r)
+                    for ci, w in ph.writes.items():
+                        g = g & (caps[ci] - chans[ci][2] >= w)
+                    guards.append(g)
+                n_ph = len(tp.phases)
+                if n_ph > 1:
+                    phase = sum(
+                        (f >= jnp.int32(b)).astype(jnp.int32)
+                        for b in tp.bounds[:-1])
+                    guard = guards[0]
+                    for k in range(1, n_ph):
+                        guard = jnp.where(phase == k, guards[k], guard)
+                else:
+                    phase = None
+                    guard = guards[0]
+                fire = (f < jnp.int32(tp.total)) & guard
+
+                branches = [
+                    _fire_branch(plan, tp, ph.fn) for ph in tp.phases]
+
+                def fire_fn(sub, branches=branches, phase=phase):
+                    if len(branches) == 1:
+                        return branches[0](sub)
+                    return jax.lax.switch(phase, branches, sub)
+
+                sub = (states[ti],
+                       tuple(chans[ci] for ci in tp.chan_ids),
+                       tuple(mmaps[mi] for mi in tp.mmap_ids))
+                new_sub = jax.lax.cond(fire, fire_fn, lambda s: s, sub)
+                states[ti] = new_sub[0]
+                for k, ci in enumerate(tp.chan_ids):
+                    chans[ci] = new_sub[1][k]
+                for k, mi in enumerate(tp.mmap_ids):
+                    mmaps[mi] = new_sub[2][k]
+                fires = fires.at[ti].add(fire.astype(jnp.int32))
+                fired_any = fired_any | fire
+                if tp.chan_ids:
+                    # occupancy highwater sampled after every firing (a
+                    # sweep-boundary sample would always see drained FIFOs)
+                    maxocc = maxocc.at[jnp.asarray(tp.chan_ids)].max(
+                        jnp.stack([chans[ci][2] for ci in tp.chan_ids]))
+            return (tuple(chans), tuple(states), tuple(mmaps), fires,
+                    fired_any, sweeps + 1, maxocc)
+
+        carry0 = (chans0, tuple(states0), tuple(mmaps0), fires0,
+                  jnp.ones((), jnp.bool_), jnp.zeros((), jnp.int32),
+                  maxocc0)
+        chans, states, mmaps, fires, _, sweeps, maxocc = \
+            jax.lax.while_loop(cond, body, carry0)
+        sizes = jnp.stack([c[2] for c in chans]) if n_chans else maxocc0
+        return tuple(mmaps), fires, sweeps, maxocc, sizes
+
+    return program
+
+
+def _fire_branch(plan: _Plan, tp: _TaskPlan, fn: Callable) -> Callable:
+    probe = _phase_probe(plan, tp, fn, rec=None)
+
+    def branch(sub):
+        state, chs, mms = sub
+        return probe(state, chs, mms)
+
+    return branch
+
+
+# ---------------------------------------------------------------------------
+# the fourth engine
+# ---------------------------------------------------------------------------
+
+class CompiledEngine(EngineBase):
+    """Whole-graph synthesis engine (the compiled twin of the simulators).
+
+    ``run(top, *args)`` elaborates the graph by executing the *wiring*
+    bodies (parents that instantiate channels and invoke children) and
+    recording every :class:`StepTask` leaf, then lowers the entire graph
+    into one jitted XLA program through the compile cache, executes it,
+    writes mmap results back into the host buffers, and returns a real
+    :class:`SimReport` (fires, token counts, occupancy highwater marks,
+    sweep count as ``switches``).
+
+    A graph outside the synthesizable subset raises
+    :class:`SynthesisError` naming the offending task/channel; a lowered
+    graph that stalls (a genuine dataflow deadlock) returns
+    ``ok=False`` with the blocked tasks listed, mirroring the simulation
+    engines.
+    """
+
+    name = "compiled"
+
+    def __init__(self, track_stats: bool = False, cache: Any = None):
+        super().__init__(track_stats)
+        self.cache = cache          # CompileCache | None=default | False=off
+        self._cur: Optional[TaskInstance] = None
+        # post-run introspection (tests / benchmarks)
+        self.compile_source: Optional[str] = None
+        self.compile_key: Optional[str] = None
+        self.n_sweeps = 0
+
+    # -- runtime protocol: any live stream op means "not step form" ----------
+    def _refuse(self, op: str):
+        name = self._cur.name if self._cur is not None else "<top>"
+        raise SynthesisError(
+            f"task {name!r} performed a runtime stream operation ({op}) "
+            f"during synthesis elaboration: it is not in step-function "
+            f"form.  CompiledEngine only lowers graphs whose leaf tasks "
+            f"are StepTask definitions (availability-routed designs using "
+            f"peek/select stay on the simulation engines); see "
+            f"docs/synthesis.md")
+
+    def wait(self, chan, side):
+        self._refuse("wait")
+
+    def wait_many(self, keys):
+        self._refuse("select")
+
+    def push(self, chan, tok):
+        self._refuse("write")
+
+    def pop(self, chan):
+        self._refuse("read")
+
+    def push_burst(self, chan, toks):
+        self._refuse("write_burst")
+
+    def pop_burst(self, chan, n):
+        self._refuse("read_burst")
+
+    def schedule_async(self, delay, deliver):
+        raise SynthesisError(
+            "async_mmap ports are not synthesizable yet (ROADMAP: "
+            "async_mmap pipelining in synth); use mmap or a simulation "
+            "engine")
+
+    # -- elaboration ---------------------------------------------------------
+    def spawn(self, inst: TaskInstance) -> None:
+        self._register(inst)
+        if getattr(inst.fn, "is_step_task", False):
+            return                  # recorded; lowered later, never executed
+        self._exec(inst)            # wiring body runs inline
+
+    def join(self, insts: list[TaskInstance]) -> None:
+        for i in insts:
+            if i.state == "failed" and i.error is not None:
+                raise i.error
+
+    def _exec(self, inst: TaskInstance) -> Any:
+        prev = self._cur
+        self._cur = inst
+        set_context(self, inst)
+        depth = builder_stack_depth()
+        inst.state = "running"
+        try:
+            a, k = bind_streams(inst)
+            out = inst.fn(*a, **k)
+            join_pending_builders(depth)
+            inst.state = "finished"
+            return out
+        except BaseException as e:
+            inst.state = "failed"
+            inst.error = e
+            raise
+        finally:
+            self._cur = prev
+            set_context(self, prev)
+
+    # -- lowering ------------------------------------------------------------
+    def _lower(self) -> tuple[_Plan, Any]:
+        step_insts = [i for i in self.instances
+                      if getattr(i.fn, "is_step_task", False)]
+        if not step_insts:
+            raise SynthesisError(
+                "graph contains no step-function tasks; CompiledEngine "
+                "lowers StepTask leaves (see docs/synthesis.md)")
+        for it in self.interface_set:
+            if isinstance(it, AsyncMMap):
+                raise SynthesisError(
+                    f"async_mmap {it.name!r} is not synthesizable yet "
+                    f"(ROADMAP: async_mmap pipelining in synth)")
+        plan = _Plan()
+        bound = []
+        for inst in step_insts:
+            a, k = bind_streams(inst)
+            bound.append((inst, a, k))
+        for inst, a, k in bound:
+            if inst.fn.close_outputs:
+                raise SynthesisError(
+                    f"task {inst.name!r} closes its outputs (EoT) after "
+                    f"its last firing; EoT-terminated streams are outside "
+                    f"the synthesizable subset — downstream consumers "
+                    f"must terminate by firing count instead")
+            tp = _TaskPlan(inst=inst, task=inst.fn)
+            tp.t_args = tuple(_build_template(x, plan, tp) for x in a)
+            tp.t_kwargs = {key: _build_template(x, plan, tp)
+                           for key, x in k.items()}
+            tp.state0 = _materialize_state(inst.fn.init)
+            plan.tasks.append(tp)
+        for c in plan.channels:
+            if c.shape is None or not isinstance(c.dtype, np.dtype):
+                raise SynthesisError(
+                    f"channel {c.name!r} has no declared element spec; "
+                    f"synthesis sizes its ring buffer from "
+                    f"Channel(dtype=..., shape=...)")
+        for tp in plan.tasks:
+            for label, fn, count in tp.task.phases():
+                tp.phases.append(
+                    _count_phase(plan, tp, label, fn, count))
+            if not tp.phases:
+                raise SynthesisError(
+                    f"task {tp.inst.name!r} has zero total firings")
+        # schedule-independence: an mmap written by one task and read by
+        # another would make results depend on sweep order — refuse
+        readers: dict[int, set] = {}
+        writers: dict[int, set] = {}
+        for tp in plan.tasks:
+            for ph in tp.phases:
+                for mi in ph.mmap_loads:
+                    readers.setdefault(mi, set()).add(tp.inst.name)
+                for mi in ph.mmap_stores:
+                    writers.setdefault(mi, set()).add(tp.inst.name)
+        for mi, ws in writers.items():
+            m = plan.mmaps[mi]
+            if len(ws) > 1:
+                raise SynthesisError(
+                    f"mmap {m.name!r} has multiple writers {sorted(ws)} "
+                    f"(one-writer rule)")
+            others = readers.get(mi, set()) - ws
+            if others:
+                raise SynthesisError(
+                    f"mmap {m.name!r} is written by {sorted(ws)} and read "
+                    f"by {sorted(others)}: cross-task read-after-write "
+                    f"through memory is schedule-dependent; route the "
+                    f"value through a channel instead")
+        graph = extract_graph(self)
+        try:
+            graph.validate()
+        except GraphValidationError as e:
+            raise SynthesisError(f"graph failed validation: {e}") from e
+        return plan, graph
+
+    def _cache_key(self, graph, args: tuple) -> str:
+        h = hashlib.sha256()
+        h.update(graph.structural_hash().encode())
+        h.update(_stable_repr(aval_signature(args, {})).encode())
+        h.update(f"jax:{jax.__version__}:{jax.default_backend()}:"
+                 f"{SYNTH_SCHEMA}".encode())
+        return h.hexdigest()
+
+    # -- run -----------------------------------------------------------------
+    def run(self, top: Callable, *args, **kwargs) -> SimReport:
+        t0 = time.perf_counter()
+        root = TaskInstance(top, args, kwargs, detach=False, parent=None,
+                            name=getattr(top, "__name__", "top"))
+        set_context(self, None)
+        self._register(root)
+        try:
+            result = self._exec(root)
+            plan, graph = self._lower()
+            states0 = tuple(tp.state0 for tp in plan.tasks)
+            mmaps0 = tuple(jnp.asarray(m.data) for m in plan.mmaps)
+            program = _build_program(plan)
+            key = self._cache_key(graph, (states0, mmaps0))
+            self.compile_key = key
+            if self.cache is False:
+                exe = jax.jit(program).lower(states0, mmaps0).compile()
+                source = "compiled"
+            else:
+                cc = self.cache if self.cache is not None \
+                    else default_cache()
+                exe, source = cc.compile_cached(
+                    program, (states0, mmaps0), key=key)
+            self.compile_source = source
+            mm_final, fires, sweeps, maxocc, sizes = exe(states0, mmaps0)
+            fires = np.asarray(fires)
+            maxocc = np.asarray(maxocc)
+            sizes = np.asarray(sizes)
+            self.n_sweeps = self.switches = int(sweeps)
+            self._writeback(plan, mm_final)
+            self._fill_stats(plan, fires, maxocc)
+            totals = np.asarray([tp.total for tp in plan.tasks], np.int32)
+            stuck = bool(np.any(fires < totals))
+            for tp, f, tot in zip(plan.tasks, fires, totals):
+                tp.inst.state = "finished" if f >= tot else "blocked"
+            err = None
+            if stuck:
+                blocked = [tp.inst.name for tp, f, tot
+                           in zip(plan.tasks, fires, totals) if f < tot]
+                occ = {c.name: int(s)
+                       for c, s in zip(plan.channels, sizes)}
+                err = (f"synthesized graph stalled after {self.switches} "
+                       f"sweeps; blocked tasks: {blocked}; channel "
+                       f"occupancy at stall: {occ}")
+            return self._report(not stuck, time.perf_counter() - t0, err,
+                                result)
+        finally:
+            clear_context()
+
+    def _writeback(self, plan: _Plan, mm_final: tuple) -> None:
+        """Copy device results back into the host mmap buffers, so the
+        same ``check()`` that verifies a simulation run verifies the
+        compiled run."""
+        written = set()
+        for tp in plan.tasks:
+            for ph in tp.phases:
+                written.update(ph.mmap_stores)
+        for mi in sorted(written):
+            m = plan.mmaps[mi]
+            out = np.asarray(mm_final[mi])
+            if isinstance(m.data, np.ndarray):
+                np.copyto(m.data, out)
+            else:
+                m.data = out
+
+    def _fill_stats(self, plan: _Plan, fires: np.ndarray,
+                    maxocc: np.ndarray) -> None:
+        """Reconstruct per-channel token counts and occupancy highwater
+        marks from the firing counters — the compiled analogue of the
+        simulators' per-push statistics."""
+        for tp, f in zip(plan.tasks, fires):
+            start = 0
+            for ph in tp.phases:
+                k = int(np.clip(int(f) - start, 0, ph.count))
+                start += ph.count
+                for ci, r in ph.reads.items():
+                    plan.channels[ci].total_read += r * k
+                for ci, w in ph.writes.items():
+                    plan.channels[ci].total_written += w * k
+                if self.track_stats:
+                    for mi, n in ph.mmap_loads.items():
+                        plan.mmaps[mi].loads += ph.mmap_load_ops[mi] * k
+                        plan.mmaps[mi].load_elems += n * k
+                    for mi, n in ph.mmap_stores.items():
+                        plan.mmaps[mi].stores += ph.mmap_store_ops[mi] * k
+                        plan.mmaps[mi].store_elems += n * k
+        for c, occ in zip(plan.channels, maxocc):
+            c.max_occupancy = int(occ)
+
+
+ENGINES["compiled"] = CompiledEngine

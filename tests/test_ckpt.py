@@ -1,0 +1,186 @@
+"""Direct unit tests for repro.ckpt.manager.
+
+Until now the checkpoint manager was only exercised indirectly through
+tests/test_distributed.py's elastic-restart scenario; these pin its core
+contracts in isolation: the atomic tmp->rename publish, corrupt/
+incomplete-step recovery in restore_latest, keep-last-k GC, and the
+async save(blocking=False) + wait() ordering.
+"""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")   # device_get only — no XLA compiles: tier-1
+
+from repro.ckpt import CheckpointManager  # noqa: E402
+from repro.ckpt.manager import load_pytree, save_pytree  # noqa: E402
+
+
+def _params(v=1.0):
+    return {"w": np.full((3, 2), v, np.float32),
+            "b": {"inner": np.arange(4, dtype=np.int32)}}
+
+
+def _opt(v=0.0):
+    return {"mu": np.full((3, 2), v, np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# atomic publish
+# ---------------------------------------------------------------------------
+
+def test_save_publishes_atomically_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    path = mgr.save(3, _params(), _opt(), extra={"lr": 0.1})
+    assert path.name == "step_00000003"
+    assert path.is_dir()
+    assert (path / "DONE").exists()
+    # no .tmp staging directory survives a successful publish
+    assert not list(tmp_path.glob("*.tmp"))
+    man = json.loads((path / "DONE").read_text())
+    assert man["step"] == 3 and man["extra"] == {"lr": 0.1}
+    # every manifest-listed leaf file exists
+    for section in ("params", "opt_state"):
+        for entry in man[section].values():
+            assert (path / section / entry["file"]).exists()
+
+
+def test_restore_round_trips_values_and_extra(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(7, _params(2.5), _opt(0.5), extra={"tokens": 123})
+    p, o, extra = mgr.restore(7, _params(), _opt())
+    assert np.array_equal(np.asarray(p["w"]), np.full((3, 2), 2.5))
+    assert np.array_equal(np.asarray(p["b"]["inner"]), np.arange(4))
+    assert np.array_equal(np.asarray(o["mu"]), np.full((3, 2), 0.5))
+    assert extra == {"tokens": 123}
+
+
+def test_pytree_save_load_preserves_dtypes(tmp_path):
+    tree = {"f16": np.ones(3, np.float16),
+            "i8": np.arange(3, dtype=np.int8)}
+    save_pytree(tree, tmp_path / "t")
+    out = load_pytree(tree, tmp_path / "t")
+    assert np.asarray(out["f16"]).dtype == np.float16
+    assert np.asarray(out["i8"]).dtype == np.int8
+
+
+# ---------------------------------------------------------------------------
+# restore_latest skips incomplete / corrupt steps
+# ---------------------------------------------------------------------------
+
+def test_restore_latest_skips_incomplete_step(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _params(1.0), _opt())
+    # a crashed save: directory exists but no DONE marker
+    crashed = tmp_path / "step_00000002"
+    (crashed / "params").mkdir(parents=True)
+    assert mgr.steps() == [1]
+    step, p, _, _ = mgr.restore_latest(_params(), _opt())
+    assert step == 1
+    assert np.asarray(p["w"])[0, 0] == 1.0
+
+
+def test_restore_latest_skips_tmp_directory(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _params(1.0), _opt())
+    # a save killed mid-write: .tmp staging dir never renamed
+    tmp = tmp_path / "step_00000005.tmp"
+    (tmp / "params").mkdir(parents=True)
+    (tmp / "DONE").write_text("{}")
+    assert mgr.latest_step() == 1
+
+
+def test_restore_latest_none_when_empty(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.restore_latest(_params(), _opt()) is None
+
+
+def test_gc_keeps_last_k(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _params(float(s)), _opt())
+    assert mgr.steps() == [3, 4]
+    assert not (tmp_path / "step_00000001").exists()
+
+
+# ---------------------------------------------------------------------------
+# async save
+# ---------------------------------------------------------------------------
+
+def test_async_save_then_wait_is_restorable(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    params = _params(4.0)
+    mgr.save(9, params, _opt(), blocking=False)
+    mgr.wait()
+    assert mgr.steps() == [9]
+    _, p, _, _ = mgr.restore_latest(_params(), _opt())
+    assert np.asarray(p["w"])[0, 0] == 4.0
+
+
+def test_async_save_snapshots_before_return(tmp_path):
+    """The device->host snapshot happens synchronously: mutating the live
+    arrays after save(..., blocking=False) returns must not corrupt the
+    checkpoint (the donate/overwrite pattern of a training loop)."""
+    mgr = CheckpointManager(tmp_path)
+    params = _params(1.0)
+    mgr.save(1, params, _opt(), blocking=False)
+    params["w"][:] = -999.0           # overwritten right after return
+    mgr.wait()
+    _, p, _, _ = mgr.restore_latest(_params(), _opt())
+    assert np.asarray(p["w"])[0, 0] == 1.0
+
+
+def test_async_save_snapshots_jax_arrays_too(tmp_path):
+    """On the CPU backend device_get of a jax Array is a zero-copy view
+    of the device buffer, so the snapshot must copy it as well — or a
+    donated/overwritten buffer corrupts the in-flight async write."""
+    import jax.numpy as jnp
+    mgr = CheckpointManager(tmp_path)
+    params = {"w": jnp.full((8,), 3.0, jnp.float32)}
+    mgr.save(1, params, {}, blocking=False)
+    # simulate donation: the device buffer gets reused immediately
+    params["w"] = params["w"].at[:].set(-1.0)
+    mgr.wait()
+    _, p, _, _ = mgr.restore_latest({"w": np.zeros(8, np.float32)}, {})
+    assert np.asarray(p["w"])[0] == 3.0
+
+
+def test_second_save_waits_for_inflight_write(tmp_path):
+    """save() joins the previous async writer before snapshotting, so
+    checkpoints publish in order even under back-to-back async saves."""
+    mgr = CheckpointManager(tmp_path)
+    release = threading.Event()
+    orig = save_pytree
+
+    def slow_save(tree, directory):
+        if directory.name == "params" and "00000001" in str(directory):
+            release.wait(timeout=10)
+        return orig(tree, directory)
+
+    import repro.ckpt.manager as M
+    M.save_pytree = slow_save
+    try:
+        mgr.save(1, _params(1.0), _opt(), blocking=False)
+        t = threading.Thread(
+            target=lambda: mgr.save(2, _params(2.0), _opt()))
+        t.start()
+        time.sleep(0.05)
+        assert mgr.steps() == []          # save(2) parked behind save(1)
+        release.set()
+        t.join(timeout=10)
+        assert mgr.steps() == [1, 2]
+    finally:
+        M.save_pytree = orig
+
+
+def test_resave_same_step_overwrites(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, _params(1.0), _opt())
+    mgr.save(5, _params(2.0), _opt())
+    _, p, _, _ = mgr.restore_latest(_params(), _opt())
+    assert np.asarray(p["w"])[0, 0] == 2.0
+    assert mgr.steps() == [5]

@@ -1,0 +1,585 @@
+"""Whole-graph synthesis (repro.core.synth): the step-function task form,
+its simulation twin, the CompiledEngine lowering, refusal diagnostics,
+and the sim-vs-synth parity contract.
+
+Fast tests (tier-1) cover the twin, the refusal paths (which never reach
+XLA), channel element-spec enforcement, and the graph structural hash.
+Anything that actually compiles a whole-graph program is marked slow and
+runs in the CI synth-parity job.
+"""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro
+from repro import StepTask, SynthesisError, channel, mmap
+from repro.core.errors import ChannelMisuse
+
+jnp = pytest.importorskip("jax.numpy")
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def relay_pipeline(n_tokens=64, stages=2, burst=8, capacity=16,
+                   sink_extra=0, chan_kw=None):
+    """Step-form Source -> stages x Relay -> Sink writing into an mmap."""
+    fires = n_tokens // burst
+
+    def source_step(k, out):
+        out.write_burst(k * burst + jnp.arange(burst, dtype=jnp.int32))
+        return k + 1
+
+    def relay_step(state, inp, out):
+        out.write_burst(inp.read_burst(burst))
+        return state
+
+    def sink_step(k, inp, res):
+        res.write_burst(k * burst, inp.read_burst(burst))
+        return k + 1
+
+    Source = StepTask(source_step, steps=fires, init=jnp.int32(0),
+                      name="Source")
+    Relay = StepTask(relay_step, steps=fires, name="Relay")
+    Sink = StepTask(sink_step, steps=fires + sink_extra, init=jnp.int32(0),
+                    name="Sink")
+
+    buf = np.zeros(n_tokens + sink_extra * burst, np.int32)
+    res = mmap(buf, "res")
+    kw = chan_kw if chan_kw is not None else dict(dtype=np.int32, shape=())
+
+    def Top(res):
+        chans = [channel(capacity, f"c{i}", **kw) for i in range(stages + 1)]
+        t = repro.task().invoke(Source, chans[0])
+        for s in range(stages):
+            t = t.invoke(Relay, chans[s], chans[s + 1], name=f"Relay{s}")
+        t.invoke(Sink, chans[stages], res)
+
+    return Top, (res,), buf
+
+
+# ---------------------------------------------------------------------------
+# the simulation twin (fast)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["sequential", "thread", "coroutine"])
+def test_twin_runs_on_every_simulation_engine(engine):
+    top, args, buf = relay_pipeline(n_tokens=32, burst=8, capacity=32)
+    rep = repro.ENGINES[engine]().run(top, *args)
+    assert rep.ok, rep.error
+    assert np.array_equal(buf, np.arange(32))
+
+
+def test_twin_phases_run_in_order():
+    log = []
+
+    def w(state, out):
+        log.append("warmup")
+        out.write(jnp.int32(0))
+        return state
+
+    def s(state, out):
+        log.append("step")
+        out.write(jnp.int32(1))
+        return state
+
+    def f(state, out):
+        log.append("flush")
+        out.write(jnp.int32(2))
+        return state
+
+    def sink(k, inp, res):
+        res[k] = inp.read()
+        return k + 1
+
+    T = StepTask(s, steps=2, warmup=w, flush=f, name="T")
+    S = StepTask(sink, steps=4, init=jnp.int32(0), name="S")
+    assert T.total_fires == 4
+    buf = np.zeros(4, np.int32)
+    res = mmap(buf, "r")
+
+    def Top(res):
+        c = channel(4, "c", dtype=np.int32, shape=())
+        repro.task().invoke(T, c).invoke(S, c, res)
+
+    rep = repro.ENGINES["coroutine"]().run(Top, res)
+    assert rep.ok
+    assert log == ["warmup", "step", "step", "flush"]
+    assert list(buf) == [0, 1, 1, 2]
+
+
+def test_twin_read_burst_refuses_eot():
+    def closer(out):
+        out.write_burst([1, 2])
+        out.close()
+
+    def sink_step(state, inp):
+        inp.read_burst(4)
+        return state
+
+    S = StepTask(sink_step, steps=1, name="S")
+
+    def Top():
+        c = channel(8, "c")
+        repro.task().invoke(closer, c).invoke(S, c)
+
+    rep = repro.ENGINES["coroutine"]().run(Top)
+    assert not rep.ok
+    assert "terminate by firing counts" in rep.error
+
+
+def test_step_task_signature_binds_named_ports():
+    def body(state, inp, out, gain: float):
+        out.write(inp.read() * gain)
+        return state
+
+    t = StepTask(body, steps=3, name="Scale")
+    params = list(t.__signature__.parameters)
+    assert params == ["inp", "out", "gain"]
+    assert t.__name__ == "Scale"
+
+
+# ---------------------------------------------------------------------------
+# refusal diagnostics (fast: none of these reach XLA compilation)
+# ---------------------------------------------------------------------------
+
+def test_refuses_non_step_leaf_naming_the_task():
+    from repro.apps import network
+    with pytest.raises(SynthesisError) as e:
+        network.run_step("compiled")
+    msg = str(e.value)
+    assert "SW0_0" in msg and "step-function form" in msg
+
+
+def test_network_step_graph_still_simulates():
+    from repro.apps import network
+    r = network.run_step("coroutine")
+    assert r.ok and r.correct
+
+
+def test_refuses_unspecced_channel():
+    top, args, _ = relay_pipeline(chan_kw={})
+    with pytest.raises(SynthesisError, match="element spec"):
+        repro.ENGINES["compiled"]().run(top, *args)
+
+
+def test_refuses_async_mmap():
+    from repro.core import async_mmap
+
+    def s(state, port):
+        return state
+
+    S = StepTask(s, steps=1, name="S")
+    port = async_mmap(np.zeros(4, np.float32))
+
+    def Top(port):
+        repro.task().invoke(S, port)
+
+    with pytest.raises(SynthesisError, match="async_mmap"):
+        repro.ENGINES["compiled"]().run(Top, port)
+
+
+def test_refuses_data_dependent_burst_size():
+    def bad(k, inp, out):
+        n = inp.read()
+        out.write_burst(inp.read_burst(n))     # traced size
+        return k
+
+    B = StepTask(bad, steps=1, init=jnp.int32(0), name="Bad")
+
+    def Top():
+        a = channel(8, "a", dtype=np.int32, shape=())
+        b = channel(8, "b", dtype=np.int32, shape=())
+        src = StepTask(lambda k, o: (o.write_burst(jnp.arange(4,
+                       dtype=jnp.int32)), k + 1)[1], steps=1,
+                       init=jnp.int32(0), name="Src")
+        repro.task().invoke(src, a).invoke(B, a, b)
+
+    with pytest.raises(SynthesisError, match="data-dependent"):
+        repro.ENGINES["compiled"]().run(Top)
+
+
+def test_refuses_wrong_token_shape():
+    def bad(state, out):
+        out.write(jnp.zeros((3, 3), jnp.float32))
+        return state
+
+    B = StepTask(bad, steps=1, name="Bad")
+
+    def sink(state, inp):
+        inp.read()
+        return state
+
+    S = StepTask(sink, steps=1, name="S")
+
+    def Top():
+        c = channel(2, "c", dtype=np.float32, shape=(2, 2))
+        repro.task().invoke(B, c).invoke(S, c)
+
+    with pytest.raises(SynthesisError, match=r"shape \(3, 3\)"):
+        repro.ENGINES["compiled"]().run(Top)
+
+
+def test_refuses_reads_beyond_capacity():
+    top, args, _ = relay_pipeline(burst=8, capacity=4)
+    with pytest.raises(SynthesisError, match="could never fire"):
+        repro.ENGINES["compiled"]().run(top, *args)
+
+
+def test_refuses_close_outputs():
+    def s(k, out):
+        out.write(jnp.int32(0))
+        return k
+
+    T = StepTask(s, steps=1, init=jnp.int32(0), close_outputs=True,
+                 name="T")
+
+    def sink(k, inp):
+        inp.read()
+        return k
+
+    S = StepTask(sink, steps=1, init=jnp.int32(0), name="S")
+
+    def Top():
+        c = channel(2, "c", dtype=np.int32, shape=())
+        repro.task().invoke(T, c).invoke(S, c)
+
+    with pytest.raises(SynthesisError, match="EoT"):
+        repro.ENGINES["compiled"]().run(Top)
+
+
+def test_refuses_cross_task_mmap_read_after_write():
+    m = mmap(np.zeros(4, np.float32), "shared")
+
+    def writer(state, m):
+        m[0] = jnp.float32(1.0)
+        return state
+
+    def reader(state, m, out):
+        out.write(m[0])
+        return state
+
+    W = StepTask(writer, steps=1, name="W")
+    R = StepTask(reader, steps=1, name="R")
+
+    def sink(state, inp):
+        inp.read()
+        return state
+
+    S = StepTask(sink, steps=1, name="S")
+
+    def Top(m):
+        c = channel(2, "c", dtype=np.float32, shape=())
+        repro.task().invoke(W, m).invoke(R, m, c).invoke(S, c)
+
+    with pytest.raises(SynthesisError, match="schedule-dependent"):
+        repro.ENGINES["compiled"]().run(Top, m)
+
+
+def test_refuses_unstable_state_spec():
+    def grow(state, out):
+        out.write(jnp.int32(0))
+        return jnp.zeros(int(state.shape[0]) + 1, jnp.int32)
+
+    G = StepTask(grow, steps=2, init=jnp.zeros(1, jnp.int32), name="G")
+
+    def sink(state, inp):
+        inp.read()
+        return state
+
+    S = StepTask(sink, steps=2, name="S")
+
+    def Top():
+        c = channel(2, "c", dtype=np.int32, shape=())
+        repro.task().invoke(G, c).invoke(S, c)
+
+    with pytest.raises(SynthesisError, match="state"):
+        repro.ENGINES["compiled"]().run(Top)
+
+
+# ---------------------------------------------------------------------------
+# channel element-spec enforcement in the simulators (fast)
+# ---------------------------------------------------------------------------
+
+def test_channel_spec_enforced_under_track_stats():
+    def bad(out):
+        out.write(np.zeros((3,), np.float64))
+
+    def consumer(inp):
+        inp.read()
+
+    def Top():
+        c = channel(2, "typed", dtype=np.float32, shape=(3,))
+        repro.task().invoke(bad, c, name="BadProducer") \
+            .invoke(consumer, c)
+
+    rep = repro.ENGINES["coroutine"](track_stats=True).run(Top)
+    assert not rep.ok
+    assert "typed" in rep.error and "BadProducer" in rep.error \
+        and "float64" in rep.error
+
+
+def test_channel_spec_shape_mismatch_burst():
+    def bad(out):
+        out.write_burst([np.zeros(2, np.float32)])
+
+    def Top():
+        c = channel(2, "typed", dtype=np.float32, shape=(3,))
+        repro.task().invoke(bad, c, name="BadBurst") \
+            .invoke(lambda i: i.read(), c)
+
+    rep = repro.ENGINES["coroutine"](track_stats=True).run(Top)
+    assert not rep.ok and "shape" in rep.error
+
+
+def test_channel_spec_allows_matching_and_python_scalars():
+    def good(out):
+        out.write(np.float32(1.5))
+        out.write(2.5)                       # kind-checked Python scalar
+        out.close()
+
+    def consume(inp):
+        assert list(inp) == [np.float32(1.5), 2.5]
+
+    def Top():
+        c = channel(4, "typed", dtype=np.float32, shape=())
+        repro.task().invoke(good, c).invoke(consume, c)
+
+    rep = repro.ENGINES["coroutine"](track_stats=True).run(Top)
+    assert rep.ok, rep.error
+
+
+def test_channel_spec_ignored_without_track_stats():
+    def sloppy(out):
+        out.write("not a float")
+        out.close()
+
+    def consume(inp):
+        list(inp)
+
+    def Top():
+        c = channel(4, "typed", dtype=np.float32, shape=())
+        repro.task().invoke(sloppy, c).invoke(consume, c)
+
+    rep = repro.ENGINES["coroutine"]().run(Top)   # default: no checks
+    assert rep.ok
+
+
+def test_channel_capacity_must_be_static_int():
+    with pytest.raises(ValueError):
+        channel(0)
+    with pytest.raises(ValueError):
+        channel(2.5)
+
+
+# ---------------------------------------------------------------------------
+# channel table + graph structural hash (fast)
+# ---------------------------------------------------------------------------
+
+def _tiny_graph(cap=4, val=0.0):
+    a = mmap(np.full(4, val, np.float32), "a")
+
+    def src(k, a, out):
+        out.write(a[k])
+        return k + 1
+
+    def snk(state, inp):
+        inp.read()
+        return state
+
+    S = StepTask(src, steps=4, init=jnp.int32(0), name="Src")
+    K = StepTask(snk, steps=4, name="Snk")
+
+    def Top(a):
+        c = channel(cap, "c", dtype=np.float32, shape=())
+        repro.task().invoke(S, a, c).invoke(K, c)
+
+    return Top, (a,)
+
+
+def test_channel_info_table():
+    top, args, _ = relay_pipeline(n_tokens=16, stages=1, burst=8,
+                                  capacity=16)
+    g = repro.elaborate(top, *args, engine="coroutine")
+    info = {ci.name: ci for ci in g.channel_info}
+    assert info["c0"].capacity == 16
+    assert info["c0"].shape == ()
+    assert str(info["c0"].dtype) == "int32"
+    assert info["c0"].producer and info["c0"].consumer
+
+
+def test_structural_hash_stable_and_sensitive():
+    g1 = repro.elaborate(*_tiny_graph(), engine="coroutine")
+    g2 = repro.elaborate(*_tiny_graph(), engine="coroutine")
+    # same structure, fresh objects -> same hash
+    assert g1.structural_hash() == g2.structural_hash()
+    # mmap *values* are excluded (aval-keyed, like the compile cache)
+    g3 = repro.elaborate(*_tiny_graph(val=7.0), engine="coroutine")
+    assert g1.structural_hash() == g3.structural_hash()
+    # capacity is part of the channel type
+    g4 = repro.elaborate(*_tiny_graph(cap=8), engine="coroutine")
+    assert g1.structural_hash() != g4.structural_hash()
+
+
+# ---------------------------------------------------------------------------
+# lowered execution (slow: compiles whole-graph XLA programs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_compiled_relay_pipeline_end_to_end():
+    top, args, buf = relay_pipeline(n_tokens=64, burst=8, capacity=16)
+    eng = repro.ENGINES["compiled"](cache=False)
+    rep = eng.run(top, *args)
+    assert rep.ok, rep.error
+    assert np.array_equal(buf, np.arange(64))
+    assert rep.engine == "compiled"
+    assert rep.switches == eng.n_sweeps > 0
+    assert rep.tokens > 0
+    assert all(st == "finished" for _, st in rep.instances)
+    occ = {name: mo for name, _, mo in rep.channels}
+    assert max(occ.values()) > 0
+
+
+@pytest.mark.slow
+def test_compiled_deadlock_reports_blocked_task():
+    top, args, _ = relay_pipeline(sink_extra=1)
+    rep = repro.ENGINES["compiled"](cache=False).run(top, *args)
+    assert not rep.ok
+    assert "Sink" in rep.error and "stalled" in rep.error
+    states = dict(rep.instances)
+    assert any(v == "blocked" for v in states.values())
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("app,out_arg", [
+    ("gemm", None),              # mmap-fed systolic array, array tokens
+    ("gaussian", 1),             # burst-heavy stencil chain
+    ("page_rank", 1),            # mmap-fed feedback loop
+])
+def test_app_parity_bit_identical(app, out_arg):
+    from repro import apps
+    mod = getattr(apps, app)
+    t1, a1, c1 = mod.build_step()
+    rep1 = repro.ENGINES["coroutine"]().run(t1, *a1)
+    assert rep1.ok and c1()[0]
+    t2, a2, c2 = mod.build_step()
+    eng = repro.ENGINES["compiled"]()
+    rep2 = eng.run(t2, *a2)
+    assert rep2.ok and c2()[0]
+    if out_arg is None:          # gemm: per-row C views
+        pairs = list(zip(a1[2], a2[2]))
+    else:
+        pairs = [(a1[out_arg], a2[out_arg])]
+    for m1, m2 in pairs:
+        assert np.array_equal(m1.data, m2.data), \
+            f"{app}: compiled output != coroutine twin output"
+
+
+@pytest.mark.slow
+def test_page_rank_step_feedback_fails_sequential_runs_compiled():
+    from repro.apps import page_rank
+    t, a, _ = page_rank.build_step(n_iters=3)
+    rep = repro.ENGINES["sequential"]().run(t, *a)
+    assert not rep.ok                       # feedback loop (paper Fig. 7)
+    t2, a2, c2 = page_rank.build_step(n_iters=3)
+    rep2 = repro.ENGINES["compiled"]().run(t2, *a2)
+    assert rep2.ok and c2()[0]
+
+
+@pytest.mark.slow
+def test_whole_graph_cache_key_is_value_independent(tmp_path):
+    from repro.core.compile_cache import CompileCache
+    cc = CompileCache(root=tmp_path)
+    keys = []
+    for seed in (0, 1):
+        from repro.apps import gaussian
+        t, a, _ = gaussian.build_step(h=6, w=6, iters=1, seed=seed)
+        eng = repro.ENGINES["compiled"](cache=cc)
+        assert eng.run(t, *a).ok
+        keys.append(eng.compile_key)
+    assert keys[0] == keys[1]
+    assert cc.stats.misses == 1             # second run: pure hit
+
+
+@pytest.mark.slow
+def test_track_stats_fills_mmap_and_channel_counters():
+    from repro.apps import gaussian
+    t, a, _ = gaussian.build_step(h=6, w=6, iters=1)
+    eng = repro.ENGINES["compiled"](track_stats=True)
+    rep = eng.run(t, *a)
+    assert rep.ok
+    ifaces = {name: stats for name, _, stats in rep.interfaces}
+    assert ifaces["img"]["loads"] > 0
+    assert ifaces["result"]["store_elems"] == 36
+    assert rep.tokens > 0
+
+
+@pytest.mark.slow
+def test_track_stats_mmap_counters_match_twin():
+    """The compiled engine's reconstructed interface stats must agree
+    with the twin's per-transfer counters (op counts AND element counts —
+    a collector doing P stores in one firing reports P, not 1)."""
+    from repro.apps import gemm
+    t1, a1, _ = gemm.build_step(P=2, n=4, K=2)
+    rep1 = repro.ENGINES["coroutine"](track_stats=True).run(t1, *a1)
+    assert rep1.ok
+    t2, a2, _ = gemm.build_step(P=2, n=4, K=2)
+    rep2 = repro.ENGINES["compiled"](track_stats=True).run(t2, *a2)
+    assert rep2.ok
+    twin = {name: stats for name, _, stats in rep1.interfaces}
+    comp = {name: stats for name, _, stats in rep2.interfaces}
+    assert twin.keys() == comp.keys()
+    for name in twin:
+        assert twin[name] == comp[name], (name, twin[name], comp[name])
+
+
+@pytest.mark.slow
+def test_x64_channel_dtype_canonicalizes_not_refuses():
+    """A float64 channel declaration is canonicalized to the device dtype
+    (f32 when 64-bit mode is off) instead of blaming the task for writing
+    the tokens jax actually produces."""
+    top, args, buf = relay_pipeline(
+        n_tokens=16, stages=1, burst=8, capacity=16,
+        chan_kw=dict(dtype=np.int64, shape=()))
+    rep = repro.ENGINES["compiled"](cache=False).run(top, *args)
+    assert rep.ok, rep.error
+    assert np.array_equal(buf, np.arange(16))
+
+
+@pytest.mark.slow
+def test_second_process_performs_zero_xla_compiles(tmp_path):
+    """The PR-2 contract extended to whole-graph lowerings: a fresh
+    process re-running the same graph loads the serialized executable
+    from the content-addressed store."""
+    prog = textwrap.dedent(f"""
+        import sys
+        sys.path.insert(0, {SRC!r})
+        import repro
+        from repro.core.compile_cache import CompileCache
+        from repro.apps import gaussian
+        cc = CompileCache(root={str(tmp_path)!r})
+        t, a, c = gaussian.build_step(h=6, w=6, iters=2)
+        eng = repro.ENGINES["compiled"](cache=cc)
+        rep = eng.run(t, *a)
+        assert rep.ok and c()[0]
+        print("SOURCE", eng.compile_source, "KEY", eng.compile_key)
+    """)
+    outs = []
+    for _ in range(2):
+        r = subprocess.run([sys.executable, "-c", prog],
+                           capture_output=True, text=True, timeout=300)
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs.append(r.stdout)
+    assert "SOURCE compiled" in outs[0]
+    assert "SOURCE disk" in outs[1]          # zero XLA compiles
+    key0 = outs[0].split("KEY ")[1].strip()
+    key1 = outs[1].split("KEY ")[1].strip()
+    assert key0 == key1
