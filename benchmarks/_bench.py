@@ -11,10 +11,36 @@ back through :func:`read_bench`.
 from __future__ import annotations
 
 import json
+import os
+import platform
 from pathlib import Path
 from typing import Any, Optional
 
 ROOT = Path(__file__).parent.parent
+
+
+def machine_info() -> dict:
+    """Host fingerprint recorded in every BENCH_*.json.
+
+    Absolute wall times in these records are only comparable within one
+    machine; regression gates therefore compare *relative ratios* (e.g.
+    burst-vs-scalar speedup, overhead percentages) measured in the same
+    run, never absolute times across records.  The fingerprint makes it
+    obvious when two records came from different hosts.
+    """
+    info = {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+    }
+    try:
+        import jax
+        info["jax"] = jax.__version__
+        info["jax_backend"] = jax.default_backend()
+    except Exception:  # noqa: BLE001 - benches that never import jax
+        pass
+    return info
 
 
 def bench_path(name: str) -> Path:
@@ -23,8 +49,9 @@ def bench_path(name: str) -> Path:
 
 def write_bench(name: str, payload: dict) -> Path:
     """Persist one benchmark's record to the repo root (shared schema:
-    ``benchmark`` / ``config`` / ``rows`` / gates)."""
+    ``benchmark`` / ``config`` / ``rows`` / ``machine`` / gates)."""
     payload.setdefault("benchmark", name)
+    payload.setdefault("machine", machine_info())
     p = bench_path(name)
     p.write_text(json.dumps(payload, indent=1) + "\n")
     return p

@@ -144,6 +144,7 @@ def main(argv=None) -> int:
     # propagate every regression gate through the umbrella runner; the
     # BENCH_*.json files share one schema (benchmark/config/rows/gates)
     return 1 if (sim_res.get("throughput_regression")
+                 or sim_res.get("fault_overhead_regression")
                  or codegen_res.get("codegen_regression")
                  or synth_res["gate"]["synth_regression"]
                  or serve_res["gate"]["serve_regression"]) else 0

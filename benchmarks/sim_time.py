@@ -225,6 +225,32 @@ def throughput(n_tokens: int = 20000, stages: int = 8, capacity: int = 64,
     return out
 
 
+def fault_overhead(n_tokens: int = 20000, stages: int = 8,
+                   capacity: int = 64, repeats: int = 5) -> dict:
+    """Cost of chaos-readiness when no fault plan targets channels.
+
+    An armed-but-empty :class:`repro.FaultPlan` must leave the coroutine
+    scalar fast path intact (``affects_channels`` is False, so the engine
+    keeps ``_chan_faults = None`` and ``fast_path`` on) — the acceptance
+    bar is < 5% overhead versus a run with no injector at all.  The two
+    variants are interleaved within each repeat so host drift cancels.
+    """
+    from repro import FaultPlan
+    best: dict = {"baseline": None, "noop_plan": None}
+    for _ in range(repeats):
+        for label, plan in (("baseline", None), ("noop_plan", FaultPlan())):
+            top, total = _build_pipeline(n_tokens, stages, capacity, 0)
+            rep = repro.ENGINES["coroutine"](faults=plan).run(top)
+            assert rep.ok, (label, rep.error)
+            assert total[0] == n_tokens, (label, total[0])
+            if best[label] is None or rep.wall_s < best[label]:
+                best[label] = rep.wall_s
+    pct = (best["noop_plan"] / best["baseline"] - 1.0) * 100
+    return {"baseline_wall_s": round(best["baseline"], 6),
+            "noop_plan_wall_s": round(best["noop_plan"], 6),
+            "overhead_pct": round(pct, 2)}
+
+
 def write_bench_json(thr: dict, apps: Optional[dict] = None) -> None:
     """Persist the perf trajectory record (consumed by benchmarks/run.py
     and CI regression checks) — the app-simulation section rides along in
@@ -283,8 +309,13 @@ def main(argv=None) -> dict:
     print()
     if args.quick:
         thr = throughput(n_tokens=4000, stages=8, repeats=1)
+        fo = fault_overhead(n_tokens=4000, stages=8, repeats=3)
     else:
         thr = throughput()
+        fo = fault_overhead()
+    thr["fault_overhead"] = fo
+    print(f"no-op fault-plan overhead on coroutine scalar_fast: "
+          f"{fo['overhead_pct']}% (acceptance bar: < 5%)")
     print_throughput(thr)
     write_bench_json(thr, apps=out or None)
     print(f"wrote {BENCH_JSON}")
@@ -298,9 +329,17 @@ def main(argv=None) -> dict:
         print(f"THROUGHPUT REGRESSION: coroutine burst speedup {speedup}x "
               f"< required {bar}x")
         out["throughput_regression"] = True
+    # chaos gate: an empty fault plan must be structurally free on the hot
+    # path (quick mode doubles the bar — tiny runs amplify timer noise)
+    fo_bar = 10.0 if args.quick else 5.0
+    if fo["overhead_pct"] > fo_bar:
+        print(f"FAULT-OVERHEAD REGRESSION: no-op plan costs "
+              f"{fo['overhead_pct']}% > allowed {fo_bar}%")
+        out["fault_overhead_regression"] = True
     return out
 
 
 if __name__ == "__main__":
     res = main()
-    raise SystemExit(1 if res.get("throughput_regression") else 0)
+    raise SystemExit(1 if (res.get("throughput_regression")
+                           or res.get("fault_overhead_regression")) else 0)

@@ -30,7 +30,9 @@ from .core import (EOT, Channel, IStream, OStream, channel, select, run,
                    task, invoke,
                    MMap, AsyncMMap, Scalar, mmap, async_mmap, scalar,
                    elaborate, Graph, InterfaceInfo, SimReport, ENGINES,
-                   Deadlock,
+                   Deadlock, DeadlockError, DeadlockReport,
+                   FaultInjector, FaultPlan, InjectedFault, PoisonError,
+                   TransientFault,
                    SequentialSimulationError, EndOfTransaction,
                    ChannelMisuse, StageInstance, compile_stages,
                    DataflowProgram,
@@ -43,7 +45,9 @@ __all__ = [
     "task", "invoke",
     "MMap", "AsyncMMap", "Scalar", "mmap", "async_mmap", "scalar",
     "elaborate", "Graph", "InterfaceInfo", "SimReport", "ENGINES",
-    "Deadlock",
+    "Deadlock", "DeadlockError", "DeadlockReport",
+    "FaultInjector", "FaultPlan", "InjectedFault", "PoisonError",
+    "TransientFault",
     "SequentialSimulationError", "EndOfTransaction", "ChannelMisuse",
     "StageInstance", "compile_stages", "DataflowProgram",
     "ChannelInfo", "CompiledEngine", "StepTask", "SynthesisError",

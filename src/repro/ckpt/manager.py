@@ -19,6 +19,8 @@ Survival requirements at pod scale:
 
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
 import re
@@ -36,6 +38,12 @@ Params = Any
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
+def _npy_bytes(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr)
+    return buf.getvalue()
+
+
 def _flatten_with_names(tree: Params) -> list[tuple[str, Any]]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
@@ -47,15 +55,29 @@ def _flatten_with_names(tree: Params) -> list[tuple[str, Any]]:
 
 
 def save_pytree(tree: Params, directory: Path) -> dict:
-    """Write one pytree; returns the manifest."""
+    """Write one pytree; returns the manifest.
+
+    Each leaf's manifest entry records the sha256 of its ``.npy`` file
+    bytes, and every file is read back and compared after writing
+    (verify-after-write): a torn or silently failed write is caught here,
+    while the data is still in memory, rather than at restore time.
+    """
     directory.mkdir(parents=True, exist_ok=True)
     manifest = {}
     for name, leaf in _flatten_with_names(tree):
         arr = np.asarray(jax.device_get(leaf))
         fn = name.replace("/", "__") + ".npy"
-        np.save(directory / fn, arr)
+        data = _npy_bytes(arr)
+        digest = hashlib.sha256(data).hexdigest()
+        path = directory / fn
+        for attempt in (0, 1):
+            path.write_bytes(data)
+            if hashlib.sha256(path.read_bytes()).hexdigest() == digest:
+                break
+            if attempt:
+                raise OSError(f"verify-after-write failed for {path}")
         manifest[name] = {"file": fn, "shape": list(arr.shape),
-                          "dtype": str(arr.dtype)}
+                          "dtype": str(arr.dtype), "sha256": digest}
     return manifest
 
 
@@ -89,10 +111,16 @@ def load_pytree(like: Params, directory: Path,
 class CheckpointManager:
     """Keep-last-k atomic checkpoints of {params, opt_state, extra-state}."""
 
-    def __init__(self, directory: str | Path, keep: int = 3):
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 faults: Any = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        # chaos harness (repro.core.faults): injected transient write
+        # failures and post-publish truncation; None in normal operation
+        if faults is not None and not hasattr(faults, "io_error"):
+            faults = faults.injector()
+        self.faults = faults
         self._thread: Optional[threading.Thread] = None
 
     # -- write ---------------------------------------------------------------
@@ -121,19 +149,35 @@ class CheckpointManager:
         def write():
             tmp = self.dir / f"step_{step:08d}.tmp"
             final = self.dir / f"step_{step:08d}"
-            if tmp.exists():
-                shutil.rmtree(tmp)
-            man = {
-                "step": step,
-                "time": time.time(),
-                "params": save_pytree(host_p, tmp / "params"),
-                "opt_state": save_pytree(host_o, tmp / "opt_state"),
-                "extra": extra,
-            }
-            (tmp / "DONE").write_text(json.dumps(man))
+            # one retry on a transient IO failure: the snapshot is still in
+            # host memory, so a failed attempt only costs a rewrite of the
+            # staging dir (a second failure propagates — that's persistent)
+            for attempt in (0, 1):
+                try:
+                    if self.faults is not None and \
+                            self.faults.io_error("ckpt"):
+                        raise OSError(
+                            "injected transient checkpoint IO failure")
+                    if tmp.exists():
+                        shutil.rmtree(tmp)
+                    man = {
+                        "step": step,
+                        "time": time.time(),
+                        "params": save_pytree(host_p, tmp / "params"),
+                        "opt_state": save_pytree(host_o, tmp / "opt_state"),
+                        "extra": extra,
+                    }
+                    (tmp / "DONE").write_text(json.dumps(man))
+                    break
+                except OSError:
+                    shutil.rmtree(tmp, ignore_errors=True)
+                    if attempt:
+                        raise
             if final.exists():
                 shutil.rmtree(final)
             os.rename(tmp, final)            # atomic publish
+            if self.faults is not None:
+                self._maybe_truncate(final, step)
             self._gc()
 
         if blocking:
@@ -152,6 +196,17 @@ class CheckpointManager:
         steps = sorted(self.steps())
         for s in steps[:-self.keep]:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    def _maybe_truncate(self, final: Path, step: int) -> None:
+        """Chaos-only: truncate one data file of a *published* checkpoint
+        (simulating corruption after the atomic rename — the case atomicity
+        cannot defend against), proving ``restore_latest`` skips it."""
+        if not self.faults.truncate_step(step):
+            return
+        npys = sorted(final.rglob("*.npy"))
+        if npys:
+            data = npys[0].read_bytes()
+            npys[0].write_bytes(data[:max(1, len(data) // 2)])
 
     # -- read ----------------------------------------------------------------
     def steps(self) -> list[int]:
@@ -177,9 +232,42 @@ class CheckpointManager:
         o = load_pytree(opt_like, d / "opt_state", opt_shardings)
         return p, o, man.get("extra", {})
 
+    def verify(self, step: int) -> list:
+        """Integrity-check one published step against its manifest digests.
+
+        Returns a list of ``(file, problem)`` tuples — empty means sound.
+        Legacy checkpoints whose manifests predate the sha256 field verify
+        existence only.
+        """
+        d = self.dir / f"step_{step:08d}"
+        try:
+            man = json.loads((d / "DONE").read_text())
+        except Exception as e:  # noqa: BLE001 - any unreadable manifest
+            return [("DONE", repr(e))]
+        bad = []
+        for part in ("params", "opt_state"):
+            for name, ent in man.get(part, {}).items():
+                p = d / part / ent["file"]
+                if not p.exists():
+                    bad.append((f"{part}/{ent['file']}", "missing"))
+                    continue
+                want = ent.get("sha256")
+                if want is not None and \
+                        hashlib.sha256(p.read_bytes()).hexdigest() != want:
+                    bad.append((f"{part}/{ent['file']}", "digest mismatch"))
+        return bad
+
     def restore_latest(self, params_like: Params, opt_like: Params,
                        **kw) -> Optional[tuple]:
-        step = self.latest_step()
-        if step is None:
-            return None
-        return (step, *self.restore(step, params_like, opt_like, **kw))
+        """Restore the newest step that passes integrity verification.
+
+        A published-then-corrupted step (truncated file, digest mismatch,
+        unreadable manifest) is skipped and the scan falls back to the
+        previous good step — the crash-mid-save guarantee, extended to
+        post-publish corruption.
+        """
+        for step in reversed(self.steps()):
+            if self.verify(step):
+                continue
+            return (step, *self.restore(step, params_like, opt_like, **kw))
+        return None

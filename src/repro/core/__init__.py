@@ -14,9 +14,11 @@ from .compile_cache import (CacheStats, CompileCache, aval_signature,
                             structural_digest)
 from .engines import (ENGINES, CoroutineEngine, EngineBase, SequentialEngine,
                       SimReport, ThreadEngine, run)
-from .errors import (ChannelMisuse, Deadlock, EndOfTransaction,
-                     GraphValidationError, ReproError,
-                     SequentialSimulationError, SynthesisError, TaskKilled)
+from .errors import (ChannelMisuse, Deadlock, DeadlockError, DeadlockReport,
+                     EndOfTransaction, GraphValidationError, InjectedFault,
+                     PoisonError, ReproError, SequentialSimulationError,
+                     SynthesisError, TaskKilled, TransientFault)
+from .faults import FaultInjector, FaultPlan
 from .graph import (ChannelInfo, DefinitionInfo, Graph, InterfaceInfo,
                     elaborate, extract_graph)
 from .hier_compile import (CompileReport, DataflowProgram, StageInstance,
@@ -31,7 +33,9 @@ __all__ = [
     "EOT", "Channel", "IStream", "OStream", "channel", "select", "READABLE",
     "WRITABLE", "ENGINES", "CoroutineEngine", "EngineBase",
     "SequentialEngine", "SimReport", "ThreadEngine", "run", "ChannelMisuse",
-    "Deadlock", "EndOfTransaction", "GraphValidationError", "ReproError",
+    "Deadlock", "DeadlockError", "DeadlockReport", "EndOfTransaction",
+    "FaultInjector", "FaultPlan", "GraphValidationError", "InjectedFault",
+    "PoisonError", "ReproError", "TransientFault",
     "SequentialSimulationError", "TaskKilled", "DefinitionInfo", "Graph",
     "InterfaceInfo", "elaborate", "extract_graph", "CompileReport",
     "DataflowProgram", "StageInstance", "build_dataflow", "compile_stages",

@@ -32,6 +32,14 @@ instead of preemptive" insight.  Engines advertise this via
 progress *and has no parked waiters on the opposite side* mutates the deque
 directly and never enters the engine at all.  Only a genuine stall (or a
 required wakeup) pays for runtime dispatch.
+
+Chaos-harness contract: channel-level fault injection (repro.core.faults)
+hooks the *engine-side* push/pop paths, never the channel itself, so this
+file stays fault-free by construction.  Engines disable ``fast_path`` only
+when an armed :class:`~repro.core.faults.FaultInjector` actually targets
+channels or tasks (``affects_channels``); an empty/no-op plan keeps
+``fast_path`` on, which is what makes the "zero overhead when no plan"
+guarantee structural rather than measured.
 """
 
 from __future__ import annotations

@@ -353,6 +353,28 @@ def _default_root() -> Path:
                      "repro-compile-cache")))
 
 
+# Framed executable entries: magic + sha256(blob) + blob.  The digest makes
+# any bit-level corruption (not just unpicklable truncation) detectable at
+# read time, feeding the existing delete+recompile path.  Legacy unframed
+# entries (pre-digest trees) still load.
+_MAGIC = b"RCC1"
+_DIGEST_LEN = 32
+
+
+def _frame(blob: bytes) -> bytes:
+    return _MAGIC + hashlib.sha256(blob).digest() + blob
+
+
+def _unframe(data: bytes) -> bytes:
+    if not data.startswith(_MAGIC):
+        return data                     # legacy unframed entry
+    digest = data[len(_MAGIC):len(_MAGIC) + _DIGEST_LEN]
+    blob = data[len(_MAGIC) + _DIGEST_LEN:]
+    if hashlib.sha256(blob).digest() != digest:
+        raise ValueError("cache entry digest mismatch")
+    return blob
+
+
 class CompileCache:
     """Two-level (memory, disk) content-addressed executable store.
 
@@ -369,10 +391,16 @@ class CompileCache:
     """
 
     def __init__(self, root: Optional[os.PathLike] = None,
-                 max_bytes: int = 512 << 20, disk: bool = True):
+                 max_bytes: int = 512 << 20, disk: bool = True,
+                 faults: Any = None):
         self.root = Path(root) if root is not None else _default_root()
         self.max_bytes = max_bytes
         self.disk = disk
+        # chaos harness (repro.core.faults): injected transient write
+        # failures and post-write corruption; None in normal operation
+        if faults is not None and not hasattr(faults, "io_error"):
+            faults = faults.injector()
+        self.faults = faults
         self.stats = CacheStats()
         self._mem: dict[str, Any] = {}
         self._lock = threading.RLock()
@@ -422,8 +450,7 @@ class CompileCache:
             if p.exists():
                 try:
                     from jax.experimental import serialize_executable as se
-                    with open(p, "rb") as f:
-                        entry = pickle.load(f)
+                    entry = pickle.loads(_unframe(p.read_bytes()))
                     if entry.get("schema") != SCHEMA:
                         raise ValueError("schema mismatch")
                     payload, in_tree, out_tree = entry["payload"]
@@ -464,7 +491,10 @@ class CompileCache:
             with self._lock:
                 self.stats.serialize_failures += 1
             return
-        self._write_atomic(self._path(key), buf.getvalue())
+        path = self._path(key)
+        if self._write_atomic(path, _frame(buf.getvalue()), verify=True) and \
+                self.faults is not None and self.faults.corrupt_cache():
+            self._corrupt_entry(path)   # chaos: prove delete+recompile works
         self._maybe_evict()
 
     def compile_cached(self, fn: Callable, args: tuple = (),
@@ -530,17 +560,46 @@ class CompileCache:
 
     # -- maintenance ---------------------------------------------------------
 
-    def _write_atomic(self, path: Path, data: bytes) -> None:
+    def _write_atomic(self, path: Path, data: bytes,
+                      verify: bool = False) -> bool:
+        """Write-rename a disk entry; one retry on a transient ``OSError``.
+
+        With ``verify=True`` the published entry is read back and compared
+        to what was written (verify-after-write), so a torn or silently
+        failed write is caught while the original data is still in hand.
+        Returns False when both attempts failed (read-only FS etc.): the
+        store degrades to memory-only, never errors.
+        """
+        for attempt in (0, 1):
+            try:
+                if self.faults is not None and self.faults.io_error("cache"):
+                    raise OSError("injected transient cache IO failure")
+                path.parent.mkdir(parents=True, exist_ok=True)
+                tmp = path.with_suffix(path.suffix + f".tmp{os.getpid()}")
+                tmp.write_bytes(data)
+                os.replace(tmp, path)   # readers never see partial entries
+                if verify and path.read_bytes() != data:
+                    raise OSError(f"verify-after-write mismatch for {path}")
+                with self._lock:
+                    if self._approx_bytes is not None:
+                        self._approx_bytes += len(data)
+                return True
+            except OSError:
+                if attempt:
+                    return False        # read-only FS: memory level only
+        return False
+
+    def _corrupt_entry(self, path: Path) -> None:
+        """Chaos-only: flip one byte mid-entry (inside the framed blob for
+        any realistically-sized executable), making the published entry
+        fail its digest check on the next read."""
         try:
-            path.parent.mkdir(parents=True, exist_ok=True)
-            tmp = path.with_suffix(path.suffix + f".tmp{os.getpid()}")
-            tmp.write_bytes(data)
-            os.replace(tmp, path)       # readers never see partial entries
-            with self._lock:
-                if self._approx_bytes is not None:
-                    self._approx_bytes += len(data)
+            data = bytearray(path.read_bytes())
+            if data:
+                data[len(data) // 2] ^= 0xFF
+                path.write_bytes(bytes(data))
         except OSError:
-            pass                        # read-only FS: memory level only
+            pass
 
     def _maybe_evict(self) -> None:
         """Full-tree eviction only when the running estimate says the

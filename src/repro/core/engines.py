@@ -58,7 +58,9 @@ from typing import Any, Callable, Optional
 
 from .channel import Channel, READABLE, WRITABLE
 from .context import clear_context, current_task, set_context
-from .errors import Deadlock, SequentialSimulationError, TaskKilled
+from .errors import (Deadlock, DeadlockError, DeadlockReport, InjectedFault,
+                     SequentialSimulationError, TaskKilled)
+from .faults import FaultInjector, FaultPlan
 from .interface import AsyncMMap, MMap
 from .task import (TaskInstance, bind_streams, builder_stack_depth,
                    join_pending_builders)
@@ -92,6 +94,10 @@ class SimReport:
     # load/store counters only under track_stats
     interfaces: list = field(default_factory=list)
     result: Any = None      # return value of the top-level task body
+    # structured no-progress diagnostic (DeadlockReport), populated whenever
+    # the run failed with a deadlock / stall / watchdog trip; the legacy
+    # ``error`` string is preserved unchanged for existing consumers
+    deadlock: Any = None
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         s = "ok" if self.ok else f"FAILED({self.error})"
@@ -122,7 +128,10 @@ def _find_channels(obj: Any, acc: set,
 class EngineBase:
     name = "base"
 
-    def __init__(self, track_stats: bool = False):
+    def __init__(self, track_stats: bool = False,
+                 faults: Optional[Any] = None,
+                 watchdog_s: Optional[float] = None,
+                 max_ticks: Optional[int] = None):
         self.instances: list[TaskInstance] = []
         self.channel_set: set[Channel] = set()
         self.interface_set: set = set()          # MMap/AsyncMMap objects
@@ -132,6 +141,22 @@ class EngineBase:
         self.async_violations = 0
         self.track_stats = track_stats
         self.fast_path = False
+        # chaos harness (repro.core.faults): accept a plan or an injector.
+        # ``_chan_faults`` is non-None only when the plan actually targets
+        # channel ops / task bodies, so the hot paths stay one `is None`
+        # test (and subclasses keep fast_path) with a no-op injector.
+        if isinstance(faults, FaultPlan):
+            faults = faults.injector()
+        self.faults: Optional[FaultInjector] = faults
+        self._chan_faults = faults if (faults is not None and
+                                       faults.affects_channels) else None
+        # unified watchdog: wall-clock budget and/or logical-clock budget;
+        # a trip raises DeadlockError with the same DeadlockReport payload
+        # a genuine deadlock produces
+        self.watchdog_s = watchdog_s
+        self.max_ticks = max_ticks
+        self._t0: Optional[float] = None
+        self._deadlock_report: Optional[DeadlockReport] = None
         # async-response machinery (paper Table 2's async_mmap): a heap of
         # (due_tick, seq, deliver_fn) events over a logical clock that
         # advances with scheduling activity and fast-forwards when every
@@ -259,6 +284,32 @@ class EngineBase:
         return delivered
 
     # -- shared helpers ------------------------------------------------------
+    def _blocked_sites(self) -> list:
+        return [(i.name, i.wait_site or "?") for i in self.instances
+                if i.state == "blocked" and not i.detach]
+
+    def _make_deadlock(self, reason: str,
+                       blocked: Optional[list] = None) -> DeadlockReport:
+        """Build (and remember) the structured no-progress report; the
+        engine's failure path attaches it to ``SimReport.deadlock``."""
+        occ = {c.name: c.size()
+               for c in sorted(self.channel_set, key=lambda c: c.uid)}
+        rep = DeadlockReport(
+            engine=self.name, reason=reason,
+            blocked=blocked if blocked is not None else self._blocked_sites(),
+            occupancy=occ, clock=self.clock, switches=self.switches,
+            wall_s=(time.perf_counter() - self._t0) if self._t0 else 0.0)
+        self._deadlock_report = rep
+        return rep
+
+    def _watchdog_reason(self) -> Optional[str]:
+        if self.max_ticks is not None and self.clock > self.max_ticks:
+            return "tick-budget"
+        if self.watchdog_s is not None and self._t0 is not None and \
+                time.perf_counter() - self._t0 > self.watchdog_s:
+            return "watchdog"
+        return None
+
     def _stat_push(self, chan: Channel, k: int) -> None:
         """Burst-granular write statistics (one update per batch)."""
         chan.total_written += k
@@ -308,6 +359,7 @@ class EngineBase:
                       for c in chans],
             interfaces=[(i.name, i.iface_kind, i.stats()) for i in ifaces],
             result=result,
+            deadlock=self._deadlock_report,
         )
 
     def run(self, top: Callable, *args, **kwargs) -> SimReport:
@@ -323,11 +375,12 @@ class SequentialEngine(EngineBase):
 
     name = "sequential"
 
-    def __init__(self, track_stats: bool = False):
-        super().__init__(track_stats)
+    def __init__(self, track_stats: bool = False, **kw):
+        super().__init__(track_stats, **kw)
         # single thread, exclusive by construction: direct deque ops are
-        # safe whenever stats don't need to observe every token
-        self.fast_path = not track_stats
+        # safe whenever stats don't need to observe every token; channel
+        # faults need every op observed too
+        self.fast_path = not track_stats and self._chan_faults is None
         self.force_async = True
         self._cur: Optional[TaskInstance] = None
 
@@ -351,6 +404,14 @@ class SequentialEngine(EngineBase):
 
     # blocking ops ----------------------------------------------------------
     def wait(self, chan: Channel, side: str) -> None:
+        self.clock += 1
+        if self.watchdog_s is not None or self.max_ticks is not None:
+            reason = self._watchdog_reason()
+            if reason is not None:
+                site = ("write " if side == WRITABLE else "read ") + chan.name
+                name = self._cur.name if self._cur else "?"
+                raise DeadlockError(
+                    self._make_deadlock(reason, blocked=[(name, site)]))
         if side is WRITABLE or side == WRITABLE:
             # Sequential simulation cannot honor capacity: grow the channel
             # and record the violation (paper: "cannot correctly simulate
@@ -364,9 +425,12 @@ class SequentialEngine(EngineBase):
         inst = self._cur
         if inst is not None and inst.detach:
             raise TaskKilled()
+        name = inst.name if inst else "?"
+        self._make_deadlock("sequential-read",
+                            blocked=[(name, f"read {chan.name}")])
         raise SequentialSimulationError(
             f"sequential simulation cannot make progress: "
-            f"{inst.name if inst else '?'} blocked reading "
+            f"{name} blocked reading "
             f"{chan.name!r} (feedback loop or invocation-order dependence)")
 
     def wait_many(self, keys: list) -> None:
@@ -379,7 +443,20 @@ class SequentialEngine(EngineBase):
                 return self.wait(chan, side)
         return self.wait(keys[0][0], keys[0][1])
 
+    def _fault_op(self, chan: Channel, op: str) -> None:
+        """Consult the chaos harness for one task-side op.  A stall is a
+        pure logical-clock advance here (nothing to overlap with); wake
+        delays are meaningless (no waiters ever park), but the consult
+        keeps the per-site counters — and hence the injected *decisions* —
+        identical to the concurrent engines."""
+        stall, _ = self._chan_faults.chan_op(
+            chan.name, op, self._cur.name if self._cur else "?")
+        if stall:
+            self.clock += stall
+
     def push(self, chan: Channel, tok: Any) -> None:
+        if self._chan_faults is not None:
+            self._fault_op(chan, "push")
         if self.track_stats:
             self._check_spec(chan, (tok,))
         chan._push(tok)
@@ -387,11 +464,15 @@ class SequentialEngine(EngineBase):
             self._stat_push(chan, 1)
 
     def pop(self, chan: Channel) -> Any:
+        if self._chan_faults is not None:
+            self._fault_op(chan, "pop")
         if self.track_stats:
             chan.total_read += 1
         return chan._pop()
 
     def push_burst(self, chan: Channel, toks: list) -> None:
+        if self._chan_faults is not None:
+            self._fault_op(chan, "push_burst")
         if self.track_stats:
             self._check_spec(chan, toks)
         chan._q.extend(toks)
@@ -399,6 +480,8 @@ class SequentialEngine(EngineBase):
             self._stat_push(chan, len(toks))
 
     def pop_burst(self, chan: Channel, n: int) -> list:
+        if self._chan_faults is not None:
+            self._fault_op(chan, "pop_burst")
         q = chan._q
         if self.track_stats:
             chan.total_read += n
@@ -445,14 +528,19 @@ class SequentialEngine(EngineBase):
 
     def run(self, top: Callable, *args, **kwargs) -> SimReport:
         t0 = time.perf_counter()
+        self._t0 = t0
         root = TaskInstance(top, args, kwargs, detach=False, parent=None,
                             name=getattr(top, "__name__", "top"))
         self._register(root)
         try:
             result = self._exec(root)
             return self._report(True, time.perf_counter() - t0, None, result)
-        except SequentialSimulationError as e:
+        except (SequentialSimulationError, DeadlockError) as e:
             return self._report(False, time.perf_counter() - t0, str(e))
+        except InjectedFault as e:
+            # parity with the concurrent engines' task-failure reporting
+            return self._report(False, time.perf_counter() - t0,
+                                f"task error: {e!r}")
         finally:
             clear_context()
 
@@ -471,8 +559,8 @@ class ThreadEngine(EngineBase):
 
     name = "thread"
 
-    def __init__(self, track_stats: bool = False):
-        super().__init__(track_stats)
+    def __init__(self, track_stats: bool = False, **kw):
+        super().__init__(track_stats, **kw)
         # re-entrant: async_mmap request acceptance (iface_pump) nests
         # schedule_async/_iface_pop under the same lock
         self._lock = threading.RLock()
@@ -554,14 +642,53 @@ class ThreadEngine(EngineBase):
         with self._lock:
             super().schedule_async(delay, deliver)
 
-    # lock already held on these paths (pump or _deliver_due); push/pop
-    # re-acquire the RLock re-entrantly, keeping wake-up semantics in
-    # exactly one place
+    # lock already held on these paths (pump or _deliver_due); the RLock is
+    # re-acquired re-entrantly.  These are memory-side ops, deliberately
+    # not routed through push/pop: the chaos harness only perturbs
+    # *task-side* channel ops (memory misbehaviour is mem_delay's job), and
+    # a fault stall inside a lock-holding pump would block the whole run.
     def _iface_deliver(self, chan: Channel, tok: Any) -> None:
-        self.push(chan, tok)
+        with self._lock:
+            chan._push(tok)
+            if self.track_stats:
+                self._stat_push(chan, 1)
+            self._cond(chan, READABLE).notify()
+            if self._multi_waiters:
+                self._any_cond.notify_all()
 
     def _iface_pop(self, chan: Channel) -> Any:
-        return self.pop(chan)
+        with self._lock:
+            tok = chan._pop()
+            if self.track_stats:
+                chan.total_read += 1
+            self._cond(chan, WRITABLE).notify()
+            if self._multi_waiters:
+                self._any_cond.notify_all()
+            return tok
+
+    # -- chaos-harness plumbing ---------------------------------------------
+    def _fault_consult(self, chan: Channel, op: str):
+        """Called outside the lock.  A stall becomes a real sleep (the
+        preemptive analogue of yielding the processor) plus a logical-clock
+        advance; the returned wake delay is applied by the caller."""
+        inst = getattr(_thread_inst, "inst", None)
+        stall, wake = self._chan_faults.chan_op(
+            chan.name, op, inst.name if inst is not None else "?")
+        if stall:
+            time.sleep(stall * 1e-4)
+            with self._lock:
+                self.clock += stall
+        return wake
+
+    def _delayed_wake(self, chan: Channel, side: str):
+        """Deliver fn for a fault-delayed wake-up: the token is already in
+        the queue, only the notify travels through the event heap."""
+        def deliver(eng, c=chan, s=side):
+            eng._cond(c, s).notify()
+            if eng._multi_waiters:
+                eng._any_cond.notify_all()
+            return True
+        return deliver
 
     def wait(self, chan: Channel, side: str) -> None:
         cond = self._cond(chan, side)
@@ -569,12 +696,18 @@ class ThreadEngine(EngineBase):
         with self._lock:
             self._check_abort()
             self.clock += 1
+            if self.max_ticks is not None and not self._deadlocked and \
+                    self._watchdog_reason() is not None:
+                self._trigger_watchdog(self._watchdog_reason())
+                self._check_abort()
             if self._events:
                 self._deliver_due()
             if self._satisfied(chan, side):
                 return                      # lost-wakeup guard
             inst = _thread_inst.inst
             inst.state = "blocked"
+            inst.wait_site = \
+                ("write " if side == WRITABLE else "read ") + chan.name
             self._blocked += 1
             self._chan_waiters[key] = chan
             try:
@@ -601,6 +734,7 @@ class ThreadEngine(EngineBase):
                 return
             inst = _thread_inst.inst
             inst.state = "blocked"
+            inst.wait_site = "select"
             self._blocked += 1
             self._multi_waiters[inst.uid] = keys
             try:
@@ -618,11 +752,23 @@ class ThreadEngine(EngineBase):
 
     def _check_abort(self) -> None:
         if self._deadlocked:
+            if self._deadlock_report is not None:
+                raise DeadlockError(self._deadlock_report)
             raise Deadlock("all tasks blocked; no progress possible")
         if self._stopping:
             raise TaskKilled()
 
     def _trigger_deadlock(self) -> None:
+        if not self._deadlocked and self._failure is None and \
+                self._deadlock_report is None:
+            self._make_deadlock("deadlock")
+        self._deadlocked = True
+        self._notify_everything()
+
+    def _trigger_watchdog(self, reason: str) -> None:
+        """Lock held.  Same abort machinery as a deadlock, but the trip
+        can fire while tasks are runnable (livelock / hang)."""
+        self._make_deadlock(reason)
         self._deadlocked = True
         self._notify_everything()
 
@@ -637,40 +783,57 @@ class ThreadEngine(EngineBase):
         self._finish_cond.notify_all()
 
     def push(self, chan: Channel, tok: Any) -> None:
+        wake = self._fault_consult(chan, "push") \
+            if self._chan_faults is not None else 0
         with self._lock:
             if self.track_stats:
                 self._check_spec(chan, (tok,))
             chan._push(tok)
             if self.track_stats:
                 self._stat_push(chan, 1)
-            self._cond(chan, READABLE).notify()
-            if self._multi_waiters:
-                self._any_cond.notify_all()
+            if wake:
+                self.schedule_async(wake, self._delayed_wake(chan, READABLE))
+            else:
+                self._cond(chan, READABLE).notify()
+                if self._multi_waiters:
+                    self._any_cond.notify_all()
 
     def pop(self, chan: Channel) -> Any:
+        wake = self._fault_consult(chan, "pop") \
+            if self._chan_faults is not None else 0
         with self._lock:
             tok = chan._pop()
             if self.track_stats:
                 chan.total_read += 1
-            self._cond(chan, WRITABLE).notify()
-            if self._multi_waiters:
-                self._any_cond.notify_all()
+            if wake:
+                self.schedule_async(wake, self._delayed_wake(chan, WRITABLE))
+            else:
+                self._cond(chan, WRITABLE).notify()
+                if self._multi_waiters:
+                    self._any_cond.notify_all()
             return tok
 
     def push_burst(self, chan: Channel, toks: list) -> None:
         """Batch enqueue: one lock round-trip and one reader notify per
         burst instead of per token."""
+        wake = self._fault_consult(chan, "push_burst") \
+            if self._chan_faults is not None else 0
         with self._lock:
             if self.track_stats:
                 self._check_spec(chan, toks)
             chan._q.extend(toks)
             if self.track_stats:
                 self._stat_push(chan, len(toks))
-            self._cond(chan, READABLE).notify()
-            if self._multi_waiters:
-                self._any_cond.notify_all()
+            if wake:
+                self.schedule_async(wake, self._delayed_wake(chan, READABLE))
+            else:
+                self._cond(chan, READABLE).notify()
+                if self._multi_waiters:
+                    self._any_cond.notify_all()
 
     def pop_burst(self, chan: Channel, n: int) -> list:
+        wake = self._fault_consult(chan, "pop_burst") \
+            if self._chan_faults is not None else 0
         with self._lock:
             q = chan._q
             if n == len(q):
@@ -680,9 +843,12 @@ class ThreadEngine(EngineBase):
                 out = [q.popleft() for _ in range(n)]
             if self.track_stats:
                 chan.total_read += n
-            self._cond(chan, WRITABLE).notify()
-            if self._multi_waiters:
-                self._any_cond.notify_all()
+            if wake:
+                self.schedule_async(wake, self._delayed_wake(chan, WRITABLE))
+            else:
+                self._cond(chan, WRITABLE).notify()
+                if self._multi_waiters:
+                    self._any_cond.notify_all()
             return out
 
     def data_run(self, chan: Channel, limit: int) -> int:
@@ -703,6 +869,7 @@ class ThreadEngine(EngineBase):
             while any(i.state not in ("finished", "failed") for i in insts):
                 self._check_abort()
                 inst.state = "blocked"
+                inst.wait_site = "join"
                 self._blocked += 1
                 self._join_waiters[inst.uid] = insts
                 try:
@@ -763,24 +930,42 @@ class ThreadEngine(EngineBase):
 
     def run(self, top: Callable, *args, **kwargs) -> SimReport:
         t0 = time.perf_counter()
+        self._t0 = t0
         self._root_result = None
         root = TaskInstance(top, args, kwargs, detach=False, parent=None,
                             name=getattr(top, "__name__", "top"))
         self.spawn(root)
-        # wait for every non-detached task, then reap detached ones
+        # wait for every non-detached task, then reap detached ones; the
+        # run loop doubles as the wall-clock watchdog and — under channel
+        # faults — as the pump that guarantees delayed wake-ups deliver
+        # even when no task re-enters wait() (a satisfied-but-unnotified
+        # waiter would otherwise strand: _no_progress_possible sees it as
+        # satisfiable, so _maybe_end never fast-forwards for it)
+        active = self.watchdog_s is not None or self._chan_faults is not None
         while True:
             with self._lock:
                 if self._deadlocked or \
                         not self._any_nondetached_unfinished():
                     break
-                self._finish_cond.wait(timeout=0.5)
+                if self._chan_faults is not None:
+                    while self._events:
+                        if not self._fast_forward():
+                            break
+                if self.watchdog_s is not None and not self._deadlocked:
+                    reason = self._watchdog_reason()
+                    if reason is not None:
+                        self._trigger_watchdog(reason)
+                        break
+                self._finish_cond.wait(timeout=0.1 if active else 0.5)
         for uid, th in list(self._threads.items()):
             th.join(timeout=5.0)
         wall = time.perf_counter() - t0
         if self._failure is not None:
             return self._report(False, wall, f"task error: {self._failure!r}")
         if self._deadlocked:
-            return self._report(False, wall, "deadlock")
+            rep = self._deadlock_report
+            return self._report(False, wall,
+                                rep.format() if rep is not None else "deadlock")
         return self._report(True, wall, None, self._root_result)
 
 
@@ -908,9 +1093,10 @@ class CoroutineEngine(EngineBase):
 
     name = "coroutine"
 
-    def __init__(self, track_stats: bool = False):
-        super().__init__(track_stats)
-        self.fast_path = not track_stats
+    def __init__(self, track_stats: bool = False, **kw):
+        super().__init__(track_stats, **kw)
+        # channel faults need every op observed, same as stats
+        self.fast_path = not track_stats and self._chan_faults is None
         self._ready: deque[_Fiber] = deque()
         self._parked: set[Channel] = set()   # channels holding waiter entries
         self._fibers: dict[int, _Fiber] = {}
@@ -968,7 +1154,11 @@ class CoroutineEngine(EngineBase):
     # -- runtime protocol ----------------------------------------------------
     def wait(self, chan: Channel, side: str) -> None:
         fiber: _Fiber = _fiber_tls.fiber
+        site = ("write " if side == WRITABLE else "read ") + chan.name
+        if self.watchdog_s is not None or self.max_ticks is not None:
+            self._watchdog_check(fiber, site)
         fiber.inst.state = "blocked"
+        fiber.inst.wait_site = site
         wq = chan._rwait if side == READABLE else chan._wwait
         wq.append((fiber, fiber.wake_epoch))
         self._parked.add(chan)
@@ -980,7 +1170,10 @@ class CoroutineEngine(EngineBase):
         event on any of them wakes the fiber and the epoch stamp marks the
         other registrations stale."""
         fiber: _Fiber = _fiber_tls.fiber
+        if self.watchdog_s is not None or self.max_ticks is not None:
+            self._watchdog_check(fiber, "select")
         fiber.inst.state = "blocked"
+        fiber.inst.wait_site = "select"
         e = fiber.wake_epoch
         for chan, side in keys:
             wq = chan._rwait if side == READABLE else chan._wwait
@@ -989,35 +1182,109 @@ class CoroutineEngine(EngineBase):
         fiber._yield()
         fiber.inst.state = "running"
 
+    def _watchdog_check(self, fiber: "_Fiber", site: str) -> None:
+        """Raise DeadlockError inside the blocking fiber on a tripped
+        budget — it surfaces as ``_failure`` and aborts the run with the
+        structured report attached.  The tripping fiber is included in the
+        blocked list (it is the task *about to* block)."""
+        if self.max_ticks is not None:
+            # the zero-overhead scheduling path never ticks the clock, so a
+            # tick budget counts blocking waits instead (chaos runs only —
+            # watchdog-less runs keep the clock untouched)
+            self.clock += 1
+        reason = self._watchdog_reason()
+        if reason is None:
+            return
+        blocked = self._blocked_sites()
+        blocked.append((fiber.inst.name, site))
+        raise DeadlockError(self._make_deadlock(reason, blocked=blocked))
+
+    # -- chaos-harness plumbing ---------------------------------------------
+    def _fault_consult(self, chan: Channel, op: str):
+        """Consult the injector *before* the op mutates anything, so an
+        InjectedFault leaves the channel untouched."""
+        fiber = getattr(_fiber_tls, "fiber", None)
+        return self._chan_faults.chan_op(
+            chan.name, op, fiber.inst.name if fiber is not None else "?")
+
+    def _fault_stall(self, ticks: int) -> None:
+        """Post-op stall: yield the baton ``ticks`` times (each round trips
+        through the ready queue, letting other fibers run — the
+        collaborative analogue of losing the processor)."""
+        fiber = getattr(_fiber_tls, "fiber", None)
+        if fiber is None:
+            return
+        for _ in range(ticks):
+            self._schedule(fiber)
+            fiber._yield()
+
+    def _fault_wake(self, chan: Channel, side: str):
+        """Deliver fn for a fault-delayed wake-up: the token is already in
+        the queue, only the wake travels through the event heap (delivery
+        is guaranteed — _next_ready fast-forwards pending events before
+        ever declaring a deadlock)."""
+        def deliver(eng, c=chan, s=side):
+            wq = c._rwait if s == READABLE else c._wwait
+            eng._wake(wq)
+            return True
+        return deliver
+
     def push(self, chan: Channel, tok: Any) -> None:
+        stall = wake = 0
+        if self._chan_faults is not None:
+            stall, wake = self._fault_consult(chan, "push")
         if self.track_stats:
             self._check_spec(chan, (tok,))
         chan._push(tok)              # no lock: exclusivity by construction
         if self.track_stats:
             self._stat_push(chan, 1)
         if chan._rwait:
-            self._wake(chan._rwait)
+            if wake:
+                self.schedule_async(wake, self._fault_wake(chan, READABLE))
+            else:
+                self._wake(chan._rwait)
+        if stall:
+            self._fault_stall(stall)
 
     def pop(self, chan: Channel) -> Any:
+        stall = wake = 0
+        if self._chan_faults is not None:
+            stall, wake = self._fault_consult(chan, "pop")
         tok = chan._pop()
         if self.track_stats:
             chan.total_read += 1
         if chan._wwait:
-            self._wake(chan._wwait)
+            if wake:
+                self.schedule_async(wake, self._fault_wake(chan, WRITABLE))
+            else:
+                self._wake(chan._wwait)
+        if stall:
+            self._fault_stall(stall)
         return tok
 
     def push_burst(self, chan: Channel, toks: list) -> None:
         """Batch enqueue: one deque.extend and at most one reader wake per
         burst — the per-token runtime cost is amortized away."""
+        stall = wake = 0
+        if self._chan_faults is not None:
+            stall, wake = self._fault_consult(chan, "push_burst")
         if self.track_stats:
             self._check_spec(chan, toks)
         chan._q.extend(toks)
         if self.track_stats:
             self._stat_push(chan, len(toks))
         if chan._rwait:
-            self._wake(chan._rwait)
+            if wake:
+                self.schedule_async(wake, self._fault_wake(chan, READABLE))
+            else:
+                self._wake(chan._rwait)
+        if stall:
+            self._fault_stall(stall)
 
     def pop_burst(self, chan: Channel, n: int) -> list:
+        stall = wake = 0
+        if self._chan_faults is not None:
+            stall, wake = self._fault_consult(chan, "pop_burst")
         q = chan._q
         if n == len(q):
             out = list(q)
@@ -1027,7 +1294,12 @@ class CoroutineEngine(EngineBase):
         if self.track_stats:
             chan.total_read += n
         if chan._wwait:
-            self._wake(chan._wwait)
+            if wake:
+                self.schedule_async(wake, self._fault_wake(chan, WRITABLE))
+            else:
+                self._wake(chan._wwait)
+        if stall:
+            self._fault_stall(stall)
         return out
 
     def _schedule(self, fiber: "_Fiber") -> None:
@@ -1066,6 +1338,7 @@ class CoroutineEngine(EngineBase):
         for c in pending:
             self._child_to_joiner[c.uid] = fiber
         fiber.inst.state = "blocked"
+        fiber.inst.wait_site = "join"
         fiber._yield()
         fiber.inst.state = "running"
         for i in insts:
@@ -1104,6 +1377,7 @@ class CoroutineEngine(EngineBase):
 
     def run(self, top: Callable, *args, **kwargs) -> SimReport:
         t0 = time.perf_counter()
+        self._t0 = t0
         root = TaskInstance(top, args, kwargs, detach=False, parent=None,
                             name=getattr(top, "__name__", "top"))
         set_context(self, None)    # so top-level spawn() is routed at us
@@ -1125,6 +1399,9 @@ class CoroutineEngine(EngineBase):
             break
         blocked_names = [i.name for i in self.instances
                          if i.state == "blocked" and not i.detach]
+        if deadlock:
+            # snapshot the structured report before teardown mutates states
+            self._make_deadlock("deadlock")
         self._tearing = True
         self._kill_blocked_fibers()
         for f in self._fibers.values():
@@ -1132,6 +1409,9 @@ class CoroutineEngine(EngineBase):
         clear_context()
         wall = time.perf_counter() - t0
         if self._failure is not None:
+            if isinstance(self._failure, DeadlockError):
+                # watchdog trip inside a fiber: already carries the report
+                return self._report(False, wall, str(self._failure))
             return self._report(False, wall,
                                 f"task error: {self._failure!r}")
         if deadlock:
@@ -1152,7 +1432,9 @@ ENGINES = {
 
 
 def run(top: Callable, *args, engine: str = "coroutine",
-        track_stats: bool = False, **kwargs) -> SimReport:
+        track_stats: bool = False, faults: Any = None,
+        watchdog_s: Optional[float] = None,
+        max_ticks: Optional[int] = None, **kwargs) -> SimReport:
     """Simulate a task-parallel program.
 
     This is the software-simulation half of the paper's unified
@@ -1162,9 +1444,14 @@ def run(top: Callable, *args, engine: str = "coroutine",
     ``track_stats=True`` records per-channel token counts and occupancy
     highwater marks (burst-granular) at the cost of disabling the
     run-to-block fast path.
+
+    ``faults`` attaches a chaos harness (a ``FaultPlan`` or its injector,
+    see :mod:`repro.core.faults`); ``watchdog_s`` / ``max_ticks`` arm the
+    unified wall-clock / logical-clock watchdog (docs/robustness.md).
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; "
                          f"choose from {sorted(ENGINES)}")
-    eng = ENGINES[engine](track_stats=track_stats)
+    eng = ENGINES[engine](track_stats=track_stats, faults=faults,
+                          watchdog_s=watchdog_s, max_ticks=max_ticks)
     return eng.run(top, *args, **kwargs)

@@ -1,5 +1,8 @@
 """Exception types for the TAPA-JAX core runtime."""
 
+from dataclasses import dataclass, field
+from typing import Optional
+
 
 class ReproError(Exception):
     """Base class for all repro errors."""
@@ -11,6 +14,73 @@ class Deadlock(ReproError):
     Raised by ThreadEngine/CoroutineEngine when every live task is blocked on
     a channel operation that can never be satisfied.
     """
+
+
+@dataclass
+class DeadlockReport:
+    """Structured no-progress diagnostic, uniform across every engine.
+
+    The CompiledEngine always reported its stalls this way (blocked tasks +
+    channel occupancies); this extracts that shape so sequential/thread/
+    coroutine deadlocks, watchdog trips and compiled stalls all carry the
+    same payload (``SimReport.deadlock``).  ``reason`` is one of:
+
+    * ``"deadlock"`` — every live task is blocked on an unsatisfiable op;
+    * ``"sequential-read"`` — the sequential engine's documented failure
+      (blocking read with no runnable producer);
+    * ``"stall"`` — a lowered graph stopped firing before completion;
+    * ``"watchdog"`` — the wall-clock watchdog expired (livelock / hang);
+    * ``"tick-budget"`` — the logical-clock budget (``max_ticks``) expired.
+    """
+
+    engine: str
+    reason: str
+    blocked: list = field(default_factory=list)    # [(task, wait site)]
+    occupancy: dict = field(default_factory=dict)  # channel name -> tokens
+    clock: int = 0
+    switches: int = 0
+    wall_s: float = 0.0
+
+    def format(self) -> str:
+        b = "; ".join(f"{t} ({s})" for t, s in self.blocked) or "-"
+        occ = {k: v for k, v in self.occupancy.items() if v}
+        return (f"deadlock[{self.reason}] under {self.engine} engine: "
+                f"blocked tasks: {b}; channel occupancy: {occ}; "
+                f"clock={self.clock} switches={self.switches}")
+
+
+class DeadlockError(Deadlock):
+    """A :class:`Deadlock` carrying its :class:`DeadlockReport`."""
+
+    def __init__(self, report: DeadlockReport):
+        super().__init__(report.format())
+        self.report = report
+
+
+class InjectedFault(ReproError):
+    """A failure injected by the chaos harness (``repro.core.faults``).
+
+    Raised from a task body at the firing chosen by the fault plan; engines
+    surface it like any other task failure (``task error: ...``), which is
+    exactly the point — injected faults exercise the real error paths.
+    """
+
+
+class TransientFault(ReproError):
+    """An injected *retryable* failure (serving step, artifact IO)."""
+
+
+class PoisonError(ReproError):
+    """A serving request whose compute step is poisoned by the fault plan.
+
+    The scheduler quarantines the named request (retired with an error
+    status) instead of dying; carries ``rid`` so batched steps can identify
+    the victim inside a group call.
+    """
+
+    def __init__(self, rid: int, msg: Optional[str] = None):
+        super().__init__(msg or f"poisoned request {rid}")
+        self.rid = rid
 
 
 class SequentialSimulationError(Deadlock):

@@ -438,6 +438,15 @@ class AsyncMMap(Interface):
         # yet produced); a full response FIFO additionally back-pressures
         # by deferring delivery, never by refusing acceptance — matching a
         # memory controller whose completions wait for the resp FIFO
+        #
+        # chaos harness: a fault plan with mem_spike entries perturbs the
+        # per-request latency (FaultInjector.mem_delay).  Spikes may reorder
+        # responses across ports/directions — legal, nothing guarantees
+        # cross-port ordering — but mem_delay clamps due times so each
+        # (port, direction) response FIFO stays in issue order.
+        faults = getattr(engine, "faults", None)
+        if faults is not None and not faults.affects_memory:
+            faults = None
         while self._raddr._q and self._pending_reads < self.depth:
             addr = engine._iface_pop(self._raddr)
             if self._binding is not None:
@@ -446,8 +455,10 @@ class AsyncMMap(Interface):
             self.read_reqs += 1
             if self._pending_reads > self.max_outstanding_reads:
                 self.max_outstanding_reads = self._pending_reads
+            lat = self.latency if faults is None else faults.mem_delay(
+                self.name, "read", self.latency, engine.clock)
             engine.schedule_async(
-                self.latency,
+                lat,
                 lambda eng, a=addr: self._deliver_read(eng, a))
         while (self._waddr._q and self._wdata._q and
                self._pending_writes < self.depth):
@@ -459,8 +470,10 @@ class AsyncMMap(Interface):
             self.write_reqs += 1
             if self._pending_writes > self.max_outstanding_writes:
                 self.max_outstanding_writes = self._pending_writes
+            lat = self.latency if faults is None else faults.mem_delay(
+                self.name, "write", self.latency, engine.clock)
             engine.schedule_async(
-                self.latency,
+                lat,
                 lambda eng, a=addr, v=value: self._deliver_write(eng, a, v))
 
     def _deliver_read(self, engine, addr) -> bool:

@@ -59,7 +59,8 @@ from .channel import Channel, IStream, OStream
 from .compile_cache import aval_signature, default_cache, _stable_repr
 from .context import clear_context, set_context
 from .engines import ENGINES, EngineBase, SimReport
-from .errors import ChannelMisuse, GraphValidationError, SynthesisError
+from .errors import (ChannelMisuse, DeadlockReport, GraphValidationError,
+                     SynthesisError)
 from .graph import extract_graph
 from .interface import AsyncMMap, MMap
 from .task import (AutoStream, TaskInstance, bind_streams,
@@ -783,8 +784,8 @@ class CompiledEngine(EngineBase):
 
     name = "compiled"
 
-    def __init__(self, track_stats: bool = False, cache: Any = None):
-        super().__init__(track_stats)
+    def __init__(self, track_stats: bool = False, cache: Any = None, **kw):
+        super().__init__(track_stats, **kw)
         self.cache = cache          # CompileCache | None=default | False=off
         self._cur: Optional[TaskInstance] = None
         # post-run introspection (tests / benchmarks)
@@ -985,6 +986,14 @@ class CompiledEngine(EngineBase):
                 err = (f"synthesized graph stalled after {self.switches} "
                        f"sweeps; blocked tasks: {blocked}; channel "
                        f"occupancy at stall: {occ}")
+                # unified diagnostic (docs/robustness.md): the same
+                # structured payload the simulation engines attach
+                self._deadlock_report = DeadlockReport(
+                    engine=self.name, reason="stall",
+                    blocked=[(n, "stalled") for n in blocked],
+                    occupancy=occ, clock=self.switches,
+                    switches=self.switches,
+                    wall_s=time.perf_counter() - t0)
             return self._report(not stuck, time.perf_counter() - t0, err,
                                 result)
         finally:

@@ -51,7 +51,8 @@ class TaskInstance:
     #Tasks from #Task Instances; this is the latter)."""
 
     __slots__ = ("uid", "fn", "args", "kwargs", "detach", "name", "parent",
-                 "children", "state", "error", "level", "interfaces")
+                 "children", "state", "error", "level", "interfaces",
+                 "wait_site")
 
     def __init__(self, fn: Callable, args: tuple, kwargs: dict,
                  detach: bool, parent: Optional["TaskInstance"],
@@ -66,6 +67,7 @@ class TaskInstance:
         self.children: list[TaskInstance] = []
         self.state = "created"   # created/running/blocked/finished/failed
         self.error: Optional[BaseException] = None
+        self.wait_site: Optional[str] = None  # "read <chan>" etc. while blocked
         self.level = 0 if parent is None else parent.level + 1
         # per-parameter interface table (kind/dtype/direction), filled by
         # bind_streams — the row data behind Graph.definitions[*].interfaces

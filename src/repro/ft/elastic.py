@@ -43,17 +43,32 @@ from ..ckpt import CheckpointManager
 
 
 class PreemptionGuard:
-    """SIGTERM/SIGINT -> finish the current step, checkpoint, exit clean."""
+    """SIGTERM/SIGINT -> finish the current step, checkpoint, exit clean.
+
+    The handler lifecycle is explicit and re-entrant-safe: ``install()``
+    saves the previous handlers exactly once, ``uninstall()`` restores
+    them and forgets them (idempotent — a second call is a no-op, and a
+    guard can be re-installed afterwards).  Nested guards therefore
+    restore handlers correctly as long as they uninstall in LIFO order.
+    Usable as a context manager: ``with PreemptionGuard() as g: ...``.
+    """
 
     def __init__(self, install: bool = True):
         self.requested = False
+        self.installed = False
         self._prev = {}
         if install:
-            for sig in (signal.SIGTERM, signal.SIGINT):
-                try:
-                    self._prev[sig] = signal.signal(sig, self._handler)
-                except ValueError:          # non-main thread (tests)
-                    pass
+            self.install()
+
+    def install(self) -> None:
+        if self.installed:
+            raise ValueError("PreemptionGuard is already installed")
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                self._prev[sig] = signal.signal(sig, self._handler)
+            except ValueError:          # non-main thread (tests)
+                pass
+        self.installed = True
 
     def _handler(self, signum, frame):
         self.requested = True
@@ -63,8 +78,21 @@ class PreemptionGuard:
         self.requested = True
 
     def uninstall(self) -> None:
+        if not self.installed:
+            return
         for sig, h in self._prev.items():
             signal.signal(sig, h)
+        self._prev = {}
+        self.installed = False
+
+    def __enter__(self) -> "PreemptionGuard":
+        if not self.installed:
+            self.install()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.uninstall()
+        return False
 
 
 class StragglerDetector:

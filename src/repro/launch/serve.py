@@ -22,8 +22,10 @@ import jax
 import numpy as np
 
 from ..configs import get_config
+from ..ft import PreemptionGuard
 from ..models import lm
-from ..serve import Request, ServeConfig, ServingEngine, serve_requests
+from ..serve import (Request, RequestError, ServeConfig, ServingEngine,
+                     serve_requests)
 
 
 def _build_engine(cfg, params, scfg: ServeConfig, args) -> ServingEngine:
@@ -84,6 +86,8 @@ def serve(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples on device")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget from admission")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -124,24 +128,49 @@ def serve(argv=None) -> int:
     reqs = [Request(rid=i,
                     prompt=rng.integers(
                         0, cfg.vocab, rng.integers(4, 17)).tolist(),
-                    max_new=args.max_new)
+                    max_new=args.max_new,
+                    deadline_s=args.deadline_s)
             for i in range(args.requests)]
 
-    t0 = time.perf_counter()
-    results = serve_requests(engine, reqs)
-    wall = time.perf_counter() - t0
-    n_new = sum(len(v) for v in results.values())
+    # preemption-safe serving: SIGTERM/SIGINT flips the guard; the
+    # scheduler then rejects queued admissions with "preempted" errors,
+    # finishes the in-flight slots, flushes results and exits clean
+    guard = PreemptionGuard()
+    engine.stop_flag = lambda: guard.requested
+    try:
+        t0 = time.perf_counter()
+        results = serve_requests(engine, reqs)
+        wall = time.perf_counter() - t0
+    finally:
+        guard.uninstall()
+    ok = {r: v for r, v in results.items() if not isinstance(v, RequestError)}
+    failed = {r: v for r, v in results.items() if isinstance(v, RequestError)}
+    n_new = sum(len(v) for v in ok.values())
     for rid in sorted(results):
-        print(f"[serve] req {rid}: prompt {len(reqs[rid].prompt):2d} tok "
-              f"-> {results[rid]}")
+        v = results[rid]
+        if isinstance(v, RequestError):
+            print(f"[serve] req {rid}: {v.status} ({v.detail})")
+        else:
+            print(f"[serve] req {rid}: prompt {len(reqs[rid].prompt):2d} tok "
+                  f"-> {v}")
     lazy = [(k, s, src) for k, s, src in engine.compile_log[n_warm_log:]
             if src == "compiled"]
     if lazy:
         print(f"[serve] lazy compiles during serving: "
               f"{[(k, s) for k, s, _ in lazy]}")
-    print(f"[serve] {len(results)} requests, {n_new} tokens in {wall:.2f}s "
+    if engine.degraded is not None:
+        print(f"[serve] degraded to {engine.degraded[0]}: "
+              f"{engine.degraded[1]}")
+    if guard.requested:
+        print(f"[serve] preempted: {len(ok)} completed, "
+              f"{len(failed)} rejected")
+    print(f"[serve] {len(ok)} requests, {n_new} tokens in {wall:.2f}s "
           f"({n_new/max(wall,1e-9):.1f} tok/s, {mode} decode)")
-    return 0 if len(results) == args.requests else 1
+    # a preempted run that answered every request (some with structured
+    # rejections) still exits clean — that is the graceful-drain contract
+    if guard.requested:
+        return 0 if len(results) == args.requests else 1
+    return 0 if len(ok) == args.requests else 1
 
 
 if __name__ == "__main__":

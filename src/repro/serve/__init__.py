@@ -1,3 +1,5 @@
-from .engine import Request, ServeConfig, ServingEngine, serve_requests
+from .engine import (Request, RequestError, ServeConfig, ServingEngine,
+                     serve_requests)
 
-__all__ = ["Request", "ServeConfig", "ServingEngine", "serve_requests"]
+__all__ = ["Request", "RequestError", "ServeConfig", "ServingEngine",
+           "serve_requests"]

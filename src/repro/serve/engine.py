@@ -32,12 +32,44 @@ Two decode paths share the scheduler:
   baseline that ``benchmarks/serve_time.py`` measures the fast path
   against.
 
-See docs/serving.md for the packed-cache layout and bucket policy.
+See docs/serving.md for the packed-cache layout and bucket policy, and
+docs/robustness.md for the failure model.
+
+Robustness (chaos-harness contract)
+-----------------------------------
+
+A serving process must degrade, not crash.  The failure surface and the
+response to each, from least to most severe:
+
+* **Transient step failure** — :class:`~repro.core.errors.TransientFault`
+  (injected by the chaos harness before the step executes): retried with
+  exponential backoff up to ``ServeConfig.max_retries`` times; retries are
+  recorded in :attr:`ServingEngine.retry_log`.
+* **Poisoned request** — :class:`~repro.core.errors.PoisonError` raised
+  *before* the step function runs (donated buffers untouched): only the
+  poisoned request is quarantined — it gets a :class:`RequestError` result
+  and its slot is retired; everything else keeps decoding.
+* **Per-slot deadline / cancellation** — a request past its
+  ``deadline_s`` or cancelled by the fault plan is retired with a
+  structured :class:`RequestError`; its partial output is dropped, its
+  slot freed.
+* **Unattributable batched failure** — the one jitted step covers every
+  slot and donates the packed cache, so a real exception from inside it
+  cannot be pinned on one request: every live request gets a
+  :class:`RequestError` and the packed cache is rebuilt from scratch.
+* **Batched path unavailable** — warmup or the pre-flight step
+  resolution fails: the scheduler degrades to the per-slot path when the
+  closures exist (the ladder is batched -> per-slot -> refuse).
+* **Preemption** — a ``stop_flag`` (wired to
+  :class:`~repro.ft.PreemptionGuard` by ``launch/serve.py``) makes the
+  scheduler reject all queued/future admissions with ``"preempted"``
+  errors, finish the in-flight slots, flush results and exit clean.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -46,6 +78,7 @@ import numpy as np
 
 from ..core import channel, task
 from ..core.engines import ENGINES
+from ..core.errors import PoisonError, TransientFault
 
 
 @dataclasses.dataclass
@@ -53,6 +86,21 @@ class Request:
     rid: int
     prompt: list          # token ids
     max_new: int = 8
+    deadline_s: Optional[float] = None   # wall-clock budget from admission
+
+
+@dataclasses.dataclass
+class RequestError:
+    """Structured failure result for one request (collector value).
+
+    ``status`` is one of ``"poisoned"``, ``"deadline"``, ``"cancelled"``,
+    ``"preempted"``, ``"error"``; ``detail`` is human-readable context.
+    A request either yields a token list or a RequestError — never a
+    silent absence from ``results``.
+    """
+    rid: int
+    status: str
+    detail: str = ""
 
 
 @dataclasses.dataclass
@@ -61,6 +109,9 @@ class ServeConfig:
     max_seq: int = 128
     eos_token: int = -1           # -1: only stop on max_new
     prefill_buckets: tuple = ()   # () = powers of two from 8 to max_seq
+    queue_cap: int = 16           # bounded admission queue (channel capacity)
+    max_retries: int = 2          # per step-call retry budget (transients)
+    retry_base_s: float = 0.0     # exponential-backoff base (0: no sleep)
 
 
 def _default_buckets(max_seq: int) -> tuple:
@@ -93,7 +144,8 @@ class ServingEngine:
 
     def __init__(self, scfg: ServeConfig, prefill_fn: Callable = None,
                  decode_fn: Callable = None, pad_token: int = 0,
-                 batched: Any = None):
+                 batched: Any = None, faults: Any = None,
+                 stop_flag: Callable = None):
         self.scfg = scfg
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
@@ -101,6 +153,16 @@ class ServingEngine:
         self.batched = batched
         if batched is None and (prefill_fn is None or decode_fn is None):
             raise ValueError("need prefill_fn/decode_fn or batched=adapter")
+        # chaos harness (repro.core.faults): poisoned/cancelled requests and
+        # transient step failures; None in normal operation
+        if faults is not None and not hasattr(faults, "serving_check"):
+            faults = faults.injector()
+        self.faults = faults
+        # preemption: callable polled once per scheduler iteration; True ->
+        # reject queued admissions, finish live slots, exit clean
+        self.stop_flag = stop_flag
+        self.retry_log: list = []          # (site, attempt, error) tuples
+        self.degraded: Optional[tuple] = None   # ("per-slot", reason) or None
         self._aot_prefill: dict = {}       # (B, S) -> executable
         self._aot_decode: Optional[tuple] = None   # (aval sig, executable)
         # batched mode: executables by shape key + where each came from
@@ -137,7 +199,16 @@ class ServingEngine:
         from ..core.compile_cache import aval_signature, default_cache
         cc = cache if cache is not None else default_cache()
         if self.batched is not None:
-            return self._warmup_batched(cc, batch_sizes)
+            rep = self._warmup_batched(cc, batch_sizes)
+            if rep.get("ok") or self.prefill_fn is None \
+                    or self.decode_fn is None:
+                return rep
+            # degradation ladder: batched -> per-slot.  An engine built
+            # with BOTH the adapter and the closures degrades here instead
+            # of making the caller rebuild it (launch/serve.py still
+            # handles the adapter-only {"ok": False} by rebuilding).
+            self.degraded = ("per-slot", rep.get("reason", ""))
+            self.batched = None
         toks = np.zeros((1, prompt_len), np.int32)
         try:
             pre, src_p = cc.compile_cached(self.prefill_fn, (toks,),
@@ -255,9 +326,10 @@ class ServingEngine:
 
     def frontend(self, requests: list, req_out) -> None:
         """Write each request as one EoT-delimited transaction:
-        [rid, max_new, tok0, tok1, ...] <EoT>."""
+        [rid, max_new, deadline, tok0, tok1, ...] <EoT>."""
         for r in requests:
-            req_out.write(("hdr", r.rid, r.max_new))
+            req_out.write(("hdr", r.rid, r.max_new,
+                           getattr(r, "deadline_s", None)))
             req_out.write_burst([("tok", t) for t in r.prompt])
             req_out.close()
         # final empty transaction marks shutdown
@@ -286,7 +358,7 @@ class ServingEngine:
         if is_eot:                          # empty transaction = shutdown
             req_in.open()
             return ("shutdown",)
-        kind, rid, max_new = req_in.peek()
+        kind, rid, max_new, deadline = req_in.peek()
         assert kind == "hdr", kind
         req_in.read()                       # consume the peeked header
         prompt = [t for (_, t) in req_in.read_transaction()]
@@ -294,12 +366,74 @@ class ServingEngine:
         # prompts keep their most recent max_seq-1 tokens so one decode
         # position remains
         prompt = (prompt or [self.pad])[-(self.scfg.max_seq - 1):]
-        return ("req", rid, max_new, prompt)
+        return ("req", rid, max_new, prompt, deadline)
 
     def _emit(self, out_chan, rid: int, new: list) -> None:
         out_chan.write(("hdr", rid))
         out_chan.write_burst([("tok", int(t)) for t in new])
         out_chan.close()
+
+    def _emit_err(self, out_chan, rid: int, status: str,
+                  detail: str = "") -> None:
+        """One error transaction; the collector turns it into a
+        :class:`RequestError` result."""
+        out_chan.write(("err", rid, status, detail))
+        out_chan.close()
+
+    # -- hardening helpers -----------------------------------------------------
+
+    def _call_step(self, site: str, rids: list, fn, *args):
+        """Run one step function under the serving fault contract.
+
+        Consults the injector *before* ``fn`` executes, so both
+        :class:`PoisonError` (re-raised for the caller to quarantine) and
+        :class:`TransientFault` (retried here with exponential backoff)
+        fire while any donated buffers in ``args`` are still valid.
+        """
+        for attempt in range(self.scfg.max_retries + 1):
+            try:
+                if self.faults is not None:
+                    self.faults.serving_check(site, rids)
+                return fn(*args)
+            except PoisonError:
+                raise
+            except TransientFault as e:
+                self.retry_log.append((site, attempt, repr(e)))
+                if attempt >= self.scfg.max_retries:
+                    raise
+                if self.scfg.retry_base_s > 0:
+                    time.sleep(self.scfg.retry_base_s * 2 ** attempt)
+
+    def _abnormal(self, s: dict) -> Optional[tuple]:
+        """(status, detail) if the slot must be retired abnormally."""
+        err = s.get("error")
+        if err is not None:
+            return err
+        dl = s.get("deadline")
+        if dl is not None and time.perf_counter() - s["t0"] > dl:
+            return ("deadline", f"deadline {dl}s exceeded after "
+                                f"{len(s['new'])} tokens")
+        if self.faults is not None and \
+                self.faults.cancelled(s["rid"], len(s["new"])):
+            return ("cancelled", f"cancelled after {len(s['new'])} tokens")
+        return None
+
+    def _stop_requested(self) -> bool:
+        return self.stop_flag is not None and bool(self.stop_flag())
+
+    def _drain_reject(self, req_in, out_chan) -> None:
+        """Preemption path: consume every queued/future request transaction
+        up to the frontend's shutdown marker, answering each with a
+        ``"preempted"`` error — the frontend never blocks on a full channel
+        and the collector still sees one result per request."""
+        while True:
+            r = self._admit_one(req_in, can_wait=True)
+            if r[0] == "shutdown":
+                return
+            if r[0] == "none":      # unreachable with can_wait=True
+                continue
+            self._emit_err(out_chan, r[1], "preempted",
+                           "serving preempted; request rejected")
 
     def _finished(self, s: dict) -> bool:
         if len(s["new"]) >= s["max_new"]:
@@ -315,17 +449,38 @@ class ServingEngine:
 
     def scheduler(self, req_in, out_chan) -> None:
         """Admission + continuous batch decode."""
-        if self.batched is not None:
+        batched = self.batched is not None
+        if batched:
+            # pre-flight: resolving the packed decode step is the batched
+            # path's single point of no return; if it fails and the
+            # per-slot closures exist, degrade instead of dying with the
+            # whole request queue unanswered
+            try:
+                self._resolve_step()
+            except Exception as e:  # noqa: BLE001 - degrade, don't crash
+                if self.prefill_fn is None or self.decode_fn is None:
+                    raise
+                self.degraded = ("per-slot", repr(e)[:200])
+                batched = False
+        if batched:
             self._scheduler_batched(req_in, out_chan)
         else:
             self._scheduler_per_slot(req_in, out_chan)
         out_chan.close()                   # shutdown transaction
+
+    def _mk_slot(self, rid, max_new, prompt, deadline) -> dict:
+        return {"rid": rid, "prompt": prompt, "plen": len(prompt),
+                "max_new": max_new, "new": [], "deadline": deadline,
+                "t0": time.perf_counter()}
 
     def _scheduler_per_slot(self, req_in, out_chan) -> None:
         scfg = self.scfg
         slots: list[Optional[dict]] = [None] * scfg.batch_slots
         shutdown = False
         while True:
+            if not shutdown and self._stop_requested():
+                self._drain_reject(req_in, out_chan)
+                shutdown = True
             # Admit while a slot is free; block only when fully idle.
             while not shutdown:
                 free = next((i for i, s in enumerate(slots) if s is None),
@@ -339,13 +494,11 @@ class ServingEngine:
                     break
                 if r[0] == "none":
                     break
-                _, rid, max_new, prompt = r
+                _, rid, max_new, prompt, deadline = r
                 if max_new <= 0:
                     self._emit(out_chan, rid, [])
                     continue
-                slots[free] = {"rid": rid, "prompt": prompt,
-                               "plen": len(prompt), "max_new": max_new,
-                               "new": []}
+                slots[free] = self._mk_slot(rid, max_new, prompt, deadline)
 
             live = [s for s in slots if s is not None]
             if not live:
@@ -355,50 +508,71 @@ class ServingEngine:
 
             self._step_batch(slots)
 
-            # retire finished slots (emit one transaction per request)
+            # retire finished/failed slots (one transaction per request)
             for i, s in enumerate(slots):
-                if s is not None and self._finished(s):
+                if s is None:
+                    continue
+                ab = self._abnormal(s)
+                if ab is not None:
+                    self._emit_err(out_chan, s["rid"], *ab)
+                    slots[i] = None
+                elif self._finished(s):
                     self._emit(out_chan, s["rid"], s["new"])
                     slots[i] = None
+
+    def _do_prefill(self, s: dict) -> None:
+        toks = np.asarray(s["prompt"], np.int32)[None, :]
+        prefill = self._aot_prefill.get(toks.shape, self.prefill_fn)
+        logits, cache = prefill(toks)
+        s["cache"] = cache
+        s["next"] = int(np.argmax(np.asarray(logits)[0]))
+        s["new"].append(s["next"])
+        # decide the AOT-vs-eager decode path once per slot, not
+        # per token (the kv signature is fixed after prefill)
+        if self._aot_decode is not None:
+            from ..core.compile_cache import aval_signature
+            sig, exe = self._aot_decode
+            tok0 = np.zeros((1,), np.int32)
+            s["aot_decode"] = exe if aval_signature(
+                (tok0, cache), {}) == sig else None
+
+    def _do_decode(self, s: dict) -> None:
+        tok = np.asarray([s["next"]], np.int32)
+        decode = s.get("aot_decode") or self.decode_fn
+        try:
+            logits, s["cache"] = decode(tok, s["cache"])
+        except (TypeError, ValueError):
+            # a decode_fn that reshapes its cache mid-stream falls off
+            # the AOT fast path instead of erroring
+            if decode is self.decode_fn:
+                raise
+            s["aot_decode"] = None
+            logits, s["cache"] = self.decode_fn(tok, s["cache"])
+        s["next"] = int(np.argmax(np.asarray(logits)[0]))
+        s["new"].append(s["next"])
+
+    def _step_slot(self, site: str, s: dict, fn) -> None:
+        """One per-slot step with quarantine: a failing request marks only
+        its own slot (``s["error"]``); neighbours keep decoding."""
+        try:
+            self._call_step(site, [s["rid"]], fn, s)
+        except PoisonError as e:
+            s["error"] = ("poisoned", str(e))
+        except Exception as e:  # noqa: BLE001 - incl. exhausted transients
+            s["error"] = ("error", repr(e)[:200])
 
     def _step_batch(self, slots: list) -> None:
         """One prefill-or-decode step over the live slots (per-slot path)."""
         # prefill any slot that has no cache yet
         for s in slots:
-            if s is not None and "cache" not in s:
-                toks = np.asarray(s["prompt"], np.int32)[None, :]
-                prefill = self._aot_prefill.get(toks.shape,
-                                                self.prefill_fn)
-                logits, cache = prefill(toks)
-                s["cache"] = cache
-                s["next"] = int(np.argmax(np.asarray(logits)[0]))
-                s["new"].append(s["next"])
-                # decide the AOT-vs-eager decode path once per slot, not
-                # per token (the kv signature is fixed after prefill)
-                if self._aot_decode is not None:
-                    from ..core.compile_cache import aval_signature
-                    sig, exe = self._aot_decode
-                    tok0 = np.zeros((1,), np.int32)
-                    s["aot_decode"] = exe if aval_signature(
-                        (tok0, cache), {}) == sig else None
+            if s is not None and "cache" not in s and "error" not in s:
+                self._step_slot("prefill", s, self._do_prefill)
         # decode all live slots, one call per slot (the seed hot loop the
         # batched path replaces)
         for s in slots:
-            if s is None or self._finished(s):
+            if s is None or "error" in s or self._finished(s):
                 continue
-            tok = np.asarray([s["next"]], np.int32)
-            decode = s.get("aot_decode") or self.decode_fn
-            try:
-                logits, s["cache"] = decode(tok, s["cache"])
-            except (TypeError, ValueError):
-                # a decode_fn that reshapes its cache mid-stream falls off
-                # the AOT fast path instead of erroring
-                if decode is self.decode_fn:
-                    raise
-                s["aot_decode"] = None
-                logits, s["cache"] = self.decode_fn(tok, s["cache"])
-            s["next"] = int(np.argmax(np.asarray(logits)[0]))
-            s["new"].append(s["next"])
+            self._step_slot("decode", s, self._do_decode)
 
     # -- batched fast path -----------------------------------------------------
 
@@ -414,6 +588,9 @@ class ServingEngine:
         step_i = 0
 
         while True:
+            if not shutdown and self._stop_requested():
+                self._drain_reject(req_in, out_chan)
+                shutdown = True
             # -- admission: collect requests for every free slot ----------
             newly = []
             while not shutdown and sum(s is None for s in slots) > len(newly):
@@ -426,22 +603,30 @@ class ServingEngine:
                     break
                 if r[0] == "none":
                     break
-                _, rid, max_new, prompt = r
+                _, rid, max_new, prompt, deadline = r
                 if max_new <= 0:
                     self._emit(out_chan, rid, [])
                     continue
-                newly.append({"rid": rid, "prompt": prompt,
-                              "plen": len(prompt), "max_new": max_new,
-                              "new": []})
+                newly.append(self._mk_slot(rid, max_new, prompt, deadline))
             if newly:
                 packed, step_i = self._prefill_admit(newly, slots, packed,
-                                                     step_i)
+                                                     step_i, out_chan)
                 # a request can finish at prefill (max_new == 1 / eos)
                 for i, s in enumerate(slots):
                     if s is not None and self._finished(s):
                         self._emit(out_chan, s["rid"], s["new"])
                         packed = retire_exe(packed, np.int32(i))
                         slots[i] = None
+
+            # -- retire deadline-blown / cancelled slots before stepping --
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                ab = self._abnormal(s)
+                if ab is not None:
+                    self._emit_err(out_chan, s["rid"], *ab)
+                    packed = retire_exe(packed, np.int32(i))
+                    slots[i] = None
 
             if not any(s is not None for s in slots):
                 if shutdown:
@@ -453,7 +638,32 @@ class ServingEngine:
             for i, s in enumerate(slots):
                 if s is not None:
                     toks[i] = s["next"]
-            nxt, packed = step_exe(toks, packed, np.int32(step_i))
+            rids = [s["rid"] for s in slots if s is not None]
+            try:
+                nxt, packed = self._call_step("decode", rids, step_exe,
+                                              toks, packed, np.int32(step_i))
+            except PoisonError as e:
+                # raised before the step executed, so the donated packed
+                # cache is still valid: retire only the poisoned slot
+                for i, s in enumerate(slots):
+                    if s is not None and s["rid"] == e.rid:
+                        self._emit_err(out_chan, e.rid, "poisoned", str(e))
+                        packed = retire_exe(packed, np.int32(i))
+                        slots[i] = None
+                continue
+            except Exception as e:  # noqa: BLE001 - unattributable failure
+                # the one jitted step covers every slot and donated the
+                # packed cache — the failure cannot be pinned on a single
+                # request and the cache may be consumed.  Fail all live
+                # requests with structured errors and rebuild the cache:
+                # the scheduler survives to serve what is still queued.
+                for i, s in enumerate(slots):
+                    if s is not None:
+                        self._emit_err(out_chan, s["rid"], "error",
+                                       repr(e)[:200])
+                        slots[i] = None
+                packed = self.batched.init_slots(n)
+                continue
             step_i += 1
             nxt = np.asarray(nxt)   # [slots] — the only per-step transfer
 
@@ -469,7 +679,7 @@ class ServingEngine:
                     slots[i] = None
 
     def _prefill_admit(self, newly: list, slots: list, packed,
-                       step_i: int):
+                       step_i: int, out_chan):
         """Bucketed batched prefill for a group of admitted requests.
 
         Prompts are right-padded to the smallest power-of-two bucket and
@@ -478,6 +688,11 @@ class ServingEngine:
         bounded and every shape is a compile-cache key.  Returns
         ``(packed, step_i)``: the step counter advances once per prefill
         call so every sampler invocation folds a distinct key.
+
+        A poisoned request is isolated here: it gets an error transaction
+        and its group retries without it (PoisonError fires before the
+        prefill executes, so nothing is torn).  A real prefill failure
+        fails only the group sharing that call, never the whole wave.
         """
         buckets = self.buckets()
         groups: dict[int, list] = {}
@@ -489,23 +704,39 @@ class ServingEngine:
             groups.setdefault(L, []).append(s)
         free = iter(i for i, s in enumerate(slots) if s is None)
         for L, grp in sorted(groups.items()):
-            bk = _pow2_at_least(len(grp), self.scfg.batch_slots)
-            toks = np.full((bk, L), self.pad, np.int32)
-            lens = np.zeros((bk,), np.int32)
-            for row, s in enumerate(grp):
-                toks[row, :s["plen"]] = s["prompt"]
-                lens[row] = s["plen"]
-            exe, _ = self._resolve_prefill(bk, L)
-            first, cache = exe(toks, lens, np.int32(step_i))
-            step_i += 1
-            first = np.asarray(first)      # [bk] sampled on device
-            write = self._resolve_write(bk)
-            for row, s in enumerate(grp):
-                slot = next(free)
-                packed = write(packed, cache, np.int32(row), np.int32(slot))
-                s["next"] = int(first[row])
-                s["new"].append(s["next"])
-                slots[slot] = s
+            while grp:
+                bk = _pow2_at_least(len(grp), self.scfg.batch_slots)
+                toks = np.full((bk, L), self.pad, np.int32)
+                lens = np.zeros((bk,), np.int32)
+                for row, s in enumerate(grp):
+                    toks[row, :s["plen"]] = s["prompt"]
+                    lens[row] = s["plen"]
+                exe, _ = self._resolve_prefill(bk, L)
+                rids = [s["rid"] for s in grp]
+                try:
+                    first, cache = self._call_step("prefill", rids, exe,
+                                                   toks, lens,
+                                                   np.int32(step_i))
+                except PoisonError as e:
+                    self._emit_err(out_chan, e.rid, "poisoned", str(e))
+                    grp = [s for s in grp if s["rid"] != e.rid]
+                    continue                # retry the group without it
+                except Exception as e:  # noqa: BLE001 - group-level failure
+                    for s in grp:
+                        self._emit_err(out_chan, s["rid"], "error",
+                                       repr(e)[:200])
+                    break
+                step_i += 1
+                first = np.asarray(first)  # [bk] sampled on device
+                write = self._resolve_write(bk)
+                for row, s in enumerate(grp):
+                    slot = next(free)
+                    packed = write(packed, cache, np.int32(row),
+                                   np.int32(slot))
+                    s["next"] = int(first[row])
+                    s["new"].append(s["next"])
+                    slots[slot] = s
+                break
         return packed, step_i
 
     def collector(self, out_in, results: dict) -> None:
@@ -513,15 +744,23 @@ class ServingEngine:
             if out_in.eot():               # shutdown transaction
                 out_in.open()
                 break
-            kind, rid = out_in.read()
+            hdr = out_in.read()
+            if hdr[0] == "err":            # quarantined/rejected request
+                _, rid, status, detail = hdr
+                for _ in out_in.read_transaction():
+                    pass
+                results[rid] = RequestError(rid, status, detail)
+                continue
+            kind, rid = hdr
             assert kind == "hdr"
             results[rid] = [t for (_, t) in out_in.read_transaction()]
 
     # -- top ------------------------------------------------------------------
 
     def top(self, requests: list, results: dict) -> None:
-        req = channel(capacity=16, name="requests")
-        out = channel(capacity=16, name="outputs")
+        cap = self.scfg.queue_cap          # bounded admission queue
+        req = channel(capacity=cap, name="requests")
+        out = channel(capacity=cap, name="outputs")
         task() \
             .invoke(self.frontend, requests, req) \
             .invoke(self.scheduler, req, out) \
@@ -529,10 +768,24 @@ class ServingEngine:
 
 
 def serve_requests(engine: ServingEngine, requests: list,
-                   sim_engine: str = "coroutine") -> dict:
-    """One-call host API for serving (paper Section 3.1.4)."""
+                   sim_engine: str = "coroutine", faults: Any = None,
+                   watchdog_s: Optional[float] = None) -> dict:
+    """One-call host API for serving (paper Section 3.1.4).
+
+    ``faults`` (a FaultPlan or FaultInjector) arms BOTH the serving-level
+    faults (poison/cancel/transient, via ``engine.faults``) and the
+    channel/task-level faults of the simulation engine that hosts the
+    serving task graph; ``watchdog_s`` bounds the whole run's wall clock
+    with the unified deadlock watchdog.
+    """
     results: dict = {}
-    rep = ENGINES[sim_engine]().run(engine.top, requests, results)
+    if faults is not None:
+        if not hasattr(faults, "serving_check"):
+            faults = faults.injector()
+        engine.faults = faults
+    rep = ENGINES[sim_engine](faults=faults,
+                              watchdog_s=watchdog_s).run(
+        engine.top, requests, results)
     if not rep.ok:
         raise RuntimeError(f"serving failed: {rep.error}")
     return results

@@ -1,0 +1,469 @@
+"""Chaos-harness fault matrix: every fault kind, every engine, one outcome
+contract — detected with structured diagnostics or recovered; never a
+silent hang, never an unstructured crash; always replayable by seed.
+
+CI runs this file under several ``REPRO_CHAOS_SEED`` values; every test
+must hold for any seed (probabilistic faults use per-site hash draws, so
+a different seed only moves *which* ops fault, not the invariants).
+The compiled engine's structured stall report is covered in
+``test_synth.py::test_compiled_deadlock_reports_blocked_task`` (slow tier)
+— channel/task faults target the software engines' op paths and do not
+apply to the whole-graph XLA program.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import repro
+from repro import DeadlockReport, FaultPlan
+from repro.core.compile_cache import CompileCache
+from repro.serve import (Request, RequestError, ServeConfig, ServingEngine,
+                         serve_requests)
+
+SEED = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
+SW_ENGINES = ("sequential", "thread", "coroutine")
+
+
+# ---------------------------------------------------------------------------
+# programs
+# ---------------------------------------------------------------------------
+
+def _pipeline(n=40, capacity=4):
+    """Source -> Relay -> Sink over channels named c0/c1; returns (Top, out)."""
+    out: list = []
+
+    def Source(o):
+        for v in range(n):
+            o.write(v)
+        o.close()
+
+    def Relay(i, o):
+        for v in i:
+            o.write(v)
+        o.close()
+
+    def Sink(i):
+        for v in i:
+            out.append(v)
+
+    def Top():
+        c0 = repro.channel(capacity=capacity, name="c0")
+        c1 = repro.channel(capacity=capacity, name="c1")
+        repro.task() \
+            .invoke(Source, c0, name="Source") \
+            .invoke(Relay, c0, c1, name="Relay") \
+            .invoke(Sink, c1, name="Sink")
+
+    return Top, out
+
+
+def _deadlock_top():
+    """Consumer reads a channel its producer never feeds: a genuine
+    read-starvation deadlock under every engine."""
+
+    def Producer(o):
+        pass                              # never writes, never closes
+
+    def Consumer(i):
+        i.read()
+
+    def Top():
+        c0 = repro.channel(capacity=2, name="c0")
+        repro.task() \
+            .invoke(Producer, c0, name="Producer") \
+            .invoke(Consumer, c0, name="Consumer")
+
+    return Top
+
+
+def _pingpong_top():
+    """Two tasks echoing forever — livelock for the wall-clock watchdog."""
+
+    def Ping(o, i):
+        v = 0
+        while True:
+            o.write(v)
+            v = i.read()
+
+    def Pong(i, o):
+        while True:
+            o.write(i.read())
+
+    def Top():
+        a = repro.channel(capacity=1, name="a")
+        b = repro.channel(capacity=1, name="b")
+        repro.task() \
+            .invoke(Ping, a, b, name="Ping") \
+            .invoke(Pong, a, b, name="Pong")
+
+    return Top
+
+
+# ---------------------------------------------------------------------------
+# channel stalls + delayed wakes: delayed, never lost
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", SW_ENGINES)
+def test_chan_stall_recovers_everywhere(engine):
+    plan = FaultPlan(seed=SEED,
+                     chan_stall={"*": {"p": 0.3, "stall": 2, "wake": 1}})
+    inj = plan.injector()
+    top, out = _pipeline()
+    rep = repro.ENGINES[engine](faults=inj).run(top)
+    assert rep.ok, rep.error
+    assert out == list(range(40))         # every token arrived, in order
+    assert any(e[0] == "chan" for e in inj.log)   # faults actually fired
+
+
+@pytest.mark.parametrize("engine", SW_ENGINES)
+def test_task_raise_structured_failure(engine):
+    plan = FaultPlan(seed=SEED, task_raise={"Relay": 5})
+    top, _ = _pipeline()
+    rep = repro.ENGINES[engine](faults=plan).run(top)
+    assert not rep.ok
+    assert "InjectedFault" in rep.error
+    assert "Relay" in rep.error
+
+
+# ---------------------------------------------------------------------------
+# unified deadlock watchdog: same structured report, every engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", SW_ENGINES)
+def test_deadlock_report_parity(engine):
+    rep = repro.ENGINES[engine]().run(_deadlock_top())
+    assert not rep.ok
+    if engine == "sequential":
+        # the paper-documented failure mode keeps its legacy message ...
+        assert "cannot make progress" in rep.error
+    else:
+        assert "deadlock" in rep.error.lower()
+    # ... while the structured report is unified across all engines
+    d = rep.deadlock
+    assert isinstance(d, DeadlockReport)
+    assert d.engine == engine
+    assert d.reason == ("sequential-read" if engine == "sequential"
+                        else "deadlock")
+    assert any(site == "read c0" and "Consumer" in t
+               for t, site in d.blocked), d.blocked
+    assert d.occupancy.get("c0", 0) == 0  # c0 never held a token
+    assert d.format().startswith(f"deadlock[{d.reason}]")
+
+
+@pytest.mark.parametrize("engine", ("thread", "coroutine"))
+def test_wall_clock_watchdog_breaks_livelock(engine):
+    rep = repro.ENGINES[engine](watchdog_s=0.2).run(_pingpong_top())
+    assert not rep.ok
+    assert rep.deadlock is not None
+    assert rep.deadlock.reason == "watchdog"
+    assert rep.deadlock.wall_s >= 0.2
+    assert "deadlock[watchdog]" in rep.error
+
+
+@pytest.mark.parametrize("engine", ("thread", "coroutine"))
+def test_tick_budget_watchdog(engine):
+    rep = repro.ENGINES[engine](max_ticks=50).run(_pingpong_top())
+    assert not rep.ok
+    assert rep.deadlock is not None
+    assert rep.deadlock.reason == "tick-budget"
+
+
+# ---------------------------------------------------------------------------
+# determinism and replay
+# ---------------------------------------------------------------------------
+
+def test_replay_same_seed_same_log():
+    plan = FaultPlan(seed=SEED,
+                     chan_stall={"*": {"p": 0.4, "stall": 1, "wake": 1}})
+    logs = []
+    for _ in range(2):
+        inj = plan.injector()
+        top, out = _pipeline()
+        rep = repro.ENGINES["coroutine"](faults=inj).run(top)
+        assert rep.ok and out == list(range(40))
+        logs.append(list(inj.log))
+    assert logs[0] == logs[1]
+    assert logs[0]                        # non-empty at p=0.4
+
+
+def test_replay_decisions_are_engine_independent():
+    """The k-th op at a site draws the same verdict under any engine, so
+    the *set* of fired channel faults matches across engines (only the
+    interleaving — the log order — may differ)."""
+    plan = FaultPlan(seed=SEED,
+                     chan_stall={"*": {"p": 0.4, "stall": 1, "wake": 1}})
+    fired = []
+    for engine in SW_ENGINES:
+        inj = plan.injector()
+        top, out = _pipeline()
+        rep = repro.ENGINES[engine](faults=inj).run(top)
+        assert rep.ok and out == list(range(40)), engine
+        fired.append(sorted(e for e in inj.log if e[0] == "chan"))
+    assert fired[0] == fired[1] == fired[2]
+
+
+def test_different_seed_different_decisions():
+    logs = []
+    for seed in (SEED, SEED + 1):
+        plan = FaultPlan(seed=seed,
+                         chan_stall={"*": {"p": 0.5, "stall": 1, "wake": 0}})
+        inj = plan.injector()
+        top, _ = _pipeline()
+        assert repro.ENGINES["coroutine"](faults=inj).run(top).ok
+        logs.append(sorted(inj.log))
+    assert logs[0] != logs[1]
+
+
+def test_noop_plan_keeps_fast_path_and_semantics():
+    """Zero-overhead contract: an armed-but-empty plan must not disable
+    the coroutine fast path (the <5% bench gate is structural)."""
+    eng = repro.ENGINES["coroutine"](faults=FaultPlan(seed=SEED))
+    assert eng.fast_path
+    top, out = _pipeline()
+    assert eng.run(top).ok and out == list(range(40))
+    armed = repro.ENGINES["coroutine"](
+        faults=FaultPlan(chan_stall={"c0": {"p": 1.0, "stall": 1}}))
+    assert not armed.fast_path
+
+
+# ---------------------------------------------------------------------------
+# memory-latency spikes: legal reordering only
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ("thread", "coroutine"))
+def test_mem_spike_preserves_port_fifo(engine):
+    data = np.arange(100, 116, dtype=np.int64)
+    port = repro.async_mmap(data, latency=2, depth=4, name="port")
+    sink: list = []
+
+    def Gather(mem, out):
+        out.write_burst(mem.read_pipelined(range(16)))
+        out.close()
+
+    def Top(mem):
+        ch = repro.channel(capacity=16)
+        repro.task() \
+            .invoke(Gather, mem, ch, name="Gather") \
+            .invoke(lambda i, acc: acc.extend(i.read_transaction()),
+                    ch, sink, name="Sink")
+
+    plan = FaultPlan(seed=SEED, mem_spike={"*": {"p": 0.5, "extra": 7}})
+    inj = plan.injector()
+    rep = repro.ENGINES[engine](faults=inj).run(Top, port)
+    assert rep.ok, rep.error
+    # within one (port, direction) responses stay FIFO, so the pipelined
+    # read returns every element in order despite the latency spikes
+    assert sink == list(data)
+    assert any(e[0] == "mem" for e in inj.log)
+
+
+# ---------------------------------------------------------------------------
+# artifact integrity: compile cache + checkpoints
+# ---------------------------------------------------------------------------
+
+def _tiny_fn(x):
+    return x + 1
+
+
+def test_cache_corruption_detected_and_recompiled(tmp_path):
+    args = (np.zeros((2,), np.float32),)
+    chaos = CompileCache(root=tmp_path, faults=FaultPlan(cache_corrupt=1))
+    exe, src = chaos.compile_cached(_tiny_fn, args)
+    assert src == "compiled"
+    assert np.allclose(exe(*args), 1.0)
+    # the disk entry was corrupted post-write; a fresh cache detects the
+    # digest mismatch, deletes the entry and recompiles — never crashes,
+    # never returns a bad executable
+    clean = CompileCache(root=tmp_path)
+    exe2, src2 = clean.compile_cached(_tiny_fn, args)
+    assert src2 == "compiled"
+    assert clean.stats.corrupt == 1
+    assert np.allclose(exe2(*args), 1.0)
+    # and the rewritten entry round-trips from disk
+    again = CompileCache(root=tmp_path)
+    _, src3 = again.compile_cached(_tiny_fn, args)
+    assert src3 == "disk"
+
+
+def test_cache_transient_io_retried(tmp_path):
+    args = (np.zeros((3,), np.float32),)
+    inj = FaultPlan(cache_io_errors=1).injector()
+    cc = CompileCache(root=tmp_path, faults=inj)
+    cc.compile_cached(_tiny_fn, args)
+    assert any(e[0] == "io_error" for e in inj.log)
+    # the retry landed the entry on disk despite the injected failure
+    fresh = CompileCache(root=tmp_path)
+    _, src = fresh.compile_cached(_tiny_fn, args)
+    assert src == "disk"
+
+
+def test_ckpt_truncation_skipped_io_retried(tmp_path):
+    from repro.ckpt import CheckpointManager
+    inj = FaultPlan(ckpt_io_errors=1, ckpt_truncate=(2,)).injector()
+    mgr = CheckpointManager(tmp_path, keep=3, faults=inj)
+    params = {"w": np.arange(8, dtype=np.float32)}
+    opt = {"m": np.zeros(8, dtype=np.float32)}
+    mgr.save(1, params, opt, extra={"step": 1})
+    mgr.save(2, {"w": params["w"] * 2}, opt, extra={"step": 2})
+    assert any(e[0] == "io_error" for e in inj.log)      # write retried
+    assert any(e[0] == "ckpt_truncate" for e in inj.log)
+    assert mgr.verify(2)                  # truncated step fails integrity
+    assert mgr.verify(1) == []
+    got = mgr.restore_latest(params, opt)
+    assert got is not None
+    step, p, _, extra = got
+    assert step == 1 and extra["step"] == 1
+    np.testing.assert_array_equal(p["w"], params["w"])
+
+
+# ---------------------------------------------------------------------------
+# serving: poison / transient / deadline / cancel / preemption / degrade
+# ---------------------------------------------------------------------------
+
+V = 16
+
+
+def _toy_per_slot(scfg):
+    def prefill(toks):
+        last = int(toks[0, -1]) % V
+        return np.eye(1, V, k=(last + 1) % V), {"n": toks.shape[1]}
+
+    def decode(tok, cache):
+        return np.eye(1, V, k=int(tok[0] + 1) % V), {"n": cache["n"] + 1}
+
+    return ServingEngine(scfg, prefill, decode)
+
+
+def _toy_batched(scfg):
+    from test_serving import toy_batched_engine
+    return toy_batched_engine(scfg)
+
+
+def _expected(prompt, max_new):
+    last = (prompt[-1] if prompt else 0) % V
+    return [(last + 1 + k) % V for k in range(max_new)]
+
+
+_SCFG = dict(batch_slots=2, max_seq=32, prefill_buckets=(8,))
+
+
+@pytest.mark.parametrize("variant", ["per_slot", "batched"])
+def test_serving_poison_and_transients_quarantine_only_victims(variant):
+    scfg = ServeConfig(**_SCFG)
+    eng = (_toy_per_slot if variant == "per_slot" else _toy_batched)(scfg)
+    reqs = [Request(i, [(3 * i) % V], max_new=3) for i in range(6)]
+    plan = FaultPlan(seed=SEED, poison={2: "decode", 5: "prefill"},
+                     transient={"prefill": 2, "decode": 1})
+    res = serve_requests(eng, reqs, faults=plan)
+    assert set(res) == set(range(6))
+    for rid in (2, 5):
+        assert isinstance(res[rid], RequestError), res[rid]
+        assert res[rid].status == "poisoned"
+    for rid in (0, 1, 3, 4):
+        assert res[rid] == _expected(reqs[rid].prompt, 3), rid
+    # the transient budget was consumed by retries, not failures
+    assert len(eng.retry_log) == 3
+
+
+def test_serving_batched_vs_per_slot_parity_under_faults():
+    """Graceful degradation must not change outcomes: the same requests
+    under the same fault plan yield the same statuses and token lists on
+    both decode paths."""
+    reqs = [Request(i, [(5 * i + 1) % V], max_new=4) for i in range(7)]
+    plan = dict(poison={3: "any"}, cancel={6: 2}, transient={"decode": 2})
+    outs = []
+    for mk in (_toy_per_slot, _toy_batched):
+        res = serve_requests(mk(ServeConfig(**_SCFG)), reqs,
+                             faults=FaultPlan(seed=SEED, **plan))
+        outs.append({rid: (v.status if isinstance(v, RequestError) else v)
+                     for rid, v in res.items()})
+    assert outs[0] == outs[1]
+    assert outs[0][3] == "poisoned"
+    assert outs[0][6] == "cancelled"
+    assert outs[0][0] == _expected(reqs[0].prompt, 4)
+
+
+@pytest.mark.parametrize("variant", ["per_slot", "batched"])
+def test_serving_deadline_retires_slot(variant):
+    scfg = ServeConfig(**_SCFG)
+    eng = (_toy_per_slot if variant == "per_slot" else _toy_batched)(scfg)
+    res = serve_requests(eng, [Request(0, [1], max_new=4, deadline_s=0.0),
+                               Request(1, [2], max_new=4)])
+    assert isinstance(res[0], RequestError) and res[0].status == "deadline"
+    assert res[1] == _expected([2], 4)
+
+
+def test_serving_batched_unattributable_failure_degrades_cleanly():
+    """A real exception inside the one jitted step cannot be pinned on a
+    request: every live request gets a structured error, the packed cache
+    is rebuilt, and the requests still queued are served normally."""
+    scfg = ServeConfig(**_SCFG)
+    eng = _toy_batched(scfg)
+    step_exe = eng._exe[("step",)]
+    state = {"fired": False}
+
+    def exploding(*args):
+        if not state["fired"]:
+            state["fired"] = True
+            raise RuntimeError("XLA step blew up")
+        return step_exe(*args)
+
+    eng._exe[("step",)] = exploding
+    reqs = [Request(i, [i % V], max_new=3) for i in range(5)]
+    res = serve_requests(eng, reqs)
+    assert set(res) == set(range(5))
+    failed = [r for r, v in res.items() if isinstance(v, RequestError)]
+    served = [r for r, v in res.items() if not isinstance(v, RequestError)]
+    assert failed and served              # first wave failed, rest served
+    for rid in failed:
+        assert res[rid].status == "error"
+        assert "XLA step blew up" in res[rid].detail
+    for rid in served:
+        assert res[rid] == _expected(reqs[rid].prompt, 3), rid
+
+
+def test_serving_preflight_degrades_batched_to_per_slot():
+    """Degradation ladder: a broken batched adapter with per-slot closures
+    available falls back instead of refusing."""
+    scfg = ServeConfig(**_SCFG)
+    per = _toy_per_slot(scfg)
+
+    class BrokenAdapter:
+        def init_slots(self, slots, abstract=False):
+            raise RuntimeError("no packed cache today")
+
+    eng = ServingEngine(scfg, per.prefill_fn, per.decode_fn,
+                        batched=BrokenAdapter())
+    reqs = [Request(i, [i % V], max_new=2) for i in range(3)]
+    res = serve_requests(eng, reqs)
+    assert eng.degraded is not None and eng.degraded[0] == "per-slot"
+    for r in reqs:
+        assert res[r.rid] == _expected(r.prompt, 2)
+
+
+@pytest.mark.parametrize("variant", ["per_slot", "batched"])
+def test_serving_preemption_drains_and_answers_everything(variant):
+    scfg = ServeConfig(**_SCFG)
+    eng = (_toy_per_slot if variant == "per_slot" else _toy_batched)(scfg)
+    eng.stop_flag = lambda: True          # preempted before the first wave
+    reqs = [Request(i, [i % V], max_new=3) for i in range(6)]
+    res = serve_requests(eng, reqs)
+    assert set(res) == set(range(6))      # no request goes unanswered
+    assert all(isinstance(v, RequestError) and v.status == "preempted"
+               for v in res.values())
+
+
+def test_serving_under_channel_faults_still_completes():
+    """The serving task graph itself runs under channel-level chaos: the
+    request/output channels stall and wake late, yet every request
+    completes with the right tokens."""
+    scfg = ServeConfig(**_SCFG)
+    eng = _toy_per_slot(scfg)
+    reqs = [Request(i, [(2 * i) % V], max_new=3) for i in range(5)]
+    plan = FaultPlan(seed=SEED,
+                     chan_stall={"*": {"p": 0.3, "stall": 2, "wake": 1}})
+    res = serve_requests(eng, reqs, faults=plan, watchdog_s=30.0)
+    for r in reqs:
+        assert res[r.rid] == _expected(r.prompt, 3), r.rid

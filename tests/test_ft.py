@@ -1,0 +1,126 @@
+"""Fault-tolerance units: PreemptionGuard handler lifecycle and the
+StragglerDetector's EMA/strike logic (direct tests — previously these were
+only exercised indirectly through the train driver)."""
+
+import signal
+
+import pytest
+
+from repro.ft import PreemptionGuard, StragglerDetector
+
+
+# ---------------------------------------------------------------------------
+# PreemptionGuard
+# ---------------------------------------------------------------------------
+
+def test_guard_install_uninstall_restores_handlers_exactly():
+    before = {s: signal.getsignal(s) for s in (signal.SIGTERM, signal.SIGINT)}
+    g = PreemptionGuard()
+    assert g.installed
+    for s in before:
+        assert signal.getsignal(s) == g._handler
+    g.uninstall()
+    assert not g.installed
+    for s, h in before.items():
+        assert signal.getsignal(s) == h
+
+
+def test_guard_uninstall_is_idempotent_and_reinstallable():
+    before = {s: signal.getsignal(s) for s in (signal.SIGTERM, signal.SIGINT)}
+    g = PreemptionGuard()
+    g.uninstall()
+    g.uninstall()                         # second call: no-op, no error
+    for s, h in before.items():
+        assert signal.getsignal(s) == h
+    g.install()                           # the same guard can come back
+    assert g.installed
+    g.uninstall()
+    for s, h in before.items():
+        assert signal.getsignal(s) == h
+
+
+def test_guard_double_install_rejected():
+    g = PreemptionGuard()
+    try:
+        with pytest.raises(ValueError):
+            g.install()
+    finally:
+        g.uninstall()
+
+
+def test_nested_guards_lifo_restore():
+    before = signal.getsignal(signal.SIGTERM)
+    outer = PreemptionGuard()
+    inner = PreemptionGuard()
+    assert signal.getsignal(signal.SIGTERM) == inner._handler
+    inner.uninstall()
+    # inner saved outer's handler, so LIFO uninstall restores it exactly
+    assert signal.getsignal(signal.SIGTERM) == outer._handler
+    outer.uninstall()
+    assert signal.getsignal(signal.SIGTERM) == before
+
+
+def test_guard_context_manager_and_trigger():
+    before = signal.getsignal(signal.SIGINT)
+    with PreemptionGuard() as g:
+        assert not g.requested
+        g.trigger()                       # in-process preemption drill
+        assert g.requested
+    assert not g.installed
+    assert signal.getsignal(signal.SIGINT) == before
+
+
+def test_guard_handler_sets_requested_without_raising():
+    g = PreemptionGuard(install=False)
+    assert not g.installed
+    g._handler(signal.SIGTERM, None)
+    assert g.requested
+    g.uninstall()                         # never installed: still a no-op
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector
+# ---------------------------------------------------------------------------
+
+def test_straggler_warmup_first_observation_is_baseline():
+    d = StragglerDetector()
+    assert d.observe(1.0) is False        # first sample seeds the EMA
+    assert d.mean == 1.0
+    assert not d.flagged
+
+
+def test_straggler_flags_after_patience_consecutive_outliers():
+    d = StragglerDetector(z=3.0, patience=3)
+    for _ in range(10):
+        d.observe(1.0)
+    assert not d.flagged
+    assert d.observe(10.0) is True        # strike 1
+    assert not d.flagged
+    assert d.observe(10.0) is True        # strike 2
+    assert not d.flagged
+    assert d.observe(10.0) is True        # strike 3 -> flagged
+    assert d.flagged
+
+
+def test_straggler_recovery_resets_patience():
+    d = StragglerDetector(z=3.0, patience=3)
+    for _ in range(10):
+        d.observe(1.0)
+    d.observe(10.0)
+    d.observe(10.0)                       # two strikes ...
+    assert d.observe(1.0) is False        # ... recovery resets the count
+    d.observe(10.0)
+    d.observe(10.0)
+    assert not d.flagged                  # two fresh strikes still < patience
+    d.observe(10.0)
+    assert d.flagged
+
+
+def test_straggler_outliers_do_not_poison_the_baseline():
+    d = StragglerDetector(z=3.0, patience=100)
+    for _ in range(20):
+        d.observe(1.0)
+    mean_before = d.mean
+    d.observe(50.0)                       # outlier: excluded from the EMA
+    assert d.mean == mean_before
+    assert d.observe(1.0) is False        # healthy steps still healthy

@@ -456,6 +456,12 @@ def test_compiled_deadlock_reports_blocked_task():
     assert "Sink" in rep.error and "stalled" in rep.error
     states = dict(rep.instances)
     assert any(v == "blocked" for v in states.values())
+    # unified watchdog: the compiled engine emits the same structured
+    # DeadlockReport the software engines do (reason "stall")
+    assert rep.deadlock is not None
+    assert rep.deadlock.engine == "compiled"
+    assert rep.deadlock.reason == "stall"
+    assert any("Sink" in t for t, _ in rep.deadlock.blocked)
 
 
 @pytest.mark.slow
