@@ -1,0 +1,98 @@
+"""CI crash-recovery drill: SIGKILL the serving driver mid-stream.
+
+Starts ``repro.launch.serve --journal``, waits until the write-ahead
+journal shows real decode progress, delivers SIGKILL (no cleanup, no
+signal handler — the preemption guard never runs), then re-runs the
+identical command.  The restarted process must drain the journal and
+answer every request exactly once: retired rids straight from the
+journal, in-flight rids resumed at their last journaled token.
+
+Exit code 0 only if the kill really landed mid-stream (requests were
+in flight) and the restart retired every request.
+"""
+
+import json
+import os
+import re
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.serve import ServeJournal  # noqa: E402
+
+N_REQS = 8
+
+
+def main() -> int:
+    env = {**os.environ, "PYTHONPATH": str(ROOT / "src"),
+           "JAX_PLATFORMS": "cpu"}
+    work = Path(tempfile.mkdtemp(prefix="serve_sigkill_"))
+    jp = work / "journal.jsonl"
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--per-slot",
+           "--requests", str(N_REQS), "--max-new", "24", "--slots", "2",
+           "--journal", str(jp)]
+
+    print("[drill] starting victim:", " ".join(cmd))
+    p = subprocess.Popen(cmd, cwd=ROOT, env=env,
+                         stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+                         text=True)
+    deadline = time.time() + 600
+    try:
+        while time.time() < deadline:
+            if jp.exists():
+                toks = sum(1 for line in open(jp) if '"t":"tok"' in line)
+                if toks >= 8:
+                    break
+            if p.poll() is not None:
+                print(p.communicate()[0][-4000:])
+                print("[drill] FAIL: victim finished before the kill")
+                return 1
+            time.sleep(0.05)
+        else:
+            print("[drill] FAIL: no journal progress before deadline")
+            return 1
+        p.send_signal(signal.SIGKILL)
+        p.wait(timeout=60)
+    finally:
+        if p.poll() is None:
+            p.kill()
+    print(f"[drill] SIGKILL delivered (exit {p.returncode})")
+
+    completed, inflight = ServeJournal.replay(jp)
+    print(f"[drill] journal at kill: {len(completed)} retired, "
+          f"{len(inflight)} in-flight")
+    if not inflight:
+        print("[drill] FAIL: kill landed after all requests finished")
+        return 1
+
+    print("[drill] restarting with the same command + journal")
+    r = subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True,
+                       text=True, timeout=600)
+    sys.stdout.write(r.stdout[-4000:])
+    if r.returncode != 0:
+        sys.stdout.write(r.stderr[-4000:])
+        print("[drill] FAIL: restarted driver exited", r.returncode)
+        return 1
+
+    completed, inflight = ServeJournal.replay(jp)
+    if inflight or sorted(completed) != list(range(N_REQS)):
+        print(f"[drill] FAIL: journal not drained "
+              f"(retired={sorted(completed)}, inflight={sorted(inflight)})")
+        return 1
+    # the restarted driver must have answered each rid exactly once
+    answered = re.findall(r"\[serve\] req (\d+):", r.stdout)
+    if sorted(int(a) for a in answered) != list(range(N_REQS)):
+        print(f"[drill] FAIL: answered rids {answered}")
+        return 1
+    print("[drill] OK: exactly-once drain after SIGKILL")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -232,23 +232,40 @@ def fault_overhead(n_tokens: int = 20000, stages: int = 8,
     An armed-but-empty :class:`repro.FaultPlan` must leave the coroutine
     scalar fast path intact (``affects_channels`` is False, so the engine
     keeps ``_chan_faults = None`` and ``fast_path`` on) — the acceptance
-    bar is < 5% overhead versus a run with no injector at all.  The two
-    variants are interleaved within each repeat so host drift cancels.
+    bar is < 5% overhead versus a run with no injector at all.  The same
+    bar applies to supervised execution with snapshots disabled
+    (``repro.ft.run_supervised`` with ``store=None``), which must delegate
+    straight to the plain engine.  All variants are interleaved within
+    each repeat so host drift cancels.
     """
     from repro import FaultPlan
-    best: dict = {"baseline": None, "noop_plan": None}
+    from repro.ft import run_supervised
+
+    def _plain(plan, top):
+        return repro.ENGINES["coroutine"](faults=plan).run(top)
+
+    def _supervised(plan, top):
+        return run_supervised("coroutine", top, store=None, faults=plan)
+
+    variants = (("baseline", None, _plain),
+                ("noop_plan", FaultPlan(), _plain),
+                ("supervised", None, _supervised))
+    best: dict = {label: None for label, _, _ in variants}
     for _ in range(repeats):
-        for label, plan in (("baseline", None), ("noop_plan", FaultPlan())):
+        for label, plan, runner in variants:
             top, total = _build_pipeline(n_tokens, stages, capacity, 0)
-            rep = repro.ENGINES["coroutine"](faults=plan).run(top)
+            rep = runner(plan, top)
             assert rep.ok, (label, rep.error)
             assert total[0] == n_tokens, (label, total[0])
             if best[label] is None or rep.wall_s < best[label]:
                 best[label] = rep.wall_s
     pct = (best["noop_plan"] / best["baseline"] - 1.0) * 100
+    sup_pct = (best["supervised"] / best["baseline"] - 1.0) * 100
     return {"baseline_wall_s": round(best["baseline"], 6),
             "noop_plan_wall_s": round(best["noop_plan"], 6),
-            "overhead_pct": round(pct, 2)}
+            "overhead_pct": round(pct, 2),
+            "supervised_wall_s": round(best["supervised"], 6),
+            "supervised_overhead_pct": round(sup_pct, 2)}
 
 
 def write_bench_json(thr: dict, apps: Optional[dict] = None) -> None:
@@ -316,6 +333,8 @@ def main(argv=None) -> dict:
     thr["fault_overhead"] = fo
     print(f"no-op fault-plan overhead on coroutine scalar_fast: "
           f"{fo['overhead_pct']}% (acceptance bar: < 5%)")
+    print(f"snapshot-disabled supervisor overhead: "
+          f"{fo['supervised_overhead_pct']}% (same bar)")
     print_throughput(thr)
     write_bench_json(thr, apps=out or None)
     print(f"wrote {BENCH_JSON}")
@@ -335,6 +354,12 @@ def main(argv=None) -> dict:
     if fo["overhead_pct"] > fo_bar:
         print(f"FAULT-OVERHEAD REGRESSION: no-op plan costs "
               f"{fo['overhead_pct']}% > allowed {fo_bar}%")
+        out["fault_overhead_regression"] = True
+    # recovery gate: the supervisor with snapshots disabled must be a
+    # plain-engine delegation, not a second scheduling layer
+    if fo["supervised_overhead_pct"] > fo_bar:
+        print(f"FAULT-OVERHEAD REGRESSION: snapshot-disabled supervisor "
+              f"costs {fo['supervised_overhead_pct']}% > allowed {fo_bar}%")
         out["fault_overhead_regression"] = True
     return out
 

@@ -122,6 +122,7 @@ class CheckpointManager:
             faults = faults.injector()
         self.faults = faults
         self._thread: Optional[threading.Thread] = None
+        self._thread_exc: Optional[BaseException] = None
 
     # -- write ---------------------------------------------------------------
     def save(self, step: int, params: Params, opt_state: Params,
@@ -183,14 +184,33 @@ class CheckpointManager:
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            # a daemon thread swallows exceptions by default; capture the
+            # first failure so wait() (and therefore the next save()) can
+            # re-raise it instead of silently dropping the step
+            def guarded():
+                try:
+                    write()
+                except BaseException as e:  # noqa: BLE001 - re-raised in wait
+                    self._thread_exc = e
+
+            self._thread = threading.Thread(target=guarded, daemon=True)
             self._thread.start()
         return self.dir / f"step_{step:08d}"
 
     def wait(self) -> None:
+        """Join the in-flight async write, re-raising its failure (if any).
+
+        An async save that died in the background — persistent IO error,
+        full disk — would otherwise look exactly like a successful save
+        until restore time; surfacing it at the next synchronization point
+        keeps the at-most-one-lost-step contract honest.
+        """
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._thread_exc is not None:
+            exc, self._thread_exc = self._thread_exc, None
+            raise exc
 
     def _gc(self) -> None:
         steps = sorted(self.steps())

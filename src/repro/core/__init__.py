@@ -14,10 +14,11 @@ from .compile_cache import (CacheStats, CompileCache, aval_signature,
                             structural_digest)
 from .engines import (ENGINES, CoroutineEngine, EngineBase, SequentialEngine,
                       SimReport, ThreadEngine, run)
-from .errors import (ChannelMisuse, Deadlock, DeadlockError, DeadlockReport,
-                     EndOfTransaction, GraphValidationError, InjectedFault,
-                     PoisonError, ReproError, SequentialSimulationError,
-                     SynthesisError, TaskKilled, TransientFault)
+from .errors import (ChannelMisuse, CrashFault, Deadlock, DeadlockError,
+                     DeadlockReport, EndOfTransaction, GraphValidationError,
+                     InjectedFault, PoisonError, ReproError,
+                     SequentialSimulationError, SynthesisError, TaskKilled,
+                     TransientFault)
 from .faults import FaultInjector, FaultPlan
 from .graph import (ChannelInfo, DefinitionInfo, Graph, InterfaceInfo,
                     elaborate, extract_graph)
@@ -26,7 +27,8 @@ from .hier_compile import (CompileReport, DataflowProgram, StageInstance,
 from .interface import (AsyncMMap, Interface, InterfaceBinding, MMap,
                         Scalar, async_mmap, mmap, scalar)
 from .invoke import invoke
-from .synth import CompiledEngine, StepTask     # registers ENGINES["compiled"]
+from .synth import (CompiledEngine, StepTask,   # registers ENGINES["compiled"]
+                    elaborate_step_graph)
 from .task import TaskBuilder, TaskInstance, task
 
 __all__ = [
@@ -46,4 +48,5 @@ __all__ = [
     "AsyncMMap", "Interface", "InterfaceBinding", "MMap", "Scalar",
     "async_mmap", "mmap", "scalar",
     "ChannelInfo", "CompiledEngine", "StepTask", "SynthesisError",
+    "CrashFault", "elaborate_step_graph",
 ]

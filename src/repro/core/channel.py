@@ -128,6 +128,10 @@ class Channel(Generic[T]):
         # requires both, simulation enforces them under track_stats.
         self.dtype = _norm_dtype(dtype)
         self.shape = tuple(shape) if shape is not None else None
+        # ``_q``/``_eot_count``/waiters are also the channel's *snapshot
+        # surface*: ft/recovery.py capture_channel/restore_channel freeze
+        # and rebuild exactly these between runs (never mid-run), so any
+        # new mutable field here needs a matching capture.
         self._q: deque = deque()
         # Per-channel waiter lists (coroutine engine: (fiber, epoch) pairs).
         self._rwait: deque = deque()

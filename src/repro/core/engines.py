@@ -58,8 +58,8 @@ from typing import Any, Callable, Optional
 
 from .channel import Channel, READABLE, WRITABLE
 from .context import clear_context, current_task, set_context
-from .errors import (Deadlock, DeadlockError, DeadlockReport, InjectedFault,
-                     SequentialSimulationError, TaskKilled)
+from .errors import (CrashFault, Deadlock, DeadlockError, DeadlockReport,
+                     InjectedFault, SequentialSimulationError, TaskKilled)
 from .faults import FaultInjector, FaultPlan
 from .interface import AsyncMMap, MMap
 from .task import (TaskInstance, bind_streams, builder_stack_depth,
@@ -98,6 +98,10 @@ class SimReport:
     # the run failed with a deadlock / stall / watchdog trip; the legacy
     # ``error`` string is preserved unchanged for existing consumers
     deadlock: Any = None
+    # the exception object behind a task-failure ``error`` string, when the
+    # engine still holds it; lets supervisors (repro.ft.recovery) classify
+    # failures — e.g. CrashFault vs. a genuine bug — without string matching
+    failure: Optional[BaseException] = None
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         s = "ok" if self.ok else f"FAILED({self.error})"
@@ -344,7 +348,8 @@ class EngineBase:
                 self._ports.append(it)
 
     def _report(self, ok: bool, wall: float, err: Optional[str],
-                result: Any = None) -> SimReport:
+                result: Any = None,
+                failure: Optional[BaseException] = None) -> SimReport:
         chans = sorted(self.channel_set, key=lambda c: c.uid)
         ifaces = sorted(self.interface_set, key=lambda i: i.uid)
         return SimReport(
@@ -360,6 +365,7 @@ class EngineBase:
             interfaces=[(i.name, i.iface_kind, i.stats()) for i in ifaces],
             result=result,
             deadlock=self._deadlock_report,
+            failure=failure,
         )
 
     def run(self, top: Callable, *args, **kwargs) -> SimReport:
@@ -537,10 +543,10 @@ class SequentialEngine(EngineBase):
             return self._report(True, time.perf_counter() - t0, None, result)
         except (SequentialSimulationError, DeadlockError) as e:
             return self._report(False, time.perf_counter() - t0, str(e))
-        except InjectedFault as e:
+        except (InjectedFault, CrashFault) as e:
             # parity with the concurrent engines' task-failure reporting
             return self._report(False, time.perf_counter() - t0,
-                                f"task error: {e!r}")
+                                f"task error: {e!r}", failure=e)
         finally:
             clear_context()
 
@@ -961,7 +967,8 @@ class ThreadEngine(EngineBase):
             th.join(timeout=5.0)
         wall = time.perf_counter() - t0
         if self._failure is not None:
-            return self._report(False, wall, f"task error: {self._failure!r}")
+            return self._report(False, wall, f"task error: {self._failure!r}",
+                                failure=self._failure)
         if self._deadlocked:
             rep = self._deadlock_report
             return self._report(False, wall,
@@ -1413,7 +1420,8 @@ class CoroutineEngine(EngineBase):
                 # watchdog trip inside a fiber: already carries the report
                 return self._report(False, wall, str(self._failure))
             return self._report(False, wall,
-                                f"task error: {self._failure!r}")
+                                f"task error: {self._failure!r}",
+                                failure=self._failure)
         if deadlock:
             return self._report(
                 False, wall, f"deadlock; blocked tasks: {blocked_names}")

@@ -70,6 +70,18 @@ class TransientFault(ReproError):
     """An injected *retryable* failure (serving step, artifact IO)."""
 
 
+class CrashFault(ReproError):
+    """An injected process-crash analogue (``FaultPlan.crash``).
+
+    Unlike :class:`InjectedFault` — which models a task *dying* and is
+    surfaced as a structured task failure — a ``CrashFault`` models the
+    whole simulation process disappearing mid-run.  It is the fault kind
+    the recovery subsystem (:mod:`repro.ft.recovery`) exists for: a
+    supervisor catches it, restores the latest :class:`GraphSnapshot`
+    and re-runs from the snapshot instead of from scratch.
+    """
+
+
 class PoisonError(ReproError):
     """A serving request whose compute step is poisoned by the fault plan.
 

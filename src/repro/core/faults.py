@@ -37,7 +37,7 @@ import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
-from .errors import InjectedFault, PoisonError, TransientFault
+from .errors import CrashFault, InjectedFault, PoisonError, TransientFault
 
 __all__ = ["FaultPlan", "FaultInjector"]
 
@@ -65,6 +65,16 @@ class FaultPlan:
     task_raise
         ``{task_name: n}`` — the task's n-th channel op (0-based, program
         order, engine-independent) raises :class:`InjectedFault`.
+    crash
+        ``{task_name | "chunk": n}`` — process-crash analogue for the
+        recovery subsystem.  A task-name site raises :class:`CrashFault`
+        at that task's n-th channel op (same 0-based, engine-independent
+        counting as ``task_raise``); the reserved site ``"chunk"`` fires
+        at the n-th chunk boundary consulted via
+        :meth:`FaultInjector.crash_point` (how the compiled engine, which
+        has no per-op hook, gets crashed).  Each site fires at most once
+        per injector, so a supervisor that reuses the injector across
+        restart attempts does not re-crash the recovered run.
     mem_spike
         ``{port_name | "*": {"p": prob, "extra": ticks}}`` — AsyncMMap
         requests take ``extra`` additional ticks with probability ``p``.
@@ -96,6 +106,7 @@ class FaultPlan:
     seed: int = 0
     chan_stall: Dict[str, dict] = field(default_factory=dict)
     task_raise: Dict[str, int] = field(default_factory=dict)
+    crash: Dict[str, int] = field(default_factory=dict)
     mem_spike: Dict[str, dict] = field(default_factory=dict)
     cache_corrupt: int = 0
     cache_io_errors: int = 0
@@ -129,11 +140,14 @@ class FaultInjector:
         self._transient_left = dict(plan.transient)
         self._truncated: set = set()
         self._cancel_fired: set = set()
+        self._crash_fired: set = set()
+        self._crash_points: Dict[str, int] = {}   # site -> boundaries seen
 
     # -- classification (lets engines skip consults entirely) ------------
     @property
     def affects_channels(self) -> bool:
-        return bool(self.plan.chan_stall) or bool(self.plan.task_raise)
+        return (bool(self.plan.chan_stall) or bool(self.plan.task_raise)
+                or any(site != "chunk" for site in self.plan.crash))
 
     @property
     def affects_memory(self) -> bool:
@@ -143,23 +157,46 @@ class FaultInjector:
         self.log.append(event)
 
     # -- channel / task faults (engines' push/pop/burst paths) ------------
+    @staticmethod
+    def _site_target(table: Dict[str, int], task_name: str):
+        """Plan lookup with bare-definition-name fallback (a key like
+        ``"Relay"`` applies to every instance ``"Relay#k"``)."""
+        target = table.get(task_name)
+        if target is None and "#" in task_name:
+            target = table.get(task_name.split("#", 1)[0])
+        return target
+
     def chan_op(self, chan_name: str, op: str, task_name: str):
         """One task-side channel op.  Returns ``(stall, wake)`` tick delays;
-        may raise :class:`InjectedFault` at the task's chosen firing."""
+        may raise :class:`InjectedFault` (``task_raise``) or
+        :class:`CrashFault` (``crash``) at the task's chosen firing."""
         tr = self.plan.task_raise
-        if tr:
+        cr = self.plan.crash
+        if tr or cr:
             # counters are per *instance* (task_name is unique, e.g.
             # "Relay#2"); plan keys may use the bare definition name,
             # which then applies to every instance of it
             n = self._task_ops.get(task_name, -1) + 1
             self._task_ops[task_name] = n
-            target = tr.get(task_name)
-            if target is None and "#" in task_name:
-                target = tr.get(task_name.split("#", 1)[0])
-            if target == n:
+            if tr and self._site_target(tr, task_name) == n:
                 self.record("task_raise", task_name, n)
                 raise InjectedFault(
                     f"injected failure in task {task_name!r} at channel op {n}")
+            if cr:
+                # fired-ness is keyed by the *plan key* that matched, not
+                # the instance name: restarts re-instantiate tasks with
+                # fresh uids ("Relay#82" -> "Relay#96"), and a crash site
+                # must fire exactly once per injector so the supervised
+                # retry survives it
+                key = task_name if task_name in cr else (
+                    task_name.split("#", 1)[0] if "#" in task_name else None)
+                if key is not None and key not in self._crash_fired and \
+                        cr.get(key) == n:
+                    self._crash_fired.add(key)
+                    self.record("crash", task_name, n)
+                    raise CrashFault(
+                        f"injected crash in task {task_name!r} "
+                        f"at channel op {n}")
         spec = (self.plan.chan_stall.get(chan_name)
                 or self.plan.chan_stall.get("*"))
         if not spec:
@@ -172,6 +209,27 @@ class FaultInjector:
         wake = int(spec.get("wake", 0))
         self.record("chan", chan_name, op, k, stall, wake)
         return stall, wake
+
+    def crash_point(self, site: str = "chunk") -> None:
+        """One non-channel crash site (e.g. a recovery chunk boundary).
+
+        Consulted by the supervised chunk loop between chunks — this is
+        how the compiled engine, whose execution is one opaque
+        ``lax.while_loop``, gets crashed at a deterministic point.
+        Raises :class:`CrashFault` at the site's n-th consultation (same
+        0-based counting as channel-op sites); fires at most once per
+        injector so the recovered attempt runs through.
+        """
+        target = self.plan.crash.get(site)
+        if target is None:
+            return
+        n = self._crash_points.get(site, -1) + 1
+        self._crash_points[site] = n
+        if site not in self._crash_fired and target == n:
+            self._crash_fired.add(site)
+            self.record("crash", site, n)
+            raise CrashFault(
+                f"injected crash at {site!r} boundary {n}")
 
     # -- memory faults (AsyncMMap.pump) -----------------------------------
     def mem_delay(self, port: str, direction: str, base: int, clock: int) -> int:

@@ -324,6 +324,7 @@ class AsyncMMap(Interface):
                  "read_addr", "read_data", "write_addr", "write_data",
                  "write_resp", "_binding",
                  "_pending_reads", "_pending_writes",
+                 "_inflight_reads", "_inflight_writes",
                  "read_reqs", "write_reqs", "read_resps", "write_resps",
                  "max_outstanding_reads", "max_outstanding_writes")
 
@@ -356,6 +357,13 @@ class AsyncMMap(Interface):
         # accepted-but-undelivered request counts
         self._pending_reads = 0
         self._pending_writes = 0
+        # accepted-but-undelivered request *payloads*, in acceptance order
+        # (delivery is FIFO per direction, see pump()).  The engines never
+        # read these — they exist so a GraphSnapshot (repro.ft.recovery)
+        # can re-materialize in-flight requests, which otherwise live only
+        # as closures in the engine's event heap.
+        self._inflight_reads: list = []
+        self._inflight_writes: list = []
         self._binding: Optional[InterfaceBinding] = None
         # statistics (request-granular, always on: acceptance is not the
         # per-token hot path)
@@ -388,6 +396,8 @@ class AsyncMMap(Interface):
         self.owner = None
         self._binding = None
         self._pending_reads = self._pending_writes = 0
+        self._inflight_reads = []
+        self._inflight_writes = []
         self.read_reqs = self.write_reqs = 0
         self.read_resps = self.write_resps = 0
         self.max_outstanding_reads = self.max_outstanding_writes = 0
@@ -452,6 +462,7 @@ class AsyncMMap(Interface):
             if self._binding is not None:
                 self._binding.direction.add("read")
             self._pending_reads += 1
+            self._inflight_reads.append(addr)
             self.read_reqs += 1
             if self._pending_reads > self.max_outstanding_reads:
                 self.max_outstanding_reads = self._pending_reads
@@ -467,6 +478,7 @@ class AsyncMMap(Interface):
             if self._binding is not None:
                 self._binding.direction.add("write")
             self._pending_writes += 1
+            self._inflight_writes.append((addr, value))
             self.write_reqs += 1
             if self._pending_writes > self.max_outstanding_writes:
                 self.max_outstanding_writes = self._pending_writes
@@ -487,6 +499,8 @@ class AsyncMMap(Interface):
             v = v.copy()
         engine._iface_deliver(self._rdata, v)
         self._pending_reads -= 1
+        if self._inflight_reads:
+            self._inflight_reads.pop(0)   # FIFO per direction
         self.read_resps += 1
         self.pump(engine)       # a window slot freed: accept queued requests
         return True
@@ -498,6 +512,8 @@ class AsyncMMap(Interface):
         self.data[addr] = value
         engine._iface_deliver(self._wresp, True)
         self._pending_writes -= 1
+        if self._inflight_writes:
+            self._inflight_writes.pop(0)  # FIFO per direction
         self.write_resps += 1
         self.pump(engine)
         return True

@@ -658,30 +658,40 @@ def _count_phase(plan: _Plan, tp: _TaskPlan, label: str, fn: Callable,
 # the whole-graph program
 # ---------------------------------------------------------------------------
 
-def _build_program(plan: _Plan) -> Callable:
+def _build_program(plan: _Plan, resumable: bool = False) -> Callable:
     """One jitted function for the whole graph.
 
     carry = (chans, states, mmaps, fires, progress, sweeps, maxocc); one
     while_loop iteration is one *sweep*: every task instance gets one
     guarded chance to fire.  The loop runs until every task exhausted its
     firing budget, or a full sweep made no progress (the compiled analogue
-    of the engines' deadlock detection)."""
+    of the engines' deadlock detection).
+
+    With ``resumable=True`` the program instead takes the full channel
+    state, the firing counters and a sweep budget as inputs and returns
+    the complete carry: ``program(states0, mmaps0, chans0, fires0,
+    max_sweeps)`` runs at most ``max_sweeps`` sweeps and hands back
+    ``(chans, states, mmaps, fires, progress, sweeps, maxocc, sizes)`` —
+    the ``lax.while_loop`` carry *is* the snapshot, which is how the
+    recovery subsystem (:mod:`repro.ft.recovery`) checkpoints compiled
+    runs between carry sweeps.  Both variants trace the identical sweep
+    body, so a chunked resumable run lands on the same fires — and
+    therefore bit-identical channel/mmap contents — as one uninterrupted
+    program."""
     caps = [c.capacity for c in plan.channels]
     totals = np.asarray([tp.total for tp in plan.tasks], np.int32)
     n_chans = len(plan.channels)
 
-    def program(states0: tuple, mmaps0: tuple):
-        chans0 = tuple(
-            (jnp.zeros((c.capacity,) + c.shape, _canon_dtype(c.dtype)),
-             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
-            for c in plan.channels)
+    def _run_loop(chans0, states0, mmaps0, fires0, budget):
         totals_v = jnp.asarray(totals)
-        fires0 = jnp.zeros((len(plan.tasks),), jnp.int32)
         maxocc0 = jnp.zeros((max(n_chans, 1),), jnp.int32)
 
         def cond(carry):
-            _, _, _, fires, progress, _, _ = carry
-            return progress & jnp.any(fires < totals_v)
+            _, _, _, fires, progress, sweeps, _ = carry
+            live = progress & jnp.any(fires < totals_v)
+            if budget is not None:
+                live = live & (sweeps < budget)
+            return live
 
         def body(carry):
             chans, states, mmaps, fires, _, sweeps, maxocc = carry
@@ -742,10 +752,31 @@ def _build_program(plan: _Plan) -> Callable:
         carry0 = (chans0, tuple(states0), tuple(mmaps0), fires0,
                   jnp.ones((), jnp.bool_), jnp.zeros((), jnp.int32),
                   maxocc0)
-        chans, states, mmaps, fires, _, sweeps, maxocc = \
-            jax.lax.while_loop(cond, body, carry0)
-        sizes = jnp.stack([c[2] for c in chans]) if n_chans else maxocc0
-        return tuple(mmaps), fires, sweeps, maxocc, sizes
+        return jax.lax.while_loop(cond, body, carry0)
+
+    if resumable:
+        def program(states0: tuple, mmaps0: tuple, chans0: tuple,
+                    fires0, max_sweeps):
+            chans, states, mmaps, fires, progress, sweeps, maxocc = \
+                _run_loop(tuple(tuple(c) for c in chans0), states0, mmaps0,
+                          jnp.asarray(fires0, jnp.int32),
+                          jnp.asarray(max_sweeps, jnp.int32))
+            sizes = (jnp.stack([c[2] for c in chans]) if n_chans
+                     else jnp.zeros((1,), jnp.int32))
+            return (tuple(chans), tuple(states), tuple(mmaps), fires,
+                    progress, sweeps, maxocc, sizes)
+    else:
+        def program(states0: tuple, mmaps0: tuple):
+            chans0 = tuple(
+                (jnp.zeros((c.capacity,) + c.shape, _canon_dtype(c.dtype)),
+                 jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+                for c in plan.channels)
+            fires0 = jnp.zeros((len(plan.tasks),), jnp.int32)
+            chans, states, mmaps, fires, _, sweeps, maxocc = _run_loop(
+                chans0, states0, mmaps0, fires0, None)
+            sizes = (jnp.stack([c[2] for c in chans]) if n_chans
+                     else jnp.zeros((max(n_chans, 1),), jnp.int32))
+            return tuple(mmaps), fires, sweeps, maxocc, sizes
 
     return program
 
@@ -943,15 +974,24 @@ class CompiledEngine(EngineBase):
         return h.hexdigest()
 
     # -- run -----------------------------------------------------------------
-    def run(self, top: Callable, *args, **kwargs) -> SimReport:
-        t0 = time.perf_counter()
+    def _elaborate(self, top: Callable, *args, **kwargs):
+        """Execute the wiring bodies and lower to a plan, without running
+        the compiled program.  Returns ``(plan, graph, result)`` — the
+        shared front half of :meth:`run`, also used by the recovery
+        subsystem to build its chunk schedule.  The caller owns
+        ``clear_context()``."""
         root = TaskInstance(top, args, kwargs, detach=False, parent=None,
                             name=getattr(top, "__name__", "top"))
         set_context(self, None)
         self._register(root)
+        result = self._exec(root)
+        plan, graph = self._lower()
+        return plan, graph, result
+
+    def run(self, top: Callable, *args, **kwargs) -> SimReport:
+        t0 = time.perf_counter()
         try:
-            result = self._exec(root)
-            plan, graph = self._lower()
+            plan, graph, result = self._elaborate(top, *args, **kwargs)
             states0 = tuple(tp.state0 for tp in plan.tasks)
             mmaps0 = tuple(jnp.asarray(m.data) for m in plan.mmaps)
             program = _build_program(plan)
@@ -1038,6 +1078,30 @@ class CompiledEngine(EngineBase):
                         plan.mmaps[mi].store_elems += n * k
         for c, occ in zip(plan.channels, maxocc):
             c.max_occupancy = int(occ)
+
+
+def elaborate_step_graph(top: Callable, *args, **kwargs):
+    """Elaborate a step-form graph without executing it.
+
+    Runs the wiring bodies under a throwaway :class:`CompiledEngine` and
+    returns ``(plan, graph, result)`` — the lowering plan (task order,
+    phase I/O rates, channel/mmap tables), the validated graph IR, and
+    the top body's return value.  Raises :class:`SynthesisError` for
+    graphs outside the synthesizable subset.  This is the entry point
+    the recovery subsystem uses to derive its abstract sweep schedule:
+    the plan it returns is byte-for-byte the one ``CompiledEngine.run``
+    would lower, so chunk quotas computed from it apply to every engine.
+
+    NOTE: elaboration *executes the wiring bodies*, which binds channel
+    endpoints to the throwaway engine's task instances.  Callers that
+    re-run the same channel objects under another engine must reset the
+    endpoints first (see ``repro.ft.recovery._reset_endpoints``).
+    """
+    eng = CompiledEngine()
+    try:
+        return eng._elaborate(top, *args, **kwargs)
+    finally:
+        clear_context()
 
 
 ENGINES["compiled"] = CompiledEngine

@@ -276,6 +276,9 @@ class TaskBuilder:
 
     def invoke(self, fn: Callable, *args, detach: bool = False,
                name: Optional[str] = None, **kwargs) -> "TaskBuilder":
+        # an explicit ``name`` is preserved exactly (no uid suffix) —
+        # crash-fault sites and recovery chunk re-invocation
+        # (ft/recovery.py) rely on stable instance names across restarts
         inst = TaskInstance(fn, args, kwargs, detach, self._parent, name)
         if self._parent is not None:
             self._parent.children.append(inst)

@@ -1,5 +1,11 @@
 from .elastic import (ElasticMesh, PreemptionGuard, StragglerDetector,
                       resume_or_init)
+from .recovery import (GraphSnapshot, RestartPolicy, SnapshotStore,
+                       capture_channel, capture_port, restore_channel,
+                       restore_port, run_recoverable, run_supervised)
 
 __all__ = ["ElasticMesh", "PreemptionGuard", "StragglerDetector",
-           "resume_or_init"]
+           "resume_or_init", "GraphSnapshot", "RestartPolicy",
+           "SnapshotStore", "capture_channel", "capture_port",
+           "restore_channel", "restore_port", "run_recoverable",
+           "run_supervised"]

@@ -1,0 +1,617 @@
+"""Crash recovery: engine-agnostic task-graph snapshots + supervised restart.
+
+PR 6 made faults *detectable* (chaos harness, watchdogs); this module makes
+detected faults *survivable*:
+
+* :class:`GraphSnapshot` — the complete execution state of a step-form task
+  graph at a quiescent point: per-task firing counters, per-task state
+  pytrees, channel ring contents, and mmap buffer copies, keyed by
+  ``Graph.structural_hash()``.  The representation is **engine-agnostic**:
+  it is exactly the ``lax.while_loop`` carry of the synthesized program
+  (:mod:`repro.core.synth`), which the Python engines reproduce token-for-
+  token, so a snapshot captured under one engine restores under any other
+  and the run finishes with bit-identical mmap outputs.
+
+* :class:`SnapshotStore` — persistence via the digest-verified
+  :class:`~repro.ckpt.manager.CheckpointManager` path: atomic publish,
+  sha256 manifests, and ``restore_latest`` falling past corrupt snapshots.
+
+* :func:`run_recoverable` — chunked execution: the run is cut at sweep
+  boundaries of the *abstract schedule* (a pure-Python replay of the
+  compiled sweep semantics over token counts alone); each boundary is
+  quiescent by construction and snapshots there.  Under ``CompiledEngine``
+  each chunk is one budgeted ``lax.while_loop`` invocation whose carry is
+  the snapshot; under the Python engines each chunk re-invokes every task
+  with a per-chunk firing quota derived from the same schedule.
+
+* :func:`run_supervised` — bounded restarts with exponential backoff.  A
+  :class:`~repro.core.errors.CrashFault` (the ``FaultPlan.crash`` kind)
+  aborts the run mid-chunk; the supervisor restores the latest snapshot
+  and resumes, so final outputs match the fault-free run.
+
+Why sweep boundaries are consistent cuts: the abstract schedule is a valid
+execution order, so the firing-count vector at any of its prefixes is
+reachable under every fair blocking engine (the KPN argument: firing counts
+determine channel contents, task states and mmap contents deterministically
+for the step-function subset — no peek/select/EoT, static I/O rates).
+
+What is *not* recoverable this way (documented in docs/robustness.md):
+graphs outside the step subset (EoT termination, ``peek``/``select``
+routing, async_mmap ports) have no schedule-independent cut; for those
+:func:`run_supervised` degrades to restart-from-scratch supervision.  The
+container-level :func:`capture_port` / :func:`restore_port` helpers still
+snapshot an ``AsyncMMap``'s outstanding-request state (accepted-but-
+undelivered requests re-queue and re-issue on restore) for host-driven
+checkpointing of async graphs.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt.manager import CheckpointManager
+from ..core.channel import Channel
+from ..core.engines import ENGINES, SimReport
+from ..core.errors import CrashFault, SynthesisError
+from ..core.faults import FaultInjector, FaultPlan
+from ..core.interface import AsyncMMap
+from ..core.synth import (_build_program, _canon_dtype, _twin_view,
+                          elaborate_step_graph)
+from ..core.task import task
+
+
+# ---------------------------------------------------------------------------
+# container-level capture/restore (any channel, any engine)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ChannelState:
+    """Raw contents of one channel: data tokens in order, with EoT tokens
+    in place (the EOT singleton), plus the derived EoT count."""
+
+    tokens: list
+    eot_count: int = 0
+
+
+def capture_channel(chan: Channel) -> ChannelState:
+    return ChannelState(tokens=list(chan._q), eot_count=chan._eot_count)
+
+
+def restore_channel(chan: Channel, st: ChannelState) -> None:
+    """Overwrite a channel's queue with a captured state.  Waiter lists are
+    cleared — restore happens between runs, when no task is parked."""
+    chan._q = deque(st.tokens)
+    chan._eot_count = st.eot_count
+    chan._rwait.clear()
+    chan._wwait.clear()
+
+
+@dataclass
+class PortState:
+    """Outstanding-request state of one ``AsyncMMap`` port.
+
+    ``queues`` holds the five port channels (issued-but-unaccepted requests
+    and delivered-but-unread responses); ``inflight_*`` the accepted-but-
+    undelivered requests, which otherwise live only as closures in the
+    engine's event heap.  Restore re-queues them *ahead* of the unaccepted
+    requests, so the next pump re-accepts and re-schedules them — same
+    result values, fresh latency."""
+
+    data: Any
+    queues: list = field(default_factory=list)       # [ChannelState] x5
+    inflight_reads: list = field(default_factory=list)
+    inflight_writes: list = field(default_factory=list)  # [(addr, value)]
+
+
+def capture_port(amap: AsyncMMap) -> PortState:
+    buf = np.asarray(amap.data)
+    return PortState(
+        data=np.array(buf, copy=True),
+        queues=[capture_channel(c) for c in amap.channels()],
+        inflight_reads=list(amap._inflight_reads),
+        inflight_writes=list(amap._inflight_writes),
+    )
+
+
+def restore_port(amap: AsyncMMap, st: PortState) -> None:
+    if isinstance(amap.data, np.ndarray):
+        np.copyto(amap.data, st.data)
+    else:
+        amap.data = np.array(st.data, copy=True)
+    for c, cs in zip(amap.channels(), st.queues):
+        restore_channel(c, cs)
+    # accepted-but-undelivered requests go back to the head of the request
+    # FIFOs, in acceptance order, ahead of anything not yet accepted
+    for addr in reversed(st.inflight_reads):
+        amap._raddr._q.appendleft(addr)
+    for addr, value in reversed(st.inflight_writes):
+        amap._wdata._q.appendleft(value)
+        amap._waddr._q.appendleft(addr)
+    amap._pending_reads = amap._pending_writes = 0
+    amap._inflight_reads = []
+    amap._inflight_writes = []
+    # the re-queued requests will be re-accepted: rewind the acceptance
+    # counters so stats don't double-count them
+    amap.read_reqs -= len(st.inflight_reads)
+    amap.write_reqs -= len(st.inflight_writes)
+
+
+# ---------------------------------------------------------------------------
+# graph snapshots (step-form subset, engine-agnostic)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class GraphSnapshot:
+    """Execution state of a step-form graph at a sweep boundary.
+
+    ``chans`` stores each channel as a zero-padded ``(capacity, *elem)``
+    buffer plus an occupancy count, head-normalized to index 0 — the ring's
+    head position is value-irrelevant (all indexing is modular), so this is
+    the canonical form every engine round-trips through."""
+
+    graph_hash: str
+    sweep: int
+    fires: np.ndarray                  # (n_tasks,) int32 firing counters
+    states: list                       # per-task state pytrees
+    chans: list                        # [(buf ndarray, size int)]
+    mmaps: list                        # [ndarray copy] per plan mmap
+    engine: str = ""
+    meta: dict = field(default_factory=dict)
+
+
+def _snapshot_python(plan, graph_hash: str, sweep: int, fires, states,
+                     caps: list, engine: str) -> GraphSnapshot:
+    """Capture from live host state: channel deques + host mmap buffers."""
+    chans = []
+    for ci, c in enumerate(plan.channels):
+        shape = (caps[ci],) + c.shape
+        buf = np.zeros(shape, _canon_dtype(c.dtype))
+        toks = list(c._q)
+        if len(toks) > caps[ci]:
+            raise ValueError(
+                f"channel {c.name!r} holds {len(toks)} tokens at a sweep "
+                f"boundary but snapshots reserve capacity {caps[ci]}")
+        for i, t in enumerate(toks):
+            buf[i] = np.asarray(t)
+        chans.append((buf, len(toks)))
+    mmaps = [np.array(np.asarray(jnp.asarray(m.data)), copy=True)
+             for m in plan.mmaps]
+    return GraphSnapshot(
+        graph_hash=graph_hash, sweep=sweep,
+        fires=np.asarray(fires, np.int32),
+        states=[jax.tree.map(np.asarray, s) for s in states],
+        chans=chans, mmaps=mmaps, engine=engine)
+
+
+def _snapshot_carry(plan, graph_hash: str, sweep: int, chans, states,
+                    mmaps, fires, engine: str) -> GraphSnapshot:
+    """Capture from a resumable compiled carry — the carry *is* the
+    snapshot; this only head-normalizes the rings and host-copies."""
+    out_chans = []
+    for (buf, head, size), c in zip(chans, plan.channels):
+        b = np.asarray(buf)
+        h, n = int(head), int(size)
+        cap = b.shape[0]
+        b = b[(h + np.arange(cap)) % cap]
+        b[n:] = 0                       # canonical: tail slots zeroed
+        out_chans.append((b, n))
+    return GraphSnapshot(
+        graph_hash=graph_hash, sweep=sweep,
+        fires=np.asarray(fires, np.int32),
+        states=[jax.tree.map(np.asarray, s) for s in states],
+        mmaps=[np.array(np.asarray(m), copy=True) for m in mmaps],
+        chans=out_chans, engine=engine)
+
+
+def _restore_python(plan, snap: GraphSnapshot, caps: list) -> None:
+    """Write a snapshot back into live host state: channel deques refill
+    (healing any torn mid-chunk pushes) and mmap buffers restore."""
+    for ci, (c, (buf, size)) in enumerate(zip(plan.channels, snap.chans)):
+        c.capacity = caps[ci]           # heal sequential capacity growth
+        c._q = deque(jnp.asarray(buf[i]) for i in range(int(size)))
+        c._eot_count = 0
+        c._rwait.clear()
+        c._wwait.clear()
+    _restore_mmaps(plan, snap)
+
+
+def _restore_mmaps(plan, snap: GraphSnapshot) -> None:
+    for m, saved in zip(plan.mmaps, snap.mmaps):
+        if isinstance(m.data, np.ndarray):
+            np.copyto(m.data, saved)
+        else:
+            m.data = np.array(saved, copy=True)
+
+
+def _carry_from_snapshot(plan, snap: GraphSnapshot):
+    chans = tuple(
+        (jnp.asarray(buf), jnp.zeros((), jnp.int32),
+         jnp.asarray(np.int32(size)))
+        for buf, size in snap.chans)
+    states = tuple(jax.tree.map(jnp.asarray, s) for s in snap.states)
+    mmaps = tuple(jnp.asarray(m) for m in snap.mmaps)
+    fires = jnp.asarray(snap.fires, jnp.int32)
+    return chans, states, mmaps, fires
+
+
+def _initial_snapshot(plan, graph_hash: str, caps: list,
+                      engine: str) -> GraphSnapshot:
+    """The sweep-0 snapshot: empty channels, initial states, and — the
+    load-bearing part — a copy of every mmap's *initial* contents, so a
+    restart can heal host buffers torn by a crash mid-chunk."""
+    chans = [(np.zeros((caps[ci],) + c.shape, _canon_dtype(c.dtype)), 0)
+             for ci, c in enumerate(plan.channels)]
+    return GraphSnapshot(
+        graph_hash=graph_hash, sweep=0,
+        fires=np.zeros((len(plan.tasks),), np.int32),
+        states=[jax.tree.map(np.asarray, tp.state0) for tp in plan.tasks],
+        chans=chans,
+        mmaps=[np.array(np.asarray(jnp.asarray(m.data)), copy=True)
+               for m in plan.mmaps],
+        engine=engine)
+
+
+# ---------------------------------------------------------------------------
+# persistence (CheckpointManager-backed)
+# ---------------------------------------------------------------------------
+
+class SnapshotStore:
+    """Persist :class:`GraphSnapshot` objects through the digest-verified
+    checkpoint path: atomic tmp→rename publish, per-leaf sha256 manifests,
+    and restore-latest falling past corrupt snapshots.  Snapshots are
+    keyed by sweep number (the "step") and carry the graph's structural
+    hash in the manifest — a snapshot of a *different* graph is never
+    restored."""
+
+    def __init__(self, directory, keep: int = 3, faults: Any = None):
+        self.mgr = CheckpointManager(directory, keep=keep, faults=faults)
+
+    @staticmethod
+    def _like(plan, caps: list) -> dict:
+        return {
+            "fires": jnp.zeros((len(plan.tasks),), jnp.int32),
+            "chans": [
+                {"buf": jnp.zeros((caps[ci],) + c.shape,
+                                  _canon_dtype(c.dtype)),
+                 "size": jnp.zeros((), jnp.int32)}
+                for ci, c in enumerate(plan.channels)],
+            "states": [jax.tree.map(jnp.asarray, tp.state0)
+                       for tp in plan.tasks],
+            "mmaps": [jnp.zeros(tuple(m.shape),
+                                jax.dtypes.canonicalize_dtype(
+                                    np.dtype(m.dtype)))
+                      for m in plan.mmaps],
+        }
+
+    def save(self, snap: GraphSnapshot) -> None:
+        tree = {
+            "fires": jnp.asarray(snap.fires, jnp.int32),
+            "chans": [{"buf": jnp.asarray(buf),
+                       "size": jnp.asarray(np.int32(size))}
+                      for buf, size in snap.chans],
+            "states": [jax.tree.map(jnp.asarray, s) for s in snap.states],
+            "mmaps": [jnp.asarray(m) for m in snap.mmaps],
+        }
+        self.mgr.save(snap.sweep, tree, {}, extra={
+            "graph_hash": snap.graph_hash, "sweep": snap.sweep,
+            "engine": snap.engine, **snap.meta})
+
+    def load_latest(self, plan, graph_hash: str,
+                    caps: Optional[list] = None) -> Optional[GraphSnapshot]:
+        caps = caps if caps is not None \
+            else [c.capacity for c in plan.channels]
+        try:
+            got = self.mgr.restore_latest(self._like(plan, caps), {})
+        except Exception:
+            # a snapshot of a structurally different graph in this
+            # directory: its leaf files don't line up with our like-tree.
+            # Treat as "no usable snapshot" rather than poisoning the run.
+            return None
+        if got is None:
+            return None
+        step, tree, _, extra = got
+        if extra.get("graph_hash") != graph_hash:
+            return None
+        return GraphSnapshot(
+            graph_hash=graph_hash,
+            sweep=int(extra.get("sweep", step)),
+            fires=np.asarray(tree["fires"], np.int32),
+            states=[jax.tree.map(np.asarray, s) for s in tree["states"]],
+            chans=[(np.asarray(c["buf"]), int(c["size"]))
+                   for c in tree["chans"]],
+            mmaps=[np.asarray(m) for m in tree["mmaps"]],
+            engine=str(extra.get("engine", "")))
+
+
+# ---------------------------------------------------------------------------
+# the abstract schedule (pure-Python replay of the compiled sweep)
+# ---------------------------------------------------------------------------
+
+def _abstract_schedule(plan) -> tuple[list, bool]:
+    """Replay ``_build_program``'s sweep semantics over token counts alone.
+
+    Returns ``(cuts, stalled)``: ``cuts[s]`` is the per-task firing vector
+    after ``s`` sweeps (``cuts[0]`` all-zero), mirroring the compiled body
+    exactly — plan-order task iteration, within-sweep size visibility,
+    bounds-based phase selection, read-available / write-fits guards —
+    so ``cuts[s]`` equals the compiled ``fires`` after ``s`` sweeps and is
+    a consistent cut for every engine.  ``stalled`` is True when the
+    schedule stopped making progress before every task fired out (the
+    abstract twin of the compiled stall / simulated deadlock)."""
+    caps = [c.capacity for c in plan.channels]
+    sizes = [0] * len(caps)
+    fires = [0] * len(plan.tasks)
+    totals = [tp.total for tp in plan.tasks]
+    cuts = [tuple(fires)]
+    while any(f < t for f, t in zip(fires, totals)):
+        progress = False
+        for ti, tp in enumerate(plan.tasks):
+            f = fires[ti]
+            if f >= totals[ti]:
+                continue
+            phase = sum(f >= b for b in tp.bounds[:-1])
+            ph = tp.phases[phase]
+            ok = all(sizes[ci] >= r for ci, r in ph.reads.items()) and \
+                all(caps[ci] - sizes[ci] >= w
+                    for ci, w in ph.writes.items())
+            if ok:
+                for ci, r in ph.reads.items():
+                    sizes[ci] -= r
+                for ci, w in ph.writes.items():
+                    sizes[ci] += w
+                fires[ti] = f + 1
+                progress = True
+        if not progress:
+            return cuts, True
+        cuts.append(tuple(fires))
+    return cuts, False
+
+
+def _reset_endpoints(plan) -> None:
+    """Clear channel endpoint bindings so the same channel objects can be
+    re-bound by the next chunk's fresh task instances (elaboration and
+    every chunk each create their own :class:`TaskInstance` set; the
+    one-producer/one-consumer rule is enforced per chunk)."""
+    for c in plan.channels:
+        c.producer = c.consumer = c.parent = None
+        c._rwait.clear()
+        c._wwait.clear()
+
+
+# ---------------------------------------------------------------------------
+# chunk execution
+# ---------------------------------------------------------------------------
+
+def _chunk_task_body(tp, start: int, stop: int, states: list,
+                     ti: int) -> Callable:
+    """A task body that runs firings ``start..stop`` of one StepTask
+    instance against live blocking streams — the per-chunk slice of the
+    simulation twin.  State is carried across chunks in ``states``."""
+    bounds = tp.bounds
+    phases = tp.phases
+
+    def body(*args, **kwargs):
+        views = tuple(_twin_view(a) for a in args)
+        kw = {k: _twin_view(v) for k, v in kwargs.items()}
+        state = states[ti]
+        for f in range(start, stop):
+            pi = 0
+            while f >= bounds[pi]:
+                pi += 1
+            state = phases[pi].fn(state, *views, **kw)
+        states[ti] = state
+
+    body.__name__ = tp.inst.name.split("#", 1)[0]
+    return body
+
+
+def _run_python_chunk(plan, engine: str, fires0, fires1, states: list,
+                      faults: Optional[FaultInjector]) -> SimReport:
+    _reset_endpoints(plan)
+    states_dev = [jax.tree.map(jnp.asarray, s) for s in states]
+
+    def recovery_chunk():
+        tb = task()
+        for ti, tp in enumerate(plan.tasks):
+            tb.invoke(_chunk_task_body(tp, int(fires0[ti]), int(fires1[ti]),
+                                       states_dev, ti),
+                      *tp.inst.args, name=tp.inst.name, **tp.inst.kwargs)
+
+    rep = ENGINES[engine](faults=faults).run(recovery_chunk)
+    if rep.ok:
+        for ti in range(len(plan.tasks)):
+            states[ti] = states_dev[ti]
+    return rep
+
+
+def _synth_report(engine: str, ok: bool, wall: float, err: Optional[str],
+                  result: Any, switches: int, plan,
+                  failure: Optional[BaseException] = None) -> SimReport:
+    return SimReport(
+        engine=engine, ok=ok, wall_s=wall, switches=switches,
+        n_instances=len(plan.tasks), n_channels=len(plan.channels),
+        tokens=0, error=err, result=result, failure=failure)
+
+
+def run_recoverable(engine: str, top: Callable, *args,
+                    store: Optional[SnapshotStore] = None,
+                    snapshot_every: int = 8,
+                    faults: Any = None, **kwargs) -> SimReport:
+    """Run a step-form graph in snapshot-bounded chunks.
+
+    Elaborates the graph once (:func:`elaborate_step_graph` — raises
+    :class:`SynthesisError` outside the step subset), derives the abstract
+    sweep schedule, resumes from the latest matching snapshot in ``store``
+    (if any), then executes chunk by chunk — snapshotting at every
+    boundary.  A :class:`CrashFault` injected mid-chunk propagates to the
+    caller (the supervisor's restart signal); everything the crash tore is
+    healed by the snapshot restore on the next attempt.
+
+    ``engine`` may be any of the four engines.  The sequential engine runs
+    as a single chunk (its only quiescent points are start and finish: it
+    cannot honor channel capacity mid-run, so intermediate cuts are not
+    capturable) and fails on the same graphs plain sequential simulation
+    fails on.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; "
+                         f"choose from {sorted(ENGINES)}")
+    inj = faults.injector() if isinstance(faults, FaultPlan) else faults
+    t0 = time.perf_counter()
+    plan, graph, result = elaborate_step_graph(top, *args, **kwargs)
+    ghash = graph.structural_hash()
+    caps = [c.capacity for c in plan.channels]
+    cuts, stalled = _abstract_schedule(plan)
+    total_sweeps = len(cuts) - 1
+    every = max(1, int(snapshot_every))
+    if engine == "sequential":
+        every = max(total_sweeps, 1)
+
+    snap = store.load_latest(plan, ghash, caps) if store is not None \
+        else None
+    if snap is not None:
+        if snap.sweep > total_sweeps or \
+                not np.array_equal(snap.fires, np.asarray(cuts[snap.sweep],
+                                                          np.int32)):
+            snap = None             # stale/foreign snapshot: start over
+    if snap is None:
+        snap = _initial_snapshot(plan, ghash, caps, engine)
+        if store is not None:
+            store.save(snap)
+
+    switches = 0
+    if engine == "compiled":
+        program = jax.jit(_build_program(plan, resumable=True))
+        chans, states, mmaps, fires = _carry_from_snapshot(plan, snap)
+        s0 = snap.sweep
+        while s0 < total_sweeps:
+            if inj is not None:
+                inj.crash_point("chunk")
+            s1 = min(s0 + every, total_sweeps)
+            chans, states, mmaps, fires, progress, sweeps, _, _ = program(
+                states, mmaps, chans, fires, np.int32(s1 - s0))
+            switches += int(sweeps)
+            s0 = s1
+            if store is not None:
+                store.save(_snapshot_carry(plan, ghash, s0, chans, states,
+                                           mmaps, fires, engine))
+            if not bool(progress):
+                break
+        # write device results back into the host buffers (all mmaps: for
+        # a resumed-at-completion run this re-publishes the snapshot)
+        for m, dev in zip(plan.mmaps, mmaps):
+            out = np.asarray(dev)
+            if isinstance(m.data, np.ndarray):
+                np.copyto(m.data, out)
+            else:
+                m.data = out
+        fires = np.asarray(fires)
+    else:
+        _restore_python(plan, snap, caps)
+        states = [jax.tree.map(jnp.asarray, s) for s in snap.states]
+        s0 = snap.sweep
+        fires = np.asarray(snap.fires, np.int32)
+        while s0 < total_sweeps:
+            if inj is not None:
+                inj.crash_point("chunk")
+            s1 = min(s0 + every, total_sweeps)
+            rep = _run_python_chunk(plan, engine, cuts[s0], cuts[s1],
+                                    states, inj)
+            switches += rep.switches
+            if not rep.ok:
+                if isinstance(rep.failure, CrashFault):
+                    raise rep.failure
+                return _synth_report(engine, False,
+                                     time.perf_counter() - t0, rep.error,
+                                     result, switches, plan, rep.failure)
+            s0 = s1
+            fires = np.asarray(cuts[s0], np.int32)
+            if store is not None:
+                store.save(_snapshot_python(plan, ghash, s0, fires, states,
+                                            caps, engine))
+
+    totals = np.asarray([tp.total for tp in plan.tasks], np.int32)
+    done = bool(np.all(fires >= totals))
+    err = None
+    if not done:
+        blocked = [tp.inst.name for tp, f, t in zip(plan.tasks, fires,
+                                                    totals) if f < t]
+        err = (f"recoverable run stalled after {switches} sweeps; "
+               f"blocked tasks: {blocked}")
+    return _synth_report(engine, done, time.perf_counter() - t0, err,
+                         result, switches, plan)
+
+
+# ---------------------------------------------------------------------------
+# the supervisor
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RestartPolicy:
+    """Bounded-restart policy: at most ``max_restarts`` restarts, sleeping
+    ``backoff_s * backoff_factor**k`` before the k-th one."""
+
+    max_restarts: int = 3
+    backoff_s: float = 0.01
+    backoff_factor: float = 2.0
+
+
+def run_supervised(engine: str, top: Callable, *args,
+                   policy: Optional[RestartPolicy] = None,
+                   store: Optional[SnapshotStore] = None,
+                   snapshot_every: int = 8,
+                   faults: Any = None, **kwargs) -> SimReport:
+    """Supervised execution: run, and on a :class:`CrashFault` restore the
+    latest snapshot and restart — bounded restarts, exponential backoff.
+
+    With ``store`` set and the graph inside the step subset, restarts
+    resume from the last sweep-boundary snapshot (:func:`run_recoverable`).
+    With ``store`` unset, the run delegates *directly* to the plain engine
+    (zero snapshot overhead — the benchmarked path) and a crash restarts
+    from scratch.  Graphs outside the step subset (SynthesisError at
+    elaboration) likewise fall back to restart-from-scratch supervision.
+
+    The fault injector is shared across attempts, so a ``FaultPlan.crash``
+    site fires exactly once: the retried run sails past the crash point,
+    which is precisely what the recovery parity tests assert.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; "
+                         f"choose from {sorted(ENGINES)}")
+    policy = policy if policy is not None else RestartPolicy()
+    inj = faults.injector() if isinstance(faults, FaultPlan) else faults
+    use_chunks = store is not None
+    restarts = 0
+    delay = policy.backoff_s
+    last_exc: Optional[BaseException] = None
+    while True:
+        try:
+            if use_chunks:
+                try:
+                    return run_recoverable(
+                        engine, top, *args, store=store,
+                        snapshot_every=snapshot_every, faults=inj,
+                        **kwargs)
+                except SynthesisError:
+                    use_chunks = False      # outside the step subset
+                    continue
+            rep = ENGINES[engine](faults=inj).run(top, *args, **kwargs)
+            if rep.ok or not isinstance(rep.failure, CrashFault):
+                return rep
+            last_exc = rep.failure
+        except CrashFault as e:
+            last_exc = e
+        restarts += 1
+        if restarts > policy.max_restarts:
+            raise CrashFault(
+                f"supervised run still crashing after "
+                f"{policy.max_restarts} restarts") from last_exc
+        time.sleep(delay)
+        delay *= policy.backoff_factor

@@ -88,6 +88,12 @@ def serve(argv=None) -> int:
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="per-request wall-clock budget from admission")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="write-ahead request journal (JSONL).  A restarted "
+                         "process given the same flags replays it: retired "
+                         "requests answer from the journal, in-flight ones "
+                         "resume at their last journaled token — "
+                         "exactly-once results across SIGKILL")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -137,6 +143,13 @@ def serve(argv=None) -> int:
     # finishes the in-flight slots, flushes results and exits clean
     guard = PreemptionGuard()
     engine.stop_flag = lambda: guard.requested
+    if args.journal:
+        from ..serve import ServeJournal
+        engine.journal = ServeJournal(args.journal)
+        if engine.journal.completed or engine.journal.inflight:
+            print(f"[serve] journal replay: "
+                  f"{len(engine.journal.completed)} retired, "
+                  f"{len(engine.journal.inflight)} in-flight")
     try:
         t0 = time.perf_counter()
         results = serve_requests(engine, reqs)

@@ -33,7 +33,7 @@ from ..ckpt import CheckpointManager
 from ..configs import get_config
 from ..data import make_pipeline
 from ..distributed import sharding as shd
-from ..ft import PreemptionGuard, StragglerDetector
+from ..ft import PreemptionGuard, StragglerDetector, resume_or_init
 from ..models import lm
 from ..optim import AdamWConfig, adamw_init, adamw_update, opt_state_specs
 from .mesh import make_host_mesh
@@ -83,23 +83,28 @@ def train(argv=None) -> int:
     straggler = StragglerDetector()
 
     # ---- init or resume --------------------------------------------------
+    # resume_or_init goes through digest-verified restore_latest: a
+    # checkpoint corrupted after publish (torn file, bad digest) is
+    # skipped and the scan falls back to the previous good step, so a
+    # kill-and-rerun always lands on sound state (tests/test_launch.py)
     aparams = lm.abstract_params(cfg)
     aopt = jax.eval_shape(partial(adamw_init, c=opt), aparams)
-    start = mgr.latest_step()
-    if start is not None:
-        params, opt_state, extra = mgr.restore(
-            start, aparams, aopt, param_shardings=pshard,
-            opt_shardings=oshard)
-        data.load_state_dict(extra.get("data", {"step": start}))
-        print(f"[train] resumed from checkpoint step {start}")
-    else:
-        start = 0
+
+    def _init():
         with mesh:
             params = jax.jit(
                 partial(lm.init_params, cfg),
                 out_shardings=pshard)(jax.random.key(args.seed))
             opt_state = jax.jit(partial(adamw_init, c=opt),
                                 out_shardings=oshard)(params)
+        return params, opt_state
+
+    start, params, opt_state, extra = resume_or_init(
+        mgr, _init, aparams, aopt,
+        param_shardings=pshard, opt_shardings=oshard)
+    if start > 0:
+        data.load_state_dict(extra.get("data", {"step": start}))
+        print(f"[train] resumed from checkpoint step {start}")
 
     step_fn = make_train_step(cfg, opt, use_kernel=args.use_kernel)
     bspec = shd.batch_spec(cfg, mesh, args.batch, pol)

@@ -1,5 +1,6 @@
 from .engine import (Request, RequestError, ServeConfig, ServingEngine,
                      serve_requests)
+from .journal import ServeJournal
 
 __all__ = ["Request", "RequestError", "ServeConfig", "ServingEngine",
-           "serve_requests"]
+           "ServeJournal", "serve_requests"]

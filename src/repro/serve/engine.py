@@ -145,7 +145,7 @@ class ServingEngine:
     def __init__(self, scfg: ServeConfig, prefill_fn: Callable = None,
                  decode_fn: Callable = None, pad_token: int = 0,
                  batched: Any = None, faults: Any = None,
-                 stop_flag: Callable = None):
+                 stop_flag: Callable = None, journal: Any = None):
         self.scfg = scfg
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
@@ -161,6 +161,16 @@ class ServingEngine:
         # preemption: callable polled once per scheduler iteration; True ->
         # reject queued admissions, finish live slots, exit clean
         self.stop_flag = stop_flag
+        # write-ahead serving journal (repro.serve.journal.ServeJournal or
+        # a path): admission/token/retire records, fsync'd before the
+        # corresponding effect is externally visible.  A restarted process
+        # answers already-retired rids straight from the journal and
+        # re-admits in-flight rids at their last journaled position —
+        # exactly-once results across SIGKILL (docs/robustness.md).
+        if journal is not None and not hasattr(journal, "retire"):
+            from .journal import ServeJournal
+            journal = ServeJournal(journal)
+        self.journal = journal
         self.retry_log: list = []          # (site, attempt, error) tuples
         self.degraded: Optional[tuple] = None   # ("per-slot", reason) or None
         self._aot_prefill: dict = {}       # (B, S) -> executable
@@ -369,6 +379,11 @@ class ServingEngine:
         return ("req", rid, max_new, prompt, deadline)
 
     def _emit(self, out_chan, rid: int, new: list) -> None:
+        if self.journal is not None:
+            # write-ahead: the retire record hits disk before the result
+            # transaction exists, so a crash in between re-delivers from
+            # the journal instead of losing the finished request
+            self.journal.retire(rid, toks=[int(t) for t in new])
         out_chan.write(("hdr", rid))
         out_chan.write_burst([("tok", int(t)) for t in new])
         out_chan.close()
@@ -377,8 +392,17 @@ class ServingEngine:
                   detail: str = "") -> None:
         """One error transaction; the collector turns it into a
         :class:`RequestError` result."""
+        if self.journal is not None:
+            self.journal.retire(rid, status=status, detail=detail)
         out_chan.write(("err", rid, status, detail))
         out_chan.close()
+
+    def _note_tok(self, s: dict, t: int) -> None:
+        """Append one emitted token to a slot, journaling it first — the
+        single funnel for every token either decode path produces."""
+        if self.journal is not None:
+            self.journal.tok(s["rid"], t)
+        s["new"].append(t)
 
     # -- hardening helpers -----------------------------------------------------
 
@@ -442,8 +466,11 @@ class ServingEngine:
         if eos >= 0 and s["new"] and s["new"][-1] == eos:
             return True
         # cache-capacity stop: the next decode would scatter at
-        # prompt_len + len(new) - 1; retire one step early
-        return s["plen"] + len(s["new"]) >= self.scfg.max_seq
+        # prompt_len + len(new) - 1; retire one step early.  Journal-seeded
+        # tokens are counted once — they are part of the re-prefilled
+        # prompt AND of ``new`` — so subtract the overlap.
+        return s["plen"] + len(s["new"]) - s.get("seeded", 0) \
+            >= self.scfg.max_seq
 
     # -- scheduler -------------------------------------------------------------
 
@@ -468,10 +495,51 @@ class ServingEngine:
             self._scheduler_per_slot(req_in, out_chan)
         out_chan.close()                   # shutdown transaction
 
-    def _mk_slot(self, rid, max_new, prompt, deadline) -> dict:
+    def _mk_slot(self, rid, max_new, prompt, deadline,
+                 seeded: Optional[list] = None) -> dict:
+        """One decode-slot record.  ``seeded`` (journal replay) pre-loads
+        tokens the crashed process already emitted: they join the prompt
+        for the re-prefill — greedy decoding of a causal model then
+        continues exactly where the journal left off — and pre-fill
+        ``new`` so ``max_new`` / result accounting stay unchanged."""
+        seeded = list(seeded or [])
+        prompt = (list(prompt) + seeded)[-(self.scfg.max_seq - 1):]
         return {"rid": rid, "prompt": prompt, "plen": len(prompt),
-                "max_new": max_new, "new": [], "deadline": deadline,
-                "t0": time.perf_counter()}
+                "max_new": max_new, "new": seeded, "seeded": len(seeded),
+                "deadline": deadline, "t0": time.perf_counter()}
+
+    def _slot_for(self, r, out_chan) -> Optional[dict]:
+        """Journal-aware slot construction for one admitted request.
+
+        Returns None when no slot is needed: the rid already retired (its
+        result re-emits straight from the journal — never recomputed), or
+        the request finishes inline (``max_new <= 0``, or a journal-seeded
+        slot that was already at its last token when the process died).
+        Fresh rids are journaled *before* any compute happens for them.
+        """
+        _, rid, max_new, prompt, deadline = r
+        j = self.journal
+        if j is not None:
+            done = j.completed.get(rid)
+            if done is not None:
+                if isinstance(done, tuple):
+                    self._emit_err(out_chan, rid, done[0], done[1])
+                else:
+                    self._emit(out_chan, rid, done)
+                return None
+            rec = j.inflight.pop(rid, None)
+            if rec is not None:
+                s = self._mk_slot(rid, rec["max_new"], rec["prompt"],
+                                  rec.get("deadline"), seeded=rec["toks"])
+                if s["new"] and self._finished(s):
+                    self._emit(out_chan, rid, s["new"])
+                    return None
+                return s
+            j.admit(rid, prompt, max_new, deadline)
+        if max_new <= 0:
+            self._emit(out_chan, rid, [])
+            return None
+        return self._mk_slot(rid, max_new, prompt, deadline)
 
     def _scheduler_per_slot(self, req_in, out_chan) -> None:
         scfg = self.scfg
@@ -494,11 +562,9 @@ class ServingEngine:
                     break
                 if r[0] == "none":
                     break
-                _, rid, max_new, prompt, deadline = r
-                if max_new <= 0:
-                    self._emit(out_chan, rid, [])
-                    continue
-                slots[free] = self._mk_slot(rid, max_new, prompt, deadline)
+                s = self._slot_for(r, out_chan)
+                if s is not None:
+                    slots[free] = s
 
             live = [s for s in slots if s is not None]
             if not live:
@@ -526,7 +592,7 @@ class ServingEngine:
         logits, cache = prefill(toks)
         s["cache"] = cache
         s["next"] = int(np.argmax(np.asarray(logits)[0]))
-        s["new"].append(s["next"])
+        self._note_tok(s, s["next"])
         # decide the AOT-vs-eager decode path once per slot, not
         # per token (the kv signature is fixed after prefill)
         if self._aot_decode is not None:
@@ -549,7 +615,7 @@ class ServingEngine:
             s["aot_decode"] = None
             logits, s["cache"] = self.decode_fn(tok, s["cache"])
         s["next"] = int(np.argmax(np.asarray(logits)[0]))
-        s["new"].append(s["next"])
+        self._note_tok(s, s["next"])
 
     def _step_slot(self, site: str, s: dict, fn) -> None:
         """One per-slot step with quarantine: a failing request marks only
@@ -603,11 +669,9 @@ class ServingEngine:
                     break
                 if r[0] == "none":
                     break
-                _, rid, max_new, prompt, deadline = r
-                if max_new <= 0:
-                    self._emit(out_chan, rid, [])
-                    continue
-                newly.append(self._mk_slot(rid, max_new, prompt, deadline))
+                s = self._slot_for(r, out_chan)
+                if s is not None:
+                    newly.append(s)
             if newly:
                 packed, step_i = self._prefill_admit(newly, slots, packed,
                                                      step_i, out_chan)
@@ -671,7 +735,7 @@ class ServingEngine:
                 if s is None:
                     continue
                 t = int(nxt[i])
-                s["new"].append(t)
+                self._note_tok(s, t)
                 s["next"] = t
                 if self._finished(s):
                     self._emit(out_chan, s["rid"], s["new"])
@@ -734,7 +798,7 @@ class ServingEngine:
                     packed = write(packed, cache, np.int32(row),
                                    np.int32(slot))
                     s["next"] = int(first[row])
-                    s["new"].append(s["next"])
+                    self._note_tok(s, s["next"])
                     slots[slot] = s
                 break
         return packed, step_i

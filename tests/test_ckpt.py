@@ -184,3 +184,20 @@ def test_resave_same_step_overwrites(tmp_path):
     _, p, _, _ = mgr.restore_latest(_params(), _opt())
     assert np.asarray(p["w"])[0, 0] == 2.0
     assert mgr.steps() == [5]
+
+
+def test_async_write_failure_reraised_at_wait(tmp_path, monkeypatch):
+    """A persistent IO failure in the background writer must surface at
+    the next synchronization point, not vanish in the daemon thread."""
+    import repro.ckpt.manager as M
+
+    def bad_save(tree, path):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(M, "save_pytree", bad_save)
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _params(), _opt(), blocking=False)
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()          # the write retried once, then propagated
+    mgr.wait()              # failure is consumed: the next wait is clean
+    assert mgr.steps() == []          # nothing half-published

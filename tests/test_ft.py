@@ -124,3 +124,74 @@ def test_straggler_outliers_do_not_poison_the_baseline():
     d.observe(50.0)                       # outlier: excluded from the EMA
     assert d.mean == mean_before
     assert d.observe(1.0) is False        # healthy steps still healthy
+
+
+# ---------------------------------------------------------------------------
+# ElasticMesh: device loss -> shrink / remesh / reshard
+# ---------------------------------------------------------------------------
+
+def test_shrink_preserves_model_axis():
+    from repro.ft import ElasticMesh
+    assert ElasticMesh.shrink(8, 2) == (4, 2)
+    assert ElasticMesh.shrink(6, 2) == (3, 2)   # data axis absorbs the loss
+    assert ElasticMesh.shrink(7, 2) == (3, 2)   # odd survivor count rounds
+    with pytest.raises(ValueError):
+        ElasticMesh.shrink(1, 2)                # cannot keep the shards
+
+
+_DEVICE_LOSS = r"""
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.ft import ElasticMesh
+
+devs = jax.devices()
+assert len(devs) == 8, len(devs)
+em = ElasticMesh()
+mesh = em.remesh(devs, model_parallel=2)
+assert mesh.devices.shape == (4, 2), mesh.devices.shape
+
+specs = {"w": P("data", "model"), "b": P("model")}
+tree = {"w": jnp.arange(12 * 8, dtype=jnp.float32).reshape(12, 8),
+        "b": jnp.arange(8, dtype=jnp.float32)}
+shd = {k: NamedSharding(mesh, s) for k, s in specs.items()}
+tree = ElasticMesh.reshard(tree, shd)
+
+# two devices die; the model axis (parameter shards) must survive intact
+survivors = devs[:6]
+assert ElasticMesh.shrink(len(survivors), 2) == (3, 2)
+mesh2 = em.remesh(survivors, model_parallel=2)
+assert mesh2.devices.shape == (3, 2), mesh2.devices.shape
+shd2 = {k: NamedSharding(mesh2, s) for k, s in specs.items()}
+tree2 = ElasticMesh.reshard(tree, shd2)
+
+for k, v in tree2.items():
+    used = {d for d in v.sharding.device_set}
+    assert used <= set(survivors), (k, used)
+
+step = jax.jit(lambda t: jax.tree.map(lambda x: x * 2, t),
+               out_shardings=shd2)
+out = step(tree2)
+assert np.array_equal(np.asarray(out["w"]),
+                      np.arange(12 * 8, dtype=np.float32).reshape(12, 8) * 2)
+assert np.array_equal(np.asarray(out["b"]),
+                      np.arange(8, dtype=np.float32) * 2)
+print("SUBPROCESS_OK")
+"""
+
+
+def test_elastic_mesh_survives_device_loss(tmp_path):
+    """Lose 2 of 8 devices: shrink keeps the model axis, remesh rebuilds
+    over the survivors, reshard moves state, and a jitted step runs."""
+    import subprocess
+    import sys
+    from pathlib import Path
+    env = {"PYTHONPATH": str(Path(__file__).resolve().parent.parent / "src"),
+           "PATH": "/usr/bin:/bin", "HOME": str(tmp_path),
+           "JAX_PLATFORMS": "cpu",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    r = subprocess.run([sys.executable, "-c", _DEVICE_LOSS],
+                       capture_output=True, text=True, timeout=300, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SUBPROCESS_OK" in r.stdout
