@@ -101,6 +101,20 @@ class FaultPlan:
         ``{site: count}`` — the first ``count`` calls through the serving
         retry wrapper at ``site`` ("prefill"/"decode") raise
         :class:`TransientFault` (recovered by retry-with-backoff).
+    arrival_burst
+        ``{tenant_name | "*": {"at_s": t, "dur_s": d, "rate": r}}`` —
+        traffic-shape fault: matching tenants get *extra* Poisson
+        arrivals at rate ``r`` inside the window ``[at_s, at_s + dur_s)``,
+        overlaid onto the trace by :func:`repro.serve.traffic.make_trace`.
+        Burst draws are keyed by this plan's seed, so traffic seed and
+        fault seed vary independently.  A list of burst dicts per site is
+        also accepted.
+    tenant_flood
+        ``{tenant_name: {"rate": r, "start_s": t, "dur_s": d, "weight",
+        "priority", "prompt_len", "max_new", "deadline_s"}}`` — a whole
+        extra flooding tenant injected into the trace (default priority 9,
+        i.e. the lowest class: fair queuing should starve the flood, not
+        the victims).
     """
 
     seed: int = 0
@@ -115,6 +129,8 @@ class FaultPlan:
     poison: Dict[int, str] = field(default_factory=dict)
     cancel: Dict[int, int] = field(default_factory=dict)
     transient: Dict[str, int] = field(default_factory=dict)
+    arrival_burst: Dict[str, dict] = field(default_factory=dict)
+    tenant_flood: Dict[str, dict] = field(default_factory=dict)
 
     def injector(self) -> "FaultInjector":
         return FaultInjector(self)
@@ -152,6 +168,10 @@ class FaultInjector:
     @property
     def affects_memory(self) -> bool:
         return bool(self.plan.mem_spike)
+
+    @property
+    def affects_traffic(self) -> bool:
+        return bool(self.plan.arrival_burst) or bool(self.plan.tenant_flood)
 
     def record(self, *event) -> None:
         self.log.append(event)
@@ -298,6 +318,21 @@ class FaultInjector:
             self._transient_left[site] = left - 1
             self.record("transient", site, left - 1)
             raise TransientFault(f"injected transient failure at {site}")
+
+    # -- traffic faults (consumed by repro.serve.traffic.make_trace) -------
+    def traffic_bursts(self, tenant: str) -> list:
+        """Arrival-burst specs that apply to ``tenant`` (exact name or
+        ``"*"``).  Each plan entry may be one dict or a list of dicts."""
+        out = []
+        for key in (tenant, "*"):
+            spec = self.plan.arrival_burst.get(key)
+            if spec is None:
+                continue
+            out.extend(spec if isinstance(spec, list) else [spec])
+        return out
+
+    def traffic_floods(self) -> Dict[str, dict]:
+        return dict(self.plan.tenant_flood)
 
     def cancelled(self, rid: int, n_generated: int) -> bool:
         after = self.plan.cancel.get(rid)

@@ -24,8 +24,9 @@ import numpy as np
 from ..configs import get_config
 from ..ft import PreemptionGuard
 from ..models import lm
-from ..serve import (Request, RequestError, ServeConfig, ServingEngine,
-                     serve_requests)
+from ..serve import (AdmissionConfig, AdmissionController, Request,
+                     RequestError, ServeConfig, ServeMetrics, ServingEngine,
+                     TenantSpec, make_trace, serve_requests)
 
 
 def _build_engine(cfg, params, scfg: ServeConfig, args) -> ServingEngine:
@@ -94,6 +95,25 @@ def serve(argv=None) -> int:
                          "requests answer from the journal, in-flight ones "
                          "resume at their last journaled token — "
                          "exactly-once results across SIGKILL")
+    ap.add_argument("--traffic", choices=("poisson", "burst"), default=None,
+                    help="open-loop traffic mode: seeded Poisson or bursty "
+                         "on/off (MMPP) arrivals paced in wall time under "
+                         "the thread engine, instead of a back-to-back "
+                         "request list")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="number of traffic tenants (fair-queued)")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="mean arrival rate per tenant (requests/s)")
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="traffic trace duration (seconds)")
+    ap.add_argument("--shed-policy",
+                    choices=("none", "reject-new", "drop-oldest"),
+                    default="reject-new",
+                    help="admission-control shed policy under --traffic; "
+                         "'none' disables the admission controller (the "
+                         "frontend blocks on a full queue)")
+    ap.add_argument("--queue-limit", type=int, default=32,
+                    help="admission-controller backlog bound (requests)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -130,13 +150,41 @@ def serve(argv=None) -> int:
     print(f"[serve] warmup took {warm:.2f}s mode={mode}")
     n_warm_log = len(engine.compile_log)
 
-    rng = np.random.default_rng(args.seed)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(
-                        0, cfg.vocab, rng.integers(4, 17)).tolist(),
-                    max_new=args.max_new,
-                    deadline_s=args.deadline_s)
-            for i in range(args.requests)]
+    sim_engine = "coroutine"
+    metrics = None
+    if args.traffic:
+        # seeded open-loop traffic: the trace is a pure function of
+        # (--seed, tenant mix, duration) — see repro/serve/traffic.py
+        phases = {"on_s": 0.4, "off_s": 0.4, "on_scale": 3.0} \
+            if args.traffic == "burst" else None
+        tenants = [TenantSpec(name=f"t{i}", rate=args.rate,
+                              max_new=(args.max_new, args.max_new),
+                              deadline_s=args.deadline_s, phases=phases)
+                   for i in range(args.tenants)]
+        reqs = make_trace(tenants, args.duration, seed=args.seed,
+                          vocab=cfg.vocab)
+        metrics = engine.metrics = ServeMetrics()
+        if args.shed_policy != "none":
+            ctrl = AdmissionController(
+                AdmissionConfig(shed_policy=args.shed_policy,
+                                queue_limit=args.queue_limit),
+                metrics=metrics)
+            ctrl.register_tenants(tenants)
+            engine.admission = ctrl
+            ctrl.journal = engine.journal
+        engine.pace = "wall"
+        sim_engine = "thread"     # wall pacing needs preemptive tasks
+        print(f"[serve] traffic={args.traffic} tenants={args.tenants} "
+              f"rate={args.rate}/s x {args.duration}s -> "
+              f"{len(reqs)} requests, shed-policy={args.shed_policy}")
+    else:
+        rng = np.random.default_rng(args.seed)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(
+                            0, cfg.vocab, rng.integers(4, 17)).tolist(),
+                        max_new=args.max_new,
+                        deadline_s=args.deadline_s)
+                for i in range(args.requests)]
 
     # preemption-safe serving: SIGTERM/SIGINT flips the guard; the
     # scheduler then rejects queued admissions with "preempted" errors,
@@ -152,20 +200,21 @@ def serve(argv=None) -> int:
                   f"{len(engine.journal.inflight)} in-flight")
     try:
         t0 = time.perf_counter()
-        results = serve_requests(engine, reqs)
+        results = serve_requests(engine, reqs, sim_engine=sim_engine)
         wall = time.perf_counter() - t0
     finally:
         guard.uninstall()
     ok = {r: v for r, v in results.items() if not isinstance(v, RequestError)}
     failed = {r: v for r, v in results.items() if isinstance(v, RequestError)}
     n_new = sum(len(v) for v in ok.values())
-    for rid in sorted(results):
-        v = results[rid]
-        if isinstance(v, RequestError):
-            print(f"[serve] req {rid}: {v.status} ({v.detail})")
-        else:
-            print(f"[serve] req {rid}: prompt {len(reqs[rid].prompt):2d} tok "
-                  f"-> {v}")
+    if not args.traffic:               # traffic mode prints a summary instead
+        for rid in sorted(results):
+            v = results[rid]
+            if isinstance(v, RequestError):
+                print(f"[serve] req {rid}: {v.status} ({v.detail})")
+            else:
+                print(f"[serve] req {rid}: prompt "
+                      f"{len(reqs[rid].prompt):2d} tok -> {v}")
     lazy = [(k, s, src) for k, s, src in engine.compile_log[n_warm_log:]
             if src == "compiled"]
     if lazy:
@@ -179,6 +228,27 @@ def serve(argv=None) -> int:
               f"{len(failed)} rejected")
     print(f"[serve] {len(ok)} requests, {n_new} tokens in {wall:.2f}s "
           f"({n_new/max(wall,1e-9):.1f} tok/s, {mode} decode)")
+    if metrics is not None:
+        metrics.check_accounting()
+        summ = metrics.summary(wall_s=wall)
+
+        def _ms(v):
+            return "-" if v is None else f"{v * 1e3:.0f}ms"
+
+        print(f"[serve] overload: offered={summ['offered']} "
+              f"admitted={summ['admitted']} shed={summ['shed']} "
+              f"completed={summ['completed']} "
+              f"goodput={summ['goodput_tok_s'] or 0:.1f} tok/s "
+              f"ttft p50={_ms(summ['ttft_p50_s'])} "
+              f"p99={_ms(summ['ttft_p99_s'])}")
+        for name, row in summ["tenants"].items():
+            print(f"[serve]   tenant {name}: offered={row['offered']} "
+                  f"admitted={row['admitted']} shed={row['shed']} "
+                  f"ttft p50={_ms(row['ttft_p50_s'])} "
+                  f"p99={_ms(row['ttft_p99_s'])}")
+        # open-loop contract: every offered request gets an answer —
+        # tokens or a structured error — never a silent absence
+        return 0 if len(results) == len(reqs) else 1
     # a preempted run that answered every request (some with structured
     # rejections) still exits clean — that is the graceful-drain contract
     if guard.requested:

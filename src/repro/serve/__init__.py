@@ -1,6 +1,13 @@
+from .admission import (AdmissionConfig, AdmissionController, BreakerOpen,
+                        CircuitBreaker, ServeMetrics)
 from .engine import (Request, RequestError, ServeConfig, ServingEngine,
                      serve_requests)
 from .journal import ServeJournal
+from .traffic import (TenantSpec, VirtualClock, make_trace,
+                      noisy_neighbor_mix, trace_digest, uniform_mix)
 
-__all__ = ["Request", "RequestError", "ServeConfig", "ServingEngine",
-           "ServeJournal", "serve_requests"]
+__all__ = ["AdmissionConfig", "AdmissionController", "BreakerOpen",
+           "CircuitBreaker", "Request", "RequestError", "ServeConfig",
+           "ServeJournal", "ServeMetrics", "ServingEngine", "TenantSpec",
+           "VirtualClock", "make_trace", "noisy_neighbor_mix",
+           "serve_requests", "trace_digest", "uniform_mix"]

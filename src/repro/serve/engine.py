@@ -64,6 +64,34 @@ response to each, from least to most severe:
   :class:`~repro.ft.PreemptionGuard` by ``launch/serve.py``) makes the
   scheduler reject all queued/future admissions with ``"preempted"``
   errors, finish the in-flight slots, flush results and exit clean.
+
+Overload (PR 8)
+---------------
+
+Sustained offered load above capacity is handled *before* compute is
+spent on it (docs/serving.md, Overload section):
+
+* an :class:`~repro.serve.admission.AdmissionController` (``admission=``)
+  fronts the request channel with per-tenant fair queuing and cost-aware
+  load shedding; every shed is a journaled, structured
+  ``RequestError("overloaded", retry_after_s=...)`` deposited straight
+  into ``results`` — the frontend never blocks indefinitely;
+* without a controller, ``ServeConfig.admit_timeout_s`` bounds how long
+  the direct frontend waits on a full request channel before failing
+  fast the same way (thread engine; cooperative engines hand off);
+* a :class:`~repro.serve.admission.CircuitBreaker` (``breaker=``) gates
+  every ``_call_step``: consecutive step failures open it, further calls
+  fast-fail with ``"overloaded"`` results while open, a half-open probe
+  closes it again;
+* traffic-paced runs (requests carrying ``t_arrival``, from
+  ``serve/traffic.py``) run in one of two pacing modes: ``pace="wall"``
+  sleeps to real arrival times under the thread engine, while
+  ``pace="virtual"`` couples a :class:`~repro.serve.traffic.VirtualClock`
+  to the decode loop through a capacity-1 tick channel — the scheduler
+  advances time by ``step_dt`` per step and the frontend blocks on ticks
+  until the next arrival is due, so the whole overload run (arrivals,
+  queue dynamics, sheds, deadline violations) is a deterministic
+  function of (traffic seed, fault seed, config).
 """
 
 from __future__ import annotations
@@ -86,7 +114,12 @@ class Request:
     rid: int
     prompt: list          # token ids
     max_new: int = 8
-    deadline_s: Optional[float] = None   # wall-clock budget from admission
+    deadline_s: Optional[float] = None   # latency budget (see t_arrival)
+    tenant: str = "default"              # fair-queuing / metrics key
+    # arrival timestamp (trace-relative seconds) set by serve/traffic.py;
+    # when present, deadlines anchor at arrival (queueing time counts),
+    # otherwise at slot admission (the pre-PR8 behaviour)
+    t_arrival: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -94,13 +127,16 @@ class RequestError:
     """Structured failure result for one request (collector value).
 
     ``status`` is one of ``"poisoned"``, ``"deadline"``, ``"cancelled"``,
-    ``"preempted"``, ``"error"``; ``detail`` is human-readable context.
-    A request either yields a token list or a RequestError — never a
-    silent absence from ``results``.
+    ``"preempted"``, ``"overloaded"``, ``"error"``; ``detail`` is
+    human-readable context.  ``retry_after_s`` is set on overload sheds
+    and breaker fast-fails: the client's backoff hint.  A request either
+    yields a token list or a RequestError — never a silent absence from
+    ``results``.
     """
     rid: int
     status: str
     detail: str = ""
+    retry_after_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -112,6 +148,12 @@ class ServeConfig:
     queue_cap: int = 16           # bounded admission queue (channel capacity)
     max_retries: int = 2          # per step-call retry budget (transients)
     retry_base_s: float = 0.0     # exponential-backoff base (0: no sleep)
+    retry_max_s: float = 1.0      # cap on TOTAL backoff per step call
+    # direct-frontend bound on waiting for a full request channel before
+    # failing fast with "overloaded" (None: block, the seed behaviour).
+    # Honoured under the preemptive thread engine; cooperative engines
+    # hand off on the blocking write instead.
+    admit_timeout_s: Optional[float] = None
 
 
 def _default_buckets(max_seq: int) -> tuple:
@@ -145,7 +187,10 @@ class ServingEngine:
     def __init__(self, scfg: ServeConfig, prefill_fn: Callable = None,
                  decode_fn: Callable = None, pad_token: int = 0,
                  batched: Any = None, faults: Any = None,
-                 stop_flag: Callable = None, journal: Any = None):
+                 stop_flag: Callable = None, journal: Any = None,
+                 admission: Any = None, metrics: Any = None,
+                 breaker: Any = None, clock: Callable = None,
+                 pace: Optional[str] = None, step_dt: float = 0.0):
         self.scfg = scfg
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
@@ -171,6 +216,28 @@ class ServingEngine:
             from .journal import ServeJournal
             journal = ServeJournal(journal)
         self.journal = journal
+        # -- overload layer (PR 8) ----------------------------------------
+        # one clock for the whole stack: time.perf_counter in production,
+        # a traffic.VirtualClock for deterministic simulated-time runs
+        self.clock = clock or time.perf_counter
+        # pacing for traffic-timed runs: None (legacy frontend), "wall"
+        # (sleep to real arrival times, thread engine), or "virtual"
+        # (tick-channel coupling, cooperative engines)
+        if pace not in (None, "wall", "virtual"):
+            raise ValueError(f"unknown pace {pace!r}")
+        self.pace = pace
+        self.step_dt = step_dt             # simulated seconds per decode step
+        self.metrics = metrics             # admission.ServeMetrics or None
+        if metrics is not None:
+            metrics.clock = self.clock
+        self.admission = admission         # admission.AdmissionController
+        if admission is not None:
+            if admission.journal is None:
+                admission.journal = self.journal
+            if admission.metrics is None:
+                admission.metrics = self.metrics
+            admission.clock = self.clock
+        self.breaker = breaker             # admission.CircuitBreaker
         self.retry_log: list = []          # (site, attempt, error) tuples
         self.degraded: Optional[tuple] = None   # ("per-slot", reason) or None
         self._aot_prefill: dict = {}       # (B, S) -> executable
@@ -334,16 +401,149 @@ class ServingEngine:
 
     # -- task bodies ---------------------------------------------------------
 
-    def frontend(self, requests: list, req_out) -> None:
-        """Write each request as one EoT-delimited transaction:
-        [rid, max_new, deadline, tok0, tok1, ...] <EoT>."""
+    def _write_req(self, req_out, r) -> None:
+        """One request as one EoT-delimited transaction:
+        [hdr(rid, max_new, deadline, tenant, t_arr), tok0, ...] <EoT>."""
+        req_out.write(("hdr", r.rid, r.max_new,
+                       getattr(r, "deadline_s", None),
+                       getattr(r, "tenant", "default"),
+                       getattr(r, "t_arrival", None)))
+        req_out.write_burst([("tok", t) for t in r.prompt])
+        req_out.close()
+
+    def _offer_direct(self, req_out, r, results) -> bool:
+        """Write one request transaction, failing fast on a full channel.
+
+        With ``admit_timeout_s`` unset this is the seed behaviour: the
+        write blocks until the scheduler drains (a cooperative hand-off
+        under run-to-block engines).  With it set and the channel full,
+        the frontend waits at most that long, then sheds the request with
+        a journaled ``RequestError("overloaded")`` instead of blocking
+        the producer indefinitely.  Returns True iff the request was
+        written."""
+        tmo = self.scfg.admit_timeout_s
+        if tmo is not None and results is not None and req_out.full():
+            give_up = time.monotonic() + tmo
+            while req_out.full() and time.monotonic() < give_up:
+                time.sleep(min(0.002, max(tmo * 0.25, 1e-4)))
+            if req_out.full():
+                detail = (f"request queue full "
+                          f"(cap {self.scfg.queue_cap}) for {tmo}s")
+                if self.journal is not None:
+                    self.journal.shed(r.rid, detail=detail)
+                if self.metrics is not None:
+                    self.metrics.note_shed(
+                        getattr(r, "tenant", "default"), "queue-full")
+                results[r.rid] = RequestError(r.rid, "overloaded", detail,
+                                              retry_after_s=tmo)
+                return False
+        self._write_req(req_out, r)
+        return True
+
+    def frontend(self, requests: list, req_out, results: dict = None) -> None:
+        """Direct (un-paced) frontend: requests are offered back-to-back."""
         for r in requests:
-            req_out.write(("hdr", r.rid, r.max_new,
-                           getattr(r, "deadline_s", None)))
-            req_out.write_burst([("tok", t) for t in r.prompt])
-            req_out.close()
+            if self.metrics is not None:
+                self.metrics.note_offered(getattr(r, "tenant", "default"))
+            if self._offer_direct(req_out, r, results) \
+                    and self.metrics is not None:
+                self.metrics.note_admitted(getattr(r, "tenant", "default"))
         # final empty transaction marks shutdown
         req_out.close()
+
+    # -- traffic-paced frontend (overload path) --------------------------------
+
+    def _deliver(self, results: dict, rid: int, done) -> None:
+        """Deposit a journal-replayed result (exactly-once, no recompute)."""
+        if isinstance(done, tuple):
+            results[rid] = RequestError(rid, done[0], done[1])
+        else:
+            results[rid] = list(done)
+
+    @staticmethod
+    def _drain_ticks(tick_in) -> None:
+        """Consume pending ticks before a potentially-blocking request
+        write.  This is the virtual-pacing deadlock guard: it guarantees
+        an idle scheduler's blocking tick write (:meth:`_timed_idle`) has
+        space to complete, so the scheduler is always runnable to consume
+        whatever the frontend is about to write."""
+        if tick_in is not None:
+            while tick_in.try_read()[0]:
+                pass
+
+    def _pump(self, req_out, results: dict, tick_in=None,
+              drain: bool = False) -> None:
+        """Move dispatchable requests from the admission controller into
+        the request channel, in fair-queue order.  Normally stops at a
+        full channel (the backlog stays in the controller where it can
+        still be shed); ``drain=True`` pushes everything through with
+        blocking writes (end of trace — the scheduler is consuming)."""
+        ctrl = self.admission
+        if ctrl is None:
+            return
+        while True:
+            for e in ctrl.drain_errors():      # dispatch-time sheds
+                results[e.rid] = e
+            if not drain and req_out.full():
+                return
+            r = ctrl.pop()
+            if r is None:
+                break
+            self._drain_ticks(tick_in)
+            self._write_req(req_out, r)
+        for e in ctrl.drain_errors():
+            results[e.rid] = e
+
+    def _offer_timed(self, r, req_out, results: dict, tick_in=None) -> None:
+        ctrl = self.admission
+        if ctrl is None:
+            if self.metrics is not None:
+                self.metrics.note_offered(r.tenant)
+            self._drain_ticks(tick_in)
+            if self._offer_direct(req_out, r, results) \
+                    and self.metrics is not None:
+                self.metrics.note_admitted(r.tenant)
+            return
+        verdict = ctrl.offer(r)
+        if verdict is None:
+            return                             # queued; _pump dispatches
+        if isinstance(verdict, RequestError):
+            results[verdict.rid] = verdict     # shed at offer
+        else:                                  # ("replayed", done)
+            self._deliver(results, r.rid, verdict[1])
+
+    def traffic_frontend(self, trace: list, req_out, tick_in,
+                         results: dict) -> None:
+        """Open-loop frontend: release each request at its ``t_arrival``.
+
+        Wall pacing sleeps to real arrival times (thread engine).
+        Virtual pacing blocks on the tick channel until the scheduler —
+        which advances the shared VirtualClock by ``step_dt`` per decode
+        step, or fast-forwards to ``clock.next_event`` when idle — has
+        moved simulated time past the next arrival.  Arrival timestamps
+        are rebased onto the engine clock (``t_start``), so deadlines and
+        TTFT anchor at *arrival*, queueing time included.
+        """
+        virtual = self.pace == "virtual" and tick_in is not None
+        t_start = self.clock()
+        for r in trace:
+            t_abs = t_start + (r.t_arrival or 0.0)
+            if virtual:
+                self.clock.next_event = t_abs
+                while self.clock() < t_abs:
+                    tick_in.read()             # cooperative hand-off
+                self.clock.next_event = None
+            else:
+                wait = t_abs - self.clock()
+                if wait > 0:
+                    time.sleep(wait)
+            self._offer_timed(dataclasses.replace(r, t_arrival=t_abs),
+                              req_out, results, tick_in)
+            self._pump(req_out, results, tick_in)
+        self._pump(req_out, results, tick_in, drain=True)
+        self._drain_ticks(tick_in)             # unblock a mid-write scheduler
+        req_out.close()                        # shutdown transaction
+        self._drain_ticks(tick_in)
 
     # -- admission (shared by both paths) -------------------------------------
 
@@ -368,7 +568,7 @@ class ServingEngine:
         if is_eot:                          # empty transaction = shutdown
             req_in.open()
             return ("shutdown",)
-        kind, rid, max_new, deadline = req_in.peek()
+        kind, rid, max_new, deadline, tenant, t_arr = req_in.peek()
         assert kind == "hdr", kind
         req_in.read()                       # consume the peeked header
         prompt = [t for (_, t) in req_in.read_transaction()]
@@ -376,9 +576,13 @@ class ServingEngine:
         # prompts keep their most recent max_seq-1 tokens so one decode
         # position remains
         prompt = (prompt or [self.pad])[-(self.scfg.max_seq - 1):]
-        return ("req", rid, max_new, prompt, deadline)
+        return ("req", rid, max_new, prompt, deadline, tenant, t_arr)
 
-    def _emit(self, out_chan, rid: int, new: list) -> None:
+    def _emit(self, out_chan, rid: int, new: list, slot: dict = None) -> None:
+        if self.metrics is not None and slot is not None:
+            self.metrics.note_done(slot.get("tenant", "default"),
+                                   slot.get("t_arr"), slot.get("t_first"),
+                                   len(new))
         if self.journal is not None:
             # write-ahead: the retire record hits disk before the result
             # transaction exists, so a crash in between re-delivers from
@@ -389,44 +593,92 @@ class ServingEngine:
         out_chan.close()
 
     def _emit_err(self, out_chan, rid: int, status: str,
-                  detail: str = "") -> None:
+                  detail: str = "", slot: dict = None,
+                  retry_after: Optional[float] = None) -> None:
         """One error transaction; the collector turns it into a
         :class:`RequestError` result."""
+        if retry_after is None and status == "overloaded" \
+                and self.breaker is not None:
+            retry_after = self.breaker.retry_after()   # client backoff hint
+        if self.metrics is not None and slot is not None:
+            self.metrics.note_failed(slot.get("tenant", "default"), status)
         if self.journal is not None:
             self.journal.retire(rid, status=status, detail=detail)
-        out_chan.write(("err", rid, status, detail))
+        out_chan.write(("err", rid, status, detail, retry_after))
         out_chan.close()
 
     def _note_tok(self, s: dict, t: int) -> None:
         """Append one emitted token to a slot, journaling it first — the
         single funnel for every token either decode path produces."""
+        if "t_first" not in s:
+            s["t_first"] = self.clock()    # TTFT stamp (first real token)
         if self.journal is not None:
             self.journal.tok(s["rid"], t)
         s["new"].append(t)
 
     # -- hardening helpers -----------------------------------------------------
 
-    def _call_step(self, site: str, rids: list, fn, *args):
+    def _backoff(self, attempt: int, slept: float, slots) -> float:
+        """One retry backoff sleep; returns the seconds actually slept.
+
+        The exponential term is clamped two ways: ``retry_max_s`` caps
+        the *total* backoff for one step call (the seed's uncapped
+        ``base * 2**attempt`` could stall the whole batched decode loop),
+        and no sleep ever extends past the earliest remaining deadline
+        among the live slots — backing off for one slot's transient must
+        not blow every neighbour's budget."""
+        dt = self.scfg.retry_base_s * 2 ** attempt
+        dt = min(dt, max(0.0, self.scfg.retry_max_s - slept))
+        if slots:
+            now = self.clock()
+            for s in slots:
+                if s is None or s.get("deadline") is None:
+                    continue
+                anchor = s["t_arr"] if s.get("t_arr") is not None else s["t0"]
+                dt = min(dt, max(0.0, s["deadline"] - (now - anchor)))
+        if dt > 0:
+            time.sleep(dt)
+        return dt
+
+    def _call_step(self, site: str, rids: list, fn, *args, slots=None):
         """Run one step function under the serving fault contract.
 
-        Consults the injector *before* ``fn`` executes, so both
-        :class:`PoisonError` (re-raised for the caller to quarantine) and
-        :class:`TransientFault` (retried here with exponential backoff)
-        fire while any donated buffers in ``args`` are still valid.
+        Consults the circuit breaker and the fault injector *before*
+        ``fn`` executes, so :class:`~repro.serve.admission.BreakerOpen`
+        (fast-fail while the backend is suspect), :class:`PoisonError`
+        (re-raised for the caller to quarantine) and
+        :class:`TransientFault` (retried here with capped,
+        deadline-aware backoff) all fire while any donated buffers in
+        ``args`` are still valid.  Only *final* step outcomes reach the
+        breaker: a retried transient that eventually succeeds counts as
+        success.
         """
+        if self.breaker is not None:
+            self.breaker.check()           # may raise BreakerOpen
+        slept = 0.0
         for attempt in range(self.scfg.max_retries + 1):
             try:
                 if self.faults is not None:
                     self.faults.serving_check(site, rids)
-                return fn(*args)
+                out = fn(*args)
             except PoisonError:
-                raise
+                raise                      # per-request, not a backend fault
             except TransientFault as e:
                 self.retry_log.append((site, attempt, repr(e)))
                 if attempt >= self.scfg.max_retries:
+                    if self.breaker is not None:
+                        self.breaker.failure(repr(e))
                     raise
                 if self.scfg.retry_base_s > 0:
-                    time.sleep(self.scfg.retry_base_s * 2 ** attempt)
+                    slept += self._backoff(attempt, slept, slots)
+                continue
+            except Exception as e:  # noqa: BLE001 - real backend failure
+                if self.breaker is not None:
+                    self.breaker.failure(repr(e))
+                raise
+            if self.breaker is not None:
+                self.breaker.success()
+            return out
 
     def _abnormal(self, s: dict) -> Optional[tuple]:
         """(status, detail) if the slot must be retired abnormally."""
@@ -434,7 +686,11 @@ class ServingEngine:
         if err is not None:
             return err
         dl = s.get("deadline")
-        if dl is not None and time.perf_counter() - s["t0"] > dl:
+        # arrival-anchored when the request carries t_arrival (queueing
+        # time counts against the budget), slot-admission-anchored (t0)
+        # for legacy requests — the pre-PR8 contract
+        anchor = s["t_arr"] if s.get("t_arr") is not None else s["t0"]
+        if dl is not None and self.clock() - anchor > dl:
             return ("deadline", f"deadline {dl}s exceeded after "
                                 f"{len(s['new'])} tokens")
         if self.faults is not None and \
@@ -474,7 +730,7 @@ class ServingEngine:
 
     # -- scheduler -------------------------------------------------------------
 
-    def scheduler(self, req_in, out_chan) -> None:
+    def scheduler(self, req_in, out_chan, tick_out=None) -> None:
         """Admission + continuous batch decode."""
         batched = self.batched is not None
         if batched:
@@ -490,12 +746,42 @@ class ServingEngine:
                 self.degraded = ("per-slot", repr(e)[:200])
                 batched = False
         if batched:
-            self._scheduler_batched(req_in, out_chan)
+            self._scheduler_batched(req_in, out_chan, tick_out)
         else:
-            self._scheduler_per_slot(req_in, out_chan)
+            self._scheduler_per_slot(req_in, out_chan, tick_out)
         out_chan.close()                   # shutdown transaction
 
+    def _timed_idle(self, tick_out) -> None:
+        """Idle under virtual pacing: hand simulated time to the frontend.
+
+        Nothing is decoding, so the only pending event is the frontend's
+        next arrival (``clock.next_event``): fast-forward to it and tick.
+        The second, *blocking* tick write is the cooperative yield — the
+        run-to-block engine switches to the frontend there, which reads
+        the tick, sees its arrival due, and writes the next request."""
+        clk = self.clock
+        ne = getattr(clk, "next_event", None)
+        if ne is not None and hasattr(clk, "advance_to"):
+            clk.advance_to(ne)
+        tick_out.try_write(clk())      # fill the capacity-1 channel...
+        tick_out.write(clk())          # ...then block until it drains
+
+    def _after_step(self, tick_out, t_wall0) -> None:
+        """Per-decode-step bookkeeping: advance virtual time + tick, and
+        feed the measured (or simulated) per-token latency to the
+        admission controller's deadline-infeasibility estimator."""
+        if tick_out is not None:
+            self.clock.advance(self.step_dt)
+            tick_out.try_write(self.clock())   # lossy: frontend may lag
+            dt = self.step_dt
+        else:
+            dt = (time.perf_counter() - t_wall0) \
+                if t_wall0 is not None else None
+        if self.admission is not None and dt:
+            self.admission.observe_token_latency(dt)
+
     def _mk_slot(self, rid, max_new, prompt, deadline,
+                 tenant: str = "default", t_arr: Optional[float] = None,
                  seeded: Optional[list] = None) -> dict:
         """One decode-slot record.  ``seeded`` (journal replay) pre-loads
         tokens the crashed process already emitted: they join the prompt
@@ -506,7 +792,8 @@ class ServingEngine:
         prompt = (list(prompt) + seeded)[-(self.scfg.max_seq - 1):]
         return {"rid": rid, "prompt": prompt, "plen": len(prompt),
                 "max_new": max_new, "new": seeded, "seeded": len(seeded),
-                "deadline": deadline, "t0": time.perf_counter()}
+                "deadline": deadline, "tenant": tenant, "t_arr": t_arr,
+                "t0": self.clock()}
 
     def _slot_for(self, r, out_chan) -> Optional[dict]:
         """Journal-aware slot construction for one admitted request.
@@ -517,7 +804,7 @@ class ServingEngine:
         slot that was already at its last token when the process died).
         Fresh rids are journaled *before* any compute happens for them.
         """
-        _, rid, max_new, prompt, deadline = r
+        _, rid, max_new, prompt, deadline, tenant, t_arr = r
         j = self.journal
         if j is not None:
             done = j.completed.get(rid)
@@ -530,33 +817,39 @@ class ServingEngine:
             rec = j.inflight.pop(rid, None)
             if rec is not None:
                 s = self._mk_slot(rid, rec["max_new"], rec["prompt"],
-                                  rec.get("deadline"), seeded=rec["toks"])
+                                  rec.get("deadline"), tenant, t_arr,
+                                  seeded=rec["toks"])
                 if s["new"] and self._finished(s):
-                    self._emit(out_chan, rid, s["new"])
+                    self._emit(out_chan, rid, s["new"], slot=s)
                     return None
                 return s
             j.admit(rid, prompt, max_new, deadline)
         if max_new <= 0:
-            self._emit(out_chan, rid, [])
+            self._emit(out_chan, rid, [],
+                       slot={"tenant": tenant, "t_arr": t_arr})
             return None
-        return self._mk_slot(rid, max_new, prompt, deadline)
+        return self._mk_slot(rid, max_new, prompt, deadline, tenant, t_arr)
 
-    def _scheduler_per_slot(self, req_in, out_chan) -> None:
+    def _scheduler_per_slot(self, req_in, out_chan, tick_out=None) -> None:
         scfg = self.scfg
+        coop = tick_out is not None        # virtual pacing (tick coupling)
         slots: list[Optional[dict]] = [None] * scfg.batch_slots
         shutdown = False
         while True:
             if not shutdown and self._stop_requested():
                 self._drain_reject(req_in, out_chan)
                 shutdown = True
-            # Admit while a slot is free; block only when fully idle.
+            # Admit while a slot is free; block only when fully idle
+            # (under virtual pacing never block here — _timed_idle is the
+            # yield point, so the frontend can still advance time).
             while not shutdown:
                 free = next((i for i, s in enumerate(slots) if s is None),
                             None)
                 if free is None:
                     break
                 r = self._admit_one(
-                    req_in, can_wait=not any(s is not None for s in slots))
+                    req_in, can_wait=not coop and not any(
+                        s is not None for s in slots))
                 if r[0] == "shutdown":
                     shutdown = True
                     break
@@ -570,9 +863,14 @@ class ServingEngine:
             if not live:
                 if shutdown:
                     break
+                if coop:
+                    self._timed_idle(tick_out)
                 continue
 
+            t_wall0 = time.perf_counter() \
+                if (self.admission is not None and not coop) else None
             self._step_batch(slots)
+            self._after_step(tick_out, t_wall0)
 
             # retire finished/failed slots (one transaction per request)
             for i, s in enumerate(slots):
@@ -580,10 +878,10 @@ class ServingEngine:
                     continue
                 ab = self._abnormal(s)
                 if ab is not None:
-                    self._emit_err(out_chan, s["rid"], *ab)
+                    self._emit_err(out_chan, s["rid"], *ab, slot=s)
                     slots[i] = None
                 elif self._finished(s):
-                    self._emit(out_chan, s["rid"], s["new"])
+                    self._emit(out_chan, s["rid"], s["new"], slot=s)
                     slots[i] = None
 
     def _do_prefill(self, s: dict) -> None:
@@ -620,10 +918,13 @@ class ServingEngine:
     def _step_slot(self, site: str, s: dict, fn) -> None:
         """One per-slot step with quarantine: a failing request marks only
         its own slot (``s["error"]``); neighbours keep decoding."""
+        from .admission import BreakerOpen
         try:
-            self._call_step(site, [s["rid"]], fn, s)
+            self._call_step(site, [s["rid"]], fn, s, slots=[s])
         except PoisonError as e:
             s["error"] = ("poisoned", str(e))
+        except BreakerOpen as e:
+            s["error"] = ("overloaded", str(e))
         except Exception as e:  # noqa: BLE001 - incl. exhausted transients
             s["error"] = ("error", repr(e)[:200])
 
@@ -642,8 +943,10 @@ class ServingEngine:
 
     # -- batched fast path -----------------------------------------------------
 
-    def _scheduler_batched(self, req_in, out_chan) -> None:
+    def _scheduler_batched(self, req_in, out_chan, tick_out=None) -> None:
+        from .admission import BreakerOpen
         scfg = self.scfg
+        coop = tick_out is not None        # virtual pacing (tick coupling)
         n = scfg.batch_slots
         slots: list[Optional[dict]] = [None] * n
         packed = self.batched.init_slots(n)
@@ -662,7 +965,7 @@ class ServingEngine:
             while not shutdown and sum(s is None for s in slots) > len(newly):
                 r = self._admit_one(
                     req_in,
-                    can_wait=not newly and not any(
+                    can_wait=not coop and not newly and not any(
                         s is not None for s in slots))
                 if r[0] == "shutdown":
                     shutdown = True
@@ -678,7 +981,7 @@ class ServingEngine:
                 # a request can finish at prefill (max_new == 1 / eos)
                 for i, s in enumerate(slots):
                     if s is not None and self._finished(s):
-                        self._emit(out_chan, s["rid"], s["new"])
+                        self._emit(out_chan, s["rid"], s["new"], slot=s)
                         packed = retire_exe(packed, np.int32(i))
                         slots[i] = None
 
@@ -688,13 +991,15 @@ class ServingEngine:
                     continue
                 ab = self._abnormal(s)
                 if ab is not None:
-                    self._emit_err(out_chan, s["rid"], *ab)
+                    self._emit_err(out_chan, s["rid"], *ab, slot=s)
                     packed = retire_exe(packed, np.int32(i))
                     slots[i] = None
 
             if not any(s is not None for s in slots):
                 if shutdown:
                     break
+                if coop:
+                    self._timed_idle(tick_out)
                 continue
 
             # -- ONE jitted decode step for the whole slot array ----------
@@ -703,15 +1008,31 @@ class ServingEngine:
                 if s is not None:
                     toks[i] = s["next"]
             rids = [s["rid"] for s in slots if s is not None]
+            t_wall0 = time.perf_counter() \
+                if (self.admission is not None and not coop) else None
             try:
                 nxt, packed = self._call_step("decode", rids, step_exe,
-                                              toks, packed, np.int32(step_i))
+                                              toks, packed, np.int32(step_i),
+                                              slots=slots)
             except PoisonError as e:
                 # raised before the step executed, so the donated packed
                 # cache is still valid: retire only the poisoned slot
                 for i, s in enumerate(slots):
                     if s is not None and s["rid"] == e.rid:
-                        self._emit_err(out_chan, e.rid, "poisoned", str(e))
+                        self._emit_err(out_chan, e.rid, "poisoned", str(e),
+                                       slot=s)
+                        packed = retire_exe(packed, np.int32(i))
+                        slots[i] = None
+                continue
+            except BreakerOpen as e:
+                # also raised before the step executed (donated cache
+                # valid): fast-fail every live request with a structured
+                # overload error — no compute is spent while the backend
+                # is suspect; the half-open probe will test recovery
+                for i, s in enumerate(slots):
+                    if s is not None:
+                        self._emit_err(out_chan, s["rid"], "overloaded",
+                                       str(e), slot=s)
                         packed = retire_exe(packed, np.int32(i))
                         slots[i] = None
                 continue
@@ -724,11 +1045,12 @@ class ServingEngine:
                 for i, s in enumerate(slots):
                     if s is not None:
                         self._emit_err(out_chan, s["rid"], "error",
-                                       repr(e)[:200])
+                                       repr(e)[:200], slot=s)
                         slots[i] = None
                 packed = self.batched.init_slots(n)
                 continue
             step_i += 1
+            self._after_step(tick_out, t_wall0)
             nxt = np.asarray(nxt)   # [slots] — the only per-step transfer
 
             for i, s in enumerate(slots):
@@ -738,7 +1060,7 @@ class ServingEngine:
                 self._note_tok(s, t)
                 s["next"] = t
                 if self._finished(s):
-                    self._emit(out_chan, s["rid"], s["new"])
+                    self._emit(out_chan, s["rid"], s["new"], slot=s)
                     packed = retire_exe(packed, np.int32(i))
                     slots[i] = None
 
@@ -780,15 +1102,22 @@ class ServingEngine:
                 try:
                     first, cache = self._call_step("prefill", rids, exe,
                                                    toks, lens,
-                                                   np.int32(step_i))
+                                                   np.int32(step_i),
+                                                   slots=grp)
                 except PoisonError as e:
-                    self._emit_err(out_chan, e.rid, "poisoned", str(e))
+                    bad = next(s for s in grp if s["rid"] == e.rid)
+                    self._emit_err(out_chan, e.rid, "poisoned", str(e),
+                                   slot=bad)
                     grp = [s for s in grp if s["rid"] != e.rid]
                     continue                # retry the group without it
                 except Exception as e:  # noqa: BLE001 - group-level failure
+                    from .admission import BreakerOpen
+                    st = "overloaded" if isinstance(e, BreakerOpen) \
+                        else "error"
                     for s in grp:
-                        self._emit_err(out_chan, s["rid"], "error",
-                                       repr(e)[:200])
+                        self._emit_err(out_chan, s["rid"], st,
+                                       str(e) if st == "overloaded"
+                                       else repr(e)[:200], slot=s)
                     break
                 step_i += 1
                 first = np.asarray(first)  # [bk] sampled on device
@@ -810,10 +1139,11 @@ class ServingEngine:
                 break
             hdr = out_in.read()
             if hdr[0] == "err":            # quarantined/rejected request
-                _, rid, status, detail = hdr
+                _, rid, status, detail, retry_after = hdr
                 for _ in out_in.read_transaction():
                     pass
-                results[rid] = RequestError(rid, status, detail)
+                results[rid] = RequestError(rid, status, detail,
+                                            retry_after_s=retry_after)
                 continue
             kind, rid = hdr
             assert kind == "hdr"
@@ -825,10 +1155,25 @@ class ServingEngine:
         cap = self.scfg.queue_cap          # bounded admission queue
         req = channel(capacity=cap, name="requests")
         out = channel(capacity=cap, name="outputs")
-        task() \
-            .invoke(self.frontend, requests, req) \
-            .invoke(self.scheduler, req, out) \
-            .invoke(self.collector, out, results)
+        # traffic-timed mode: requests carrying arrival times, an
+        # admission controller, or an explicit pace select the paced
+        # frontend; plain request lists keep the seed task graph
+        timed = (self.admission is not None or self.pace is not None
+                 or any(getattr(r, "t_arrival", None) is not None
+                        for r in requests))
+        if timed:
+            tick = channel(capacity=1, name="ticks") \
+                if self.pace == "virtual" else None
+            task() \
+                .invoke(self.traffic_frontend, requests, req, tick,
+                        results) \
+                .invoke(self.scheduler, req, out, tick) \
+                .invoke(self.collector, out, results)
+        else:
+            task() \
+                .invoke(self.frontend, requests, req, results) \
+                .invoke(self.scheduler, req, out) \
+                .invoke(self.collector, out, results)
 
 
 def serve_requests(engine: ServingEngine, requests: list,

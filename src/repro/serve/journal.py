@@ -5,6 +5,12 @@ serving scheduler:
 
 * ``{"t": "admit", "rid", "prompt", "max_new", "deadline"}`` — a request
   entered a decode slot.  Written *before* any compute for that request.
+* ``{"t": "shed", "rid", "detail", "retry_after"}`` — the admission
+  controller rejected the request (overload).  Written *before* the
+  structured ``RequestError("overloaded")`` verdict is delivered, so a
+  crash between shedding and delivery re-delivers the verdict on restart
+  instead of silently re-admitting a request the client was already told
+  to back off from.
 * ``{"t": "tok", "rid", "tok"}`` — one emitted token.  Written as each
   token is appended to the slot, so the journal always knows the request's
   last position.
@@ -17,7 +23,8 @@ serving scheduler:
 Replay folds the log into two maps:
 
 * ``completed``: rid -> token list (or ``(status, detail)``) — requests
-  whose result is durable.  A re-submitted completed rid is answered
+  whose result is durable.  Shed records fold to
+  ``("overloaded", detail)`` here: a shed verdict is a final answer.  A re-submitted completed rid is answered
   straight from the journal, never recomputed: with the rid-keyed result
   store this is exactly-once delivery (a crash after retire-journal but
   before delivery re-emits the identical result; a duplicate submission
@@ -38,6 +45,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 from pathlib import Path
 from typing import Optional
 
@@ -51,6 +59,9 @@ class ServeJournal:
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self._truncate_torn_tail()
         self._f = open(self.path, "a", encoding="utf-8")
+        # under the thread engine the frontend (shed records) and the
+        # scheduler (admit/tok/retire) append concurrently
+        self._lock = threading.Lock()
 
     def _truncate_torn_tail(self) -> None:
         """Cut the file back to its last complete record before appending.
@@ -79,15 +90,23 @@ class ServeJournal:
     # -- append (write-ahead: callers journal BEFORE acting) ---------------
 
     def _append(self, rec: dict) -> None:
-        self._f.write(json.dumps(rec, separators=(",", ":")) + "\n")
-        self._f.flush()
-        os.fsync(self._f.fileno())
+        with self._lock:
+            self._f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+            self._f.flush()
+            os.fsync(self._f.fileno())
 
     def admit(self, rid: int, prompt: list, max_new: int,
               deadline: Optional[float]) -> None:
         self._append({"t": "admit", "rid": int(rid),
                       "prompt": [int(t) for t in prompt],
                       "max_new": int(max_new), "deadline": deadline})
+
+    def shed(self, rid: int, detail: str = "",
+             retry_after: float = 0.0) -> None:
+        """Durable overload verdict (write-ahead, before delivery)."""
+        self._append({"t": "shed", "rid": int(rid), "detail": detail,
+                      "retry_after": retry_after})
+        self.completed[int(rid)] = ("overloaded", detail)
 
     def tok(self, rid: int, tok: int) -> None:
         self._append({"t": "tok", "rid": int(rid), "tok": int(tok)})
@@ -137,6 +156,9 @@ class ServeJournal:
                 elif t == "tok":
                     if rid in inflight:
                         inflight[rid]["toks"].append(rec["tok"])
+                elif t == "shed":
+                    inflight.pop(rid, None)
+                    completed[rid] = ("overloaded", rec.get("detail", ""))
                 elif t == "retire":
                     inflight.pop(rid, None)
                     if "toks" in rec:
