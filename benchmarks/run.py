@@ -147,6 +147,8 @@ def main(argv=None) -> int:
                  or sim_res.get("fault_overhead_regression")
                  or codegen_res.get("codegen_regression")
                  or synth_res["gate"]["synth_regression"]
+                 or synth_res["gate"].get("pallas_regression")
+                 or synth_res["gate"].get("async_depth_regression")
                  or serve_res["gate"]["serve_regression"]
                  or serve_res["gate"].get("overload_regression")) else 0
 

@@ -17,6 +17,21 @@ Acceptance gate: compiled tokens/sec >= 10x the coroutine twin.  The
 compiled row is measured hot (the first run pays the XLA compile and
 primes the cache; a second process would pay nothing — subprocess-tested
 in tests/test_synth.py).
+
+Two further sections ride on the same record:
+
+  pallas_interconnect   the identical pipeline lowered once with the XLA
+                        reference interconnect and once with the Pallas
+                        ring/guard kernels ("pallas" on a TPU backend,
+                        "interpret" elsewhere).  Gate: kernels >= 1.0x
+                        the XLA path — enforced only on a real TPU; off-
+                        TPU the ratio is recorded with the waiver reason
+                        (the interpreter emulates, it doesn't accelerate).
+  async_depth           a read-port fetch loop against a high-latency
+                        memory (async_mmap lowered to the compiled
+                        latency queue), outstanding depth 1 vs 4.  Gate:
+                        depth-4 tokens/sec >= depth-1 (the issue-ahead
+                        window must hide round-trips, paper S3.1.2).
 """
 
 from __future__ import annotations
@@ -135,18 +150,159 @@ def measure(n_tokens: int, stages: int, burst: int, capacity: int,
     }
 
 
+def build_fetch_pipeline(n_tokens: int, depth: int, latency: int):
+    """One fetch task streaming ``n_tokens`` words through an async_mmap
+    read port (warmup primes ``depth`` requests, steady state retires one
+    response and issues the next address per firing) into a result mmap."""
+    import jax.numpy as jnp
+
+    import repro
+    from repro import StepTask, mmap
+    from repro.core import async_mmap
+
+    data = np.arange(n_tokens, dtype=np.int32) * 3
+    port = async_mmap(data.copy(), latency=latency, depth=depth, name="mem")
+    buf = np.zeros(n_tokens, np.int32)
+    res = mmap(buf, "res")
+    d = min(depth, n_tokens)
+
+    def warm(k, port, res):
+        port.read_addr.write(k)
+        return k + 1
+
+    def step(k, port, res):
+        res.write_burst(k - d, port.read_data.read()[None])
+        port.read_addr.write(k)
+        return k + 1
+
+    def flush(k, port, res):
+        res.write_burst(k - d, port.read_data.read()[None])
+        return k + 1
+
+    Fetch = StepTask(step, steps=n_tokens - d, init=jnp.int32(0),
+                     warmup=warm, n_warmup=d, flush=flush, n_flush=d,
+                     name="Fetch")
+
+    def Top(port, res):
+        repro.task().invoke(Fetch, port, res)
+
+    return Top, (port, res), (data, buf)
+
+
+def measure_interconnect(n_tokens: int, stages: int, burst: int,
+                         capacity: int, repeats: int) -> dict:
+    """The relay pipeline lowered with ring_impl="xla" vs the Pallas
+    kernels ("pallas" on TPU, "interpret" elsewhere), both measured hot."""
+    import repro
+    from repro.kernels.dispatch import is_tpu
+
+    kernel_impl = "pallas" if is_tpu() else "interpret"
+    hops = n_tokens * (stages + 1)
+    rows = []
+    tps = {}
+    for impl in ("xla", kernel_impl):
+        top, args, buf = build_pipeline(n_tokens, stages, burst, capacity)
+        repro.ENGINES["compiled"](ring_impl=impl).run(top, *args)  # cold
+        best = None
+        sweeps = None
+        for _ in range(repeats):
+            top, args, buf = build_pipeline(n_tokens, stages, burst,
+                                            capacity)
+            eng = repro.ENGINES["compiled"](ring_impl=impl)
+            t0 = time.perf_counter()
+            rep = eng.run(top, *args)
+            wall = time.perf_counter() - t0
+            assert rep.ok, rep.error
+            assert np.array_equal(buf, np.arange(n_tokens)), impl
+            if best is None or wall < best:
+                best, sweeps = wall, eng.n_sweeps
+        tps[impl] = hops / best
+        rows.append({"variant": f"ring_{impl}",
+                     "tokens_per_sec": round(tps[impl], 1),
+                     "sweeps": sweeps, "wall_s": round(best, 6)})
+    sec = {
+        "config": {"n_tokens": n_tokens, "stages": stages, "burst": burst,
+                   "capacity": capacity, "repeats": repeats, "hops": hops},
+        "rows": rows,
+        "kernel_impl": kernel_impl,
+        "on_tpu": is_tpu(),
+        "kernel_vs_xla_x": round(tps[kernel_impl] / tps["xla"], 3),
+    }
+    if not is_tpu():
+        sec["gate_waived"] = (
+            "no TPU backend: the ring/guard kernels ran under the Pallas "
+            "interpreter, which emulates rather than accelerates; the "
+            "ratio is recorded and the >=1.0x gate applies on TPU only")
+    return sec
+
+
+def measure_async_depth(n_tokens: int, latency: int, repeats: int,
+                        depths=(1, 4)) -> dict:
+    """Fetch throughput at outstanding depth 1 vs 4 against a
+    ``latency``-sweep memory port — the compiled latency queue's
+    issue-ahead payoff."""
+    import repro
+
+    rows = []
+    tps = {}
+    for depth in depths:
+        top, args, (data, buf) = build_fetch_pipeline(n_tokens, depth,
+                                                      latency)
+        repro.ENGINES["compiled"]().run(top, *args)              # cold
+        assert np.array_equal(buf, data), "fetch corrupted"
+        best = None
+        sweeps = None
+        max_out = None
+        for _ in range(repeats):
+            top, args, (data, buf) = build_fetch_pipeline(n_tokens, depth,
+                                                          latency)
+            eng = repro.ENGINES["compiled"]()
+            t0 = time.perf_counter()
+            rep = eng.run(top, *args)
+            wall = time.perf_counter() - t0
+            assert rep.ok, rep.error
+            assert np.array_equal(buf, data), "fetch corrupted"
+            if best is None or wall < best:
+                best, sweeps = wall, eng.n_sweeps
+                max_out = args[0].max_outstanding_reads
+        tps[depth] = n_tokens / best
+        rows.append({"variant": f"depth{depth}",
+                     "tokens_per_sec": round(tps[depth], 1),
+                     "sweeps": sweeps, "max_outstanding_reads": max_out,
+                     "wall_s": round(best, 6)})
+    return {
+        "config": {"n_tokens": n_tokens, "latency": latency,
+                   "repeats": repeats, "depths": list(depths)},
+        "rows": rows,
+        "depth4_vs_depth1_x": round(tps[depths[-1]] / tps[depths[0]], 3),
+    }
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: smaller token volume, single repeat")
     args = ap.parse_args(argv)
 
+    from repro.kernels.dispatch import resolve_impl
+    from repro.kernels.ring import RING_CHOICES, RING_ENV
+    ambient_impl = resolve_impl("ring", RING_ENV, RING_CHOICES,
+                                fallback="xla")
+
     if args.quick:
         out = measure(n_tokens=4096, stages=8, burst=64, capacity=64,
                       repeats=1)
+        out["pallas_interconnect"] = measure_interconnect(
+            n_tokens=1024, stages=8, burst=32, capacity=32, repeats=1)
+        out["async_depth"] = measure_async_depth(n_tokens=128, latency=8,
+                                                 repeats=1)
     else:
         out = measure(n_tokens=16384, stages=8, burst=64, capacity=64,
                       repeats=2)
+        out["pallas_interconnect"] = measure_interconnect(
+            n_tokens=2048, stages=8, burst=32, capacity=32, repeats=2)
+        out["async_depth"] = measure_async_depth(n_tokens=512, latency=8,
+                                                 repeats=2)
 
     cfg = out["config"]
     print(f"pipeline: {cfg['stages']} stages x {cfg['n_tokens']} tokens, "
@@ -158,17 +314,58 @@ def main(argv=None) -> dict:
     print(f"compiled vs coroutine twin: "
           f"{out['compiled_speedup_vs_twin']}x (gate: >= {GATE_X}x)")
 
-    out["gate"] = {"required_x": GATE_X,
-                   "synth_regression":
-                       out["compiled_speedup_vs_twin"] < GATE_X}
+    ic = out["pallas_interconnect"]
+    print(f"\ninterconnect kernels ({ic['kernel_impl']}, "
+          f"{'TPU' if ic['on_tpu'] else 'no TPU'}):")
+    for r in ic["rows"]:
+        print(f"{r['variant']:<16} {r['tokens_per_sec']:>14.0f} "
+              f"{r['wall_s']*1e3:>9.1f}")
+    print(f"kernels vs xla reference: {ic['kernel_vs_xla_x']}x"
+          + (f"  [gate waived: {ic['gate_waived']}]"
+             if "gate_waived" in ic else "  (gate: >= 1.0x)"))
+
+    ad = out["async_depth"]
+    print(f"\nasync_mmap latency queue (latency="
+          f"{ad['config']['latency']} sweeps):")
+    for r in ad["rows"]:
+        print(f"{r['variant']:<16} {r['tokens_per_sec']:>14.0f} "
+              f"{r['wall_s']*1e3:>9.1f}  sweeps={r['sweeps']} "
+              f"max_out={r['max_outstanding_reads']}")
+    print(f"depth-4 vs depth-1: {ad['depth4_vs_depth1_x']}x "
+          f"(gate: >= 1.0x)")
+
+    out["gate"] = {
+        "required_x": GATE_X,
+        "synth_regression": out["compiled_speedup_vs_twin"] < GATE_X,
+        "pallas_regression": bool(ic["on_tpu"]
+                                  and ic["kernel_vs_xla_x"] < 1.0),
+        "async_depth_regression": ad["depth4_vs_depth1_x"] < 1.0,
+    }
+    if out["gate"]["synth_regression"] and ambient_impl == "interpret":
+        # $REPRO_RING_IMPL=interpret routes every channel op through the
+        # Pallas interpreter — a correctness configuration, not a fast
+        # one, so the 10x-twin gate is recorded as waived, not failed
+        out["gate"]["synth_regression"] = False
+        out["gate"]["synth_gate_waived"] = (
+            f"ambient ring impl is 'interpret' (${RING_ENV}): "
+            f"interpreter-emulated interconnect; speedup "
+            f"{out['compiled_speedup_vs_twin']}x recorded without gating")
     write_bench("synth_time", out)
     print(f"wrote {BENCH_JSON}")
     if out["gate"]["synth_regression"]:
         print(f"SYNTH THROUGHPUT REGRESSION: "
               f"{out['compiled_speedup_vs_twin']}x < required {GATE_X}x")
+    if out["gate"]["pallas_regression"]:
+        print(f"PALLAS INTERCONNECT REGRESSION: "
+              f"{ic['kernel_vs_xla_x']}x < required 1.0x on TPU")
+    if out["gate"]["async_depth_regression"]:
+        print(f"ASYNC DEPTH REGRESSION: depth-4 "
+              f"{ad['depth4_vs_depth1_x']}x < 1.0x depth-1")
     return out
 
 
 if __name__ == "__main__":
     res = main()
-    raise SystemExit(1 if res["gate"]["synth_regression"] else 0)
+    raise SystemExit(1 if (res["gate"]["synth_regression"]
+                           or res["gate"]["pallas_regression"]
+                           or res["gate"]["async_depth_regression"]) else 0)

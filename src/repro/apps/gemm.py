@@ -221,3 +221,149 @@ def run_step(engine: str = "coroutine", P: int = 4, n: int = 8, K: int = 4,
     """Run the step-form graph — ``engine="compiled"`` synthesizes it."""
     top, args, check = build_step(P=P, n=n, K=K, seed=seed)
     return simulate("gemm_step", top, args, engine, check)
+
+
+def build_step_async(P: int = 4, n: int = 8, K: int = 4, seed: int = 0,
+                     mem_latency: int = 4, depth: int = 4):
+    """The systolic array with **async memory ports** on both ends: each
+    row's A blocks arrive through an ``async_mmap`` read port (an AFetch
+    task keeps up to ``depth`` block fetches in flight) and each row's C
+    blocks leave through an ``async_mmap`` write port (a CStore task
+    issues stores ahead of the returning write acks).  Synthesizable by
+    ``CompiledEngine`` — the ports lower to latency queues in the
+    whole-graph program (docs/synthesis.md, "kernel lowering").
+
+    Because per-firing channel *selection* must be static, the row's P
+    result channels are funneled through a RowMux task into one
+    capacity-P channel that CStore drains block-by-block; B keeps its
+    plain mmap feeders, so the graph mixes sync and async interfaces.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((P * n, K * n)).astype(np.float32)
+    B = rng.standard_normal((K * n, P * n)).astype(np.float32)
+
+    from ..core import async_mmap
+
+    # row i's K blocks, block-indexed: a_blocks[i][k] == A block (i, k)
+    a_blocks = [np.ascontiguousarray(
+        A[i * n:(i + 1) * n, :].reshape(n, K, n).swapaxes(0, 1))
+        for i in range(P)]
+    a_ports = [async_mmap(a_blocks[i], latency=mem_latency, depth=depth,
+                          name=f"Ablk{i}") for i in range(P)]
+    c_ports = [async_mmap(np.zeros((P, n, n), np.float32),
+                          latency=mem_latency, depth=depth, name=f"Crow{i}")
+               for i in range(P)]
+    b_mm = mmap(B, "B")
+
+    dA = min(depth, K)
+    dC = min(depth, P)
+
+    def afetch_warm(k, port, out):
+        port.read_addr.write(k)
+        return k + 1
+
+    def afetch_step(k, port, out):
+        out.write(port.read_data.read())
+        port.read_addr.write(k)
+        return k + 1
+
+    def afetch_flush(k, port, out):
+        out.write(port.read_data.read())
+        return k + 1
+
+    def bfeeder_step(k, b: MMap, out, j: int):
+        rows = jnp.asarray(b.read_burst(k * n, n))      # (n, P*n), dynamic k
+        out.write(rows[:, j * n:(j + 1) * n])
+        return k + 1
+
+    _mac = jax.jit(lambda acc, a, b: acc + a @ b)
+
+    def pe_step(acc, a_in, b_in, a_out, b_out, c_out):
+        a = a_in.read()
+        b = b_in.read()
+        if a_out is not None:
+            a_out.write(a)
+        if b_out is not None:
+            b_out.write(b)
+        return _mac(acc, a, b)
+
+    def pe_flush(acc, a_in, b_in, a_out, b_out, c_out):
+        c_out.write(acc)
+        return acc
+
+    def rowmux_step(state, c_ins, crow):
+        crow.write_burst(jnp.stack([ch.read() for ch in c_ins]))
+        return state
+
+    def cstore_warm(k, port, crow):
+        port.write_addr.write(k)
+        port.write_data.write(crow.read())
+        return k + 1
+
+    def cstore_step(k, port, crow):
+        port.write_resp.read()
+        port.write_addr.write(k)
+        port.write_data.write(crow.read())
+        return k + 1
+
+    def cstore_flush(k, port, crow):
+        port.write_resp.read()
+        return k + 1
+
+    AFetchS = StepTask(afetch_step, steps=K - dA, init=jnp.int32(0),
+                       warmup=afetch_warm, n_warmup=dA,
+                       flush=afetch_flush, n_flush=dA, name="AFetch")
+    BFeederS = StepTask(bfeeder_step, steps=K, init=jnp.int32(0),
+                        name="BFeeder")
+    PES = StepTask(pe_step, steps=K, flush=pe_flush,
+                   init=jnp.zeros((n, n), jnp.float32), name="PE")
+    RowMuxS = StepTask(rowmux_step, steps=1, name="RowMux")
+    CStoreS = StepTask(cstore_step, steps=P - dC, init=jnp.int32(0),
+                       warmup=cstore_warm, n_warmup=dC,
+                       flush=cstore_flush, n_flush=dC, name="CStore")
+
+    def Top(b: MMap, aports, cports):
+        blk = dict(dtype=np.float32, shape=(n, n))
+        a_ch = [[channel(2, f"a{i}_{j}", **blk) for j in range(P)]
+                for i in range(P)]
+        b_ch = [[channel(2, f"b{i}_{j}", **blk) for j in range(P)]
+                for i in range(P)]
+        c_ch = [[channel(1, f"c{i}_{j}", **blk) for j in range(P)]
+                for i in range(P)]
+        crow_ch = [channel(P, f"crow{i}", **blk) for i in range(P)]
+        t = task()
+        for i in range(P):
+            t = t.invoke(AFetchS, aports[i], a_ch[i][0], name=f"AFetch{i}")
+            t = t.invoke(BFeederS, b, b_ch[0][i], i, name=f"BFeeder{i}")
+        for i in range(P):
+            for j in range(P):
+                t = t.invoke(
+                    PES, a_ch[i][j], b_ch[i][j],
+                    a_ch[i][j + 1] if j + 1 < P else None,
+                    b_ch[i + 1][j] if i + 1 < P else None,
+                    c_ch[i][j], name=f"PE{i}_{j}")
+        for i in range(P):
+            t = t.invoke(RowMuxS, c_ch[i], crow_ch[i], name=f"RowMux{i}")
+            t = t.invoke(CStoreS, cports[i], crow_ch[i], name=f"CStore{i}")
+
+    def check():
+        ref = A @ B
+        got = np.concatenate(
+            [np.concatenate(list(np.asarray(c_ports[i].data)), axis=1)
+             for i in range(P)], axis=0)
+        err = float(np.max(np.abs(got - ref)))
+        return err < 1e-3 * K * n, err
+
+    return Top, (b_mm, a_ports, c_ports), check
+
+
+def run_step_async(engine: str = "coroutine", P: int = 4, n: int = 8,
+                   K: int = 4, seed: int = 0, mem_latency: int = 4,
+                   depth: int = 4) -> AppResult:
+    """Run the async-port step-form graph on any engine (incl. compiled)."""
+    top, args, check = build_step_async(P=P, n=n, K=K, seed=seed,
+                                        mem_latency=mem_latency, depth=depth)
+    return simulate("gemm_step_async", top, args, engine, check)

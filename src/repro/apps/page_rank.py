@@ -304,3 +304,159 @@ def run_step(engine: str = "coroutine", **kw) -> AppResult:
     """Run the step-form graph — ``engine="compiled"`` synthesizes it."""
     top, args, check = build_step(**kw)
     return simulate("page_rank_step", top, args, engine, check)
+
+
+def build_step_async(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,
+                     n_iters: int = 5, seed: int = 0, edge_latency: int = 4,
+                     edge_depth: int = 4):
+    """The step-form feedback loop with **async-fed edges**: each PE's edge
+    list sits behind an ``async_mmap`` port and a per-PE EdgeFetcher task
+    streams the rows in through the port's latency queue, issuing addresses
+    up to ``edge_depth`` ahead of the returning data — the step-function
+    twin of ``build``'s ``read_pipelined`` idiom, synthesizable by
+    ``CompiledEngine`` (docs/synthesis.md, "kernel lowering").
+
+    The fetcher is the canonical issue-ahead shape: a warmup phase primes
+    ``depth`` requests, the steady phase retires one row and issues the
+    next address per firing, and a flush phase drains the in-flight
+    window.  Scatter then bursts the whole row batch out of an ordinary
+    channel, so the rank feedback cycle of ``build_step`` is unchanged —
+    one graph exercises both the cycle and the latency queue.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_vertices, n_edges).astype(np.int32)
+    out_deg = np.maximum(np.bincount(src, minlength=n_vertices), 1)
+
+    part = (n_vertices + n_pe - 1) // n_pe
+    pe_edges = [np.array([(int(s), int(d)) for s, d in zip(src, dst)
+                          if d // part == p], np.int32).reshape(-1, 2)
+                for p in range(n_pe)]
+    for p, e in enumerate(pe_edges):
+        assert len(e) > 0, \
+            f"partition {p} has no edges; pick a denser graph or fewer PEs"
+
+    def _gather_plan(e):
+        by_v: dict[int, list] = {}
+        for k, (_, d) in enumerate(e):
+            by_v.setdefault(int(d), []).append(k)
+        width = max((len(v) for v in by_v.values()), default=1)
+        idx = np.full((n_vertices, width), len(e), np.int32)   # sentinel
+        for v, ks in by_v.items():
+            idx[v, :len(ks)] = ks
+        return idx
+
+    gather_plans = [_gather_plan(pe_edges[p]) for p in range(n_pe)]
+
+    r0 = np.full(n_vertices, 1.0 / n_vertices, np.float32)
+    ranks = np.zeros(n_vertices, np.float32)
+
+    r0_mm = mmap(r0, "ranks0")
+    out_mm = mmap(ranks, "ranks")
+    deg_mm = mmap(out_deg.astype(np.float32), "out_deg")
+    edge_ports = [async_mmap(pe_edges[p], latency=edge_latency,
+                             depth=edge_depth, name=f"edges{p}")
+                 for p in range(n_pe)]
+    plan_mms = [mmap(gather_plans[p], f"gather{p}") for p in range(n_pe)]
+
+    def _mk_fetcher(p: int, n_e: int):
+        """Issue-ahead row fetcher: addresses cycle 0..n_e-1, n_iters
+        sweeps of the table, with ``d`` requests in flight."""
+        d = min(edge_depth, n_e)
+        total = n_iters * n_e
+
+        def warm(k, port, erows):
+            port.read_addr.write(jnp.mod(k, n_e))
+            return k + 1
+
+        def step(k, port, erows):
+            erows.write(port.read_data.read())
+            port.read_addr.write(jnp.mod(k, n_e))
+            return k + 1
+
+        def flush(k, port, erows):
+            erows.write(port.read_data.read())
+            return k + 1
+
+        return StepTask(step, steps=total - d, init=jnp.int32(0),
+                        warmup=warm, n_warmup=d, flush=flush, n_flush=d,
+                        name=f"EdgeFetch{p}")
+
+    def scatter_step(state, plan: MMap, deg: MMap, erows, ranks_in,
+                     upd_out, n_e: int):
+        r = ranks_in.read()
+        e = jnp.asarray(erows.read_burst(n_e))
+        idx = jnp.asarray(plan.read_burst(0, n_vertices))
+        degv = jnp.asarray(deg.read_burst(0, n_vertices))
+        w = r[e[:, 0]] / degv[e[:, 0]]
+        wext = jnp.concatenate([w, jnp.zeros(1, jnp.float32)])
+        contrib = wext[idx[:, 0]]
+        for k in range(1, idx.shape[1]):        # static, fixed-order sum
+            contrib = contrib + wext[idx[:, k]]
+        upd_out.write(contrib)
+        return state
+
+    _mix = jax.jit(lambda total: ((1 - DAMPING) / n_vertices +
+                                  DAMPING * total).astype(jnp.float32))
+
+    def _combine(upd_ins):
+        total = upd_ins[0].read()
+        for ci in upd_ins[1:]:
+            total = total + ci.read()
+        return _mix(total)
+
+    def ctrl_warmup(r, ranks0: MMap, out: MMap, rank_outs, upd_ins):
+        r = jnp.asarray(ranks0.read_burst(0, n_vertices))
+        for o in rank_outs:
+            o.write(r)
+        return r
+
+    def ctrl_step(r, ranks0: MMap, out: MMap, rank_outs, upd_ins):
+        r = _combine(upd_ins)
+        for o in rank_outs:
+            o.write(r)
+        return r
+
+    def ctrl_flush(r, ranks0: MMap, out: MMap, rank_outs, upd_ins):
+        r = _combine(upd_ins)
+        out.write_burst(0, r)
+        return r
+
+    fetchers = [_mk_fetcher(p, len(pe_edges[p])) for p in range(n_pe)]
+    ScatterS = StepTask(scatter_step, steps=n_iters, name="Scatter")
+    CtrlS = StepTask(ctrl_step, steps=n_iters - 1, warmup=ctrl_warmup,
+                     flush=ctrl_flush,
+                     init=jnp.zeros(n_vertices, jnp.float32), name="Ctrl")
+
+    def Top(r0m: MMap, outm: MMap, degm: MMap, eports, plans):
+        vec = dict(dtype=np.float32, shape=(n_vertices,))
+        rank_ch = [channel(1, f"rank{p}", **vec) for p in range(n_pe)]
+        upd_ch = [channel(1, f"upd{p}", **vec) for p in range(n_pe)]
+        t = task()
+        for p in range(n_pe):
+            n_e = len(pe_edges[p])
+            erow = channel(n_e, f"erow{p}", dtype=np.int32, shape=(2,))
+            t = t.invoke(fetchers[p], eports[p], erow)
+            t = t.invoke(ScatterS, plans[p], degm, erow, rank_ch[p],
+                         upd_ch[p], n_e, name=f"Scatter{p}")
+        t.invoke(CtrlS, r0m, outm, rank_ch, upd_ch)
+
+    def check():
+        ref = np.full(n_vertices, 1.0 / n_vertices, np.float64)
+        for _ in range(n_iters):
+            contrib = np.zeros(n_vertices, np.float64)
+            np.add.at(contrib, dst, ref[src] / out_deg[src])
+            ref = (1 - DAMPING) / n_vertices + DAMPING * contrib
+        err = float(np.max(np.abs(ranks - ref)))
+        return err < 1e-5, err
+
+    return Top, (r0_mm, out_mm, deg_mm, edge_ports, plan_mms), check
+
+
+def run_step_async(engine: str = "coroutine", **kw) -> AppResult:
+    """Run the async-fed step-form graph on any engine (incl. compiled)."""
+    top, args, check = build_step_async(**kw)
+    return simulate("page_rank_step_async", top, args, engine, check)

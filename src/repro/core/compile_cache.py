@@ -172,14 +172,17 @@ def _enc_fn(h, fn: Callable, depth: int, seen: set) -> None:
 
 def _enc(h, v: Any, depth: int = 0, seen: Optional[set] = None) -> None:
     seen = seen if seen is not None else set()
-    iface = getattr(v, "iface_kind", None)
+    iface = None if isinstance(v, type) else getattr(v, "iface_kind", None)
     if v is None or isinstance(v, (bool, int, float, complex, str, bytes)):
         h.update(f"lit:{v!r}".encode())
     elif iface in ("mmap", "async_mmap"):
         # the typed-interface contract (paper S3.1.2): an mmap argument is
         # a *runtime* device buffer, so only its aval reaches the hash —
-        # two instances differing in array values share one definition
+        # two instances differing in array values share one definition.
+        # Async ports fold in latency/depth: they size the lowered queue.
         h.update(f"{iface}:{v.dtype}:{tuple(v.shape)}".encode())
+        if iface == "async_mmap":
+            h.update(f":lat{v.latency}:d{v.depth}".encode())
     elif iface == "scalar":
         h.update(b"scalar")
         _enc(h, v.value, depth, seen)

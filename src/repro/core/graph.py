@@ -204,7 +204,14 @@ class Graph:
                 h.update(
                     f"chan:{chan_idx.get(id(v), -1)}:{v.capacity}:"
                     f"{v.dtype}:{v.shape}".encode())
-            elif isinstance(v, (MMap, AsyncMMap)):
+            elif isinstance(v, AsyncMMap):
+                # latency and depth shape the lowered latency queue (the
+                # in-flight window is part of the compiled carry), so two
+                # ports differing only in timing compile separately
+                h.update(f"{v.iface_kind}:{iface_idx.get(id(v), -1)}:"
+                         f"{v.dtype}:{tuple(v.shape)}:"
+                         f"lat{v.latency}:d{v.depth}".encode())
+            elif isinstance(v, MMap):
                 h.update(f"{v.iface_kind}:{iface_idx.get(id(v), -1)}:"
                          f"{v.dtype}:{tuple(v.shape)}".encode())
             elif isinstance(v, Scalar):

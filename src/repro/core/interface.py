@@ -328,24 +328,38 @@ class AsyncMMap(Interface):
                  "read_reqs", "write_reqs", "read_resps", "write_resps",
                  "max_outstanding_reads", "max_outstanding_writes")
 
-    def __init__(self, data: Any, latency: int = 4, depth: int = 4,
-                 name: Optional[str] = None):
+    def __init__(self, data: Any, latency: int = 4,
+                 depth: Optional[int] = 4, name: Optional[str] = None):
         if latency < 0:
             raise ValueError("async_mmap latency must be >= 0")
-        if depth < 1:
-            raise ValueError("async_mmap outstanding depth must be >= 1")
+        if depth is not None and (not isinstance(depth, int)
+                                  or isinstance(depth, bool) or depth < 1):
+            raise ValueError(
+                "async_mmap outstanding depth must be an int >= 1, or "
+                "None for an unbounded in-flight window (simulation only)")
         self.uid = next(_iface_uid)
         self.name = name or f"amap{self.uid}"
         self.data = data
         self.latency = latency
         self.depth = depth
         self.owner = None
-        mk = lambda side: Channel(depth, f"{self.name}.{side}")  # noqa: E731
-        self._raddr = mk("read_addr")
-        self._rdata = mk("read_data")
-        self._waddr = mk("write_addr")
-        self._wdata = mk("write_data")
-        self._wresp = mk("write_resp")
+        # member channels carry a declared element spec so the synthesis
+        # path (core/synth.py) can size their ring buffers: addresses are
+        # int32 scalars, data tokens rows of the buffer, write acks bools
+        try:
+            elem_dt = np.dtype(self.dtype)
+            elem_shape: Optional[tuple] = tuple(self.shape[1:])
+        except TypeError:
+            elem_dt, elem_shape = None, None
+        cap = depth if depth is not None else \
+            max(1, self.shape[0] if self.shape else 1)
+        mk = lambda side, dt, shp: Channel(  # noqa: E731
+            cap, f"{self.name}.{side}", dtype=dt, shape=shp)
+        self._raddr = mk("read_addr", np.int32, ())
+        self._rdata = mk("read_data", elem_dt, elem_shape)
+        self._waddr = mk("write_addr", np.int32, ())
+        self._wdata = mk("write_data", elem_dt, elem_shape)
+        self._wresp = mk("write_resp", np.bool_, ())
         for ch in self.channels():
             ch.iface = self
         # task-facing views (paper Table 2's async_mmap member streams)
@@ -457,7 +471,8 @@ class AsyncMMap(Interface):
         faults = getattr(engine, "faults", None)
         if faults is not None and not faults.affects_memory:
             faults = None
-        while self._raddr._q and self._pending_reads < self.depth:
+        while self._raddr._q and (self.depth is None or
+                                  self._pending_reads < self.depth):
             addr = engine._iface_pop(self._raddr)
             if self._binding is not None:
                 self._binding.direction.add("read")
@@ -472,7 +487,8 @@ class AsyncMMap(Interface):
                 lat,
                 lambda eng, a=addr: self._deliver_read(eng, a))
         while (self._waddr._q and self._wdata._q and
-               self._pending_writes < self.depth):
+               (self.depth is None or
+                self._pending_writes < self.depth)):
             addr = engine._iface_pop(self._waddr)
             value = engine._iface_pop(self._wdata)
             if self._binding is not None:
@@ -567,10 +583,12 @@ def mmap(data: Any, name: Optional[str] = None) -> MMap:
     return MMap(data, name=name)
 
 
-def async_mmap(data: Any, latency: int = 4, depth: int = 4,
+def async_mmap(data: Any, latency: int = 4, depth: Optional[int] = 4,
                name: Optional[str] = None) -> AsyncMMap:
     """Wrap an array as an asynchronous memory port — ``tapa::async_mmap``
-    with a configurable response latency and outstanding-request depth."""
+    with a configurable response latency and outstanding-request depth.
+    ``depth=None`` gives an unbounded in-flight window (simulation only;
+    synthesis needs a bounded window to size the latency queue)."""
     return AsyncMMap(data, latency=latency, depth=depth, name=name)
 
 

@@ -34,13 +34,28 @@ Whole-graph lowerings are keyed in the PR-2 compile cache by the graph's
 structural hash + input avals: a second process re-running the same graph
 performs **zero XLA compiles**.
 
+The ring-buffer ops themselves (pop/push bursts, fused guard
+evaluation) dispatch through :mod:`repro.kernels.ring` — Pallas kernels
+on TPU, a bit-exact vectorized XLA reference elsewhere, interpret mode
+for parity tests — selected per engine (``ring_impl=``) or process
+(``$REPRO_RING_IMPL``).
+
+``async_mmap`` ports ARE synthesizable (since schema ``synth2``): the
+five member channels lower to ordinary ring buffers and the memory
+endpoint becomes a fixed-``depth`` latency queue in the while_loop
+carry, serviced once per sweep — requests are accepted issue-ahead up
+to ``depth`` outstanding and responses delivered ``latency`` sweeps
+later in per-port FIFO order, matching the simulator contract.  See
+``docs/synthesis.md`` ("kernel lowering").
+
 Anything outside the subset is *refused with a diagnostic naming the
 task/channel* (:class:`~repro.core.errors.SynthesisError`), never
 miscompiled: non-step leaf tasks (e.g. availability-routed switches using
 ``peek``/``select``), channels without a declared element spec,
-data-dependent I/O rates, async_mmap ports (ROADMAP: synth pipelining),
-and mmaps both written and read across tasks (schedule-dependent).
-See ``docs/synthesis.md``.
+data-dependent I/O rates, async_mmap ports with an unbounded in-flight
+window (``depth=None``) or used for both reads and writes (response-
+timing-dependent), and mmaps both written and read across tasks
+(schedule-dependent).  See ``docs/synthesis.md``.
 """
 
 from __future__ import annotations
@@ -65,8 +80,11 @@ from .graph import extract_graph
 from .interface import AsyncMMap, MMap
 from .task import (AutoStream, TaskInstance, bind_streams,
                    builder_stack_depth, join_pending_builders)
+from ..kernels.dispatch import resolve_impl
+from ..kernels.ring import (RING_CHOICES, RING_ENV, eval_guards, ring_pop,
+                            ring_push)
 
-SYNTH_SCHEMA = "synth1"
+SYNTH_SCHEMA = "synth2"
 
 
 def _canon_dtype(dtype: Any) -> np.dtype:
@@ -213,12 +231,59 @@ class _TwinStream:
         self._s.write_burst(list(arr))
 
 
+class _TwinPort:
+    """Simulation-twin view of an async memory port: the five member
+    streams wrapped as :class:`_TwinStream` so burst reads stack to
+    arrays — the exact value shapes synthesis hands the phase function.
+    Port streams are never EoT-closed (memory request channels carry no
+    transactions), so they stay off the ``close_outputs`` list."""
+
+    __slots__ = ("_p", "read_addr", "read_data", "write_addr",
+                 "write_data", "write_resp")
+
+    def __init__(self, p: AsyncMMap):
+        self._p = p
+        self.read_addr = _TwinStream(p.read_addr)
+        self.read_data = _TwinStream(p.read_data)
+        self.write_addr = _TwinStream(p.write_addr)
+        self.write_data = _TwinStream(p.write_data)
+        self.write_resp = _TwinStream(p.write_resp)
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(self._p.shape)
+
+    @property
+    def dtype(self):
+        return self._p.dtype
+
+    @property
+    def latency(self) -> int:
+        return self._p.latency
+
+    @property
+    def depth(self):
+        return self._p.depth
+
+    @property
+    def name(self) -> str:
+        return self._p.name
+
+    def __len__(self) -> int:
+        return len(self._p)
+
+    def read_pipelined(self, addrs) -> list:
+        return self._p.read_pipelined(addrs)
+
+
 def _twin_view(v: Any, streams: Optional[list] = None) -> Any:
     if isinstance(v, (IStream, OStream, AutoStream)):
         tw = _TwinStream(v)
         if streams is not None:
             streams.append(tw)
         return tw
+    if isinstance(v, AsyncMMap):
+        return _TwinPort(v)
     if isinstance(v, (list, tuple)):
         return type(v)(_twin_view(x, streams) for x in v)
     return v
@@ -232,11 +297,12 @@ class _Ctx:
     """Mutable trace-time context: the functional channel/mmap states a
     firing reads and replaces."""
 
-    __slots__ = ("chans", "mmaps")
+    __slots__ = ("chans", "mmaps", "ring_impl")
 
-    def __init__(self, chans: dict, mmaps: dict):
+    def __init__(self, chans: dict, mmaps: dict, ring_impl: str = "xla"):
         self.chans = chans      # ci -> (buf, head, size)
         self.mmaps = mmaps      # mi -> array
+        self.ring_impl = ring_impl
 
 
 class _Recorder:
@@ -274,19 +340,18 @@ class _SynthStream:
     def read(self):
         buf, head, size = self._ctx.chans[self._ci]
         self._account("read", 1)
-        tok = buf[head]
-        cap = self._chan.capacity
-        self._ctx.chans[self._ci] = (buf, (head + 1) % cap, size - 1)
-        return tok
+        toks, head, size = ring_pop(buf, head, size, 1,
+                                    impl=self._ctx.ring_impl)
+        self._ctx.chans[self._ci] = (buf, head, size)
+        return toks[0]
 
     def read_burst(self, n: int):
         n = self._static(n, "read_burst")
         buf, head, size = self._ctx.chans[self._ci]
         self._account("read", n)
-        cap = self._chan.capacity
-        idx = (head + jnp.arange(n, dtype=jnp.int32)) % cap
-        toks = buf[idx]
-        self._ctx.chans[self._ci] = (buf, (head + n) % cap, size - n)
+        toks, head, size = ring_pop(buf, head, size, n,
+                                    impl=self._ctx.ring_impl)
+        self._ctx.chans[self._ci] = (buf, head, size)
         return toks
 
     # -- writes --------------------------------------------------------------
@@ -295,9 +360,8 @@ class _SynthStream:
         self._check_elem(tok, burst=False)
         buf, head, size = self._ctx.chans[self._ci]
         self._account("write", 1)
-        cap = self._chan.capacity
-        buf = buf.at[(head + size) % cap].set(tok)
-        self._ctx.chans[self._ci] = (buf, head, size + 1)
+        self._ctx.chans[self._ci] = ring_push(buf, head, size, tok[None],
+                                              impl=self._ctx.ring_impl)
 
     def write_burst(self, arr) -> None:
         arr = jnp.asarray(arr) if not isinstance(arr, (list, tuple)) \
@@ -306,10 +370,8 @@ class _SynthStream:
         n = int(arr.shape[0])
         buf, head, size = self._ctx.chans[self._ci]
         self._account("write", n)
-        cap = self._chan.capacity
-        idx = (head + size + jnp.arange(n, dtype=jnp.int32)) % cap
-        buf = buf.at[idx].set(arr)
-        self._ctx.chans[self._ci] = (buf, head, size + n)
+        self._ctx.chans[self._ci] = ring_push(buf, head, size, arr,
+                                              impl=self._ctx.ring_impl)
 
     # -- everything else is outside the synthesizable subset -----------------
     def _unsupported(self, op: str):
@@ -472,6 +534,72 @@ class _MMapRef:
         self.mi = mi
 
 
+class _PortRef:
+    __slots__ = ("pi", "cis")
+
+    def __init__(self, pi: int, cis: tuple):
+        self.pi = pi
+        self.cis = cis      # (raddr, rdata, waddr, wdata, wresp) chan ids
+
+
+class _SynthAsyncPort:
+    """Trace-time view of an async memory port: the five member streams
+    are ordinary :class:`_SynthStream` views over their ring buffers in
+    the carry — so port I/O gets guards and static-rate counting for
+    free — while the memory endpoint itself is serviced once per sweep
+    by the lowered latency queue (see ``_build_program``)."""
+
+    __slots__ = ("_port", "_inst", "read_addr", "read_data", "write_addr",
+                 "write_data", "write_resp")
+
+    def __init__(self, ctx: _Ctx, cis: tuple, port: AsyncMMap,
+                 inst: TaskInstance, rec: Optional[_Recorder],
+                 plan: "_Plan"):
+        self._port = port
+        self._inst = inst
+        mk = lambda ci: _SynthStream(  # noqa: E731
+            ctx, ci, plan.channels[ci], inst, rec)
+        ra, rd, wa, wd, wr = cis
+        self.read_addr = mk(ra)
+        self.read_data = mk(rd)
+        self.write_addr = mk(wa)
+        self.write_data = mk(wd)
+        self.write_resp = mk(wr)
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(self._port.shape)
+
+    @property
+    def dtype(self):
+        return self._port.dtype
+
+    @property
+    def latency(self) -> int:
+        return self._port.latency
+
+    @property
+    def depth(self):
+        return self._port.depth
+
+    @property
+    def name(self) -> str:
+        return self._port.name
+
+    def __len__(self) -> int:
+        return len(self._port)
+
+    def read_pipelined(self, addrs):
+        raise SynthesisError(
+            f"task {self._inst.name!r} used read_pipelined on async_mmap "
+            f"{self._port.name!r}: its issue/drain interleaving is "
+            f"availability-routed (try_write/select), outside the static-"
+            f"rate subset.  Software-pipeline it instead: issue addresses "
+            f"with write/write_burst on read_addr and drain read_data with "
+            f"read/read_burst across warmup/step/flush phases (see "
+            f"docs/synthesis.md, kernel lowering)")
+
+
 @dataclass
 class _PhasePlan:
     label: str
@@ -493,6 +621,7 @@ class _TaskPlan:
     t_kwargs: dict = field(default_factory=dict)
     chan_ids: list = field(default_factory=list)
     mmap_ids: list = field(default_factory=list)
+    port_ids: list = field(default_factory=list)
     phases: list = field(default_factory=list)   # [_PhasePlan]
     state0: Any = None
 
@@ -515,6 +644,11 @@ class _Plan:
         self._chan_idx: dict[int, int] = {}
         self.mmaps: list[MMap] = []
         self._mmap_idx: dict[int, int] = {}
+        self.ports: list[AsyncMMap] = []
+        self._port_idx: dict[int, int] = {}
+        self.port_chan_ids: dict[int, tuple] = {}   # pi -> 5 member cis
+        self.port_dirs: list[set] = []              # pi -> {"read","write"}
+        self.ring_impl: str = "xla"
         self.tasks: list[_TaskPlan] = []
 
     def chan_index(self, c: Channel) -> int:
@@ -529,6 +663,14 @@ class _Plan:
         if i is None:
             i = self._mmap_idx[id(m)] = len(self.mmaps)
             self.mmaps.append(m)
+        return i
+
+    def port_index(self, p: AsyncMMap) -> int:
+        i = self._port_idx.get(id(p))
+        if i is None:
+            i = self._port_idx[id(p)] = len(self.ports)
+            self.ports.append(p)
+            self.port_dirs.append(set())
         return i
 
 
@@ -547,10 +689,24 @@ def _build_template(v: Any, plan: _Plan, tp: _TaskPlan) -> Any:
             tp.mmap_ids.append(mi)
         return _MMapRef(mi)
     if isinstance(v, AsyncMMap):
-        raise SynthesisError(
-            f"task {tp.inst.name!r} binds async_mmap {v.name!r}: async "
-            f"memory ports are not synthesizable yet (ROADMAP: async_mmap "
-            f"pipelining in synth); use mmap or the simulation engines")
+        if not isinstance(v.depth, int):
+            raise SynthesisError(
+                f"task {tp.inst.name!r} binds async_mmap {v.name!r} with "
+                f"an unbounded in-flight window (depth=None): synthesis "
+                f"sizes the latency queue in the while_loop carry from a "
+                f"static depth — give the port a bounded depth (e.g. "
+                f"depth=4) or run on a simulation engine")
+        pi = plan.port_index(v)
+        if pi not in tp.port_ids:
+            tp.port_ids.append(pi)
+        cis = []
+        for ch in v.channels():
+            ci = plan.chan_index(ch)
+            if ci not in tp.chan_ids:
+                tp.chan_ids.append(ci)
+            cis.append(ci)
+        plan.port_chan_ids[pi] = tuple(cis)
+        return _PortRef(pi, tuple(cis))
     if isinstance(v, (list, tuple)):
         conv = [_build_template(x, plan, tp) for x in v]
         return type(v)(conv) if isinstance(v, tuple) else conv
@@ -563,6 +719,9 @@ def _instantiate(t: Any, ctx: _Ctx, plan: _Plan, inst: TaskInstance,
         return _SynthStream(ctx, t.ci, plan.channels[t.ci], inst, rec)
     if isinstance(t, _MMapRef):
         return _SynthMMap(ctx, t.mi, plan.mmaps[t.mi], inst, rec)
+    if isinstance(t, _PortRef):
+        return _SynthAsyncPort(ctx, t.cis, plan.ports[t.pi], inst, rec,
+                               plan)
     if isinstance(t, (list, tuple)):
         conv = [_instantiate(x, ctx, plan, inst, rec) for x in t]
         return type(t)(conv) if isinstance(t, tuple) else conv
@@ -597,7 +756,7 @@ def _phase_probe(plan: _Plan, tp: _TaskPlan, fn: Callable,
 
     def probe(state, chans, mmaps):
         ctx = _Ctx(dict(zip(tp.chan_ids, chans)),
-                   dict(zip(tp.mmap_ids, mmaps)))
+                   dict(zip(tp.mmap_ids, mmaps)), plan.ring_impl)
         args = tuple(_instantiate(t, ctx, plan, tp.inst, rec)
                      for t in tp.t_args)
         kw = {k: _instantiate(t, ctx, plan, tp.inst, rec)
@@ -658,14 +817,54 @@ def _count_phase(plan: _Plan, tp: _TaskPlan, label: str, fn: Callable,
 # the whole-graph program
 # ---------------------------------------------------------------------------
 
+def _port_carry0(port: AsyncMMap) -> tuple:
+    """Initial latency-queue carry for one async port: the device copy of
+    the buffer, two fixed-``depth`` in-flight rings (read: addr+due;
+    write: addr+due+value), and the six always-on request counters."""
+    data = jnp.asarray(port.data)
+    d = port.depth
+    zv = jnp.zeros((d,), jnp.int32)
+    zs = jnp.zeros((), jnp.int32)
+    return (data,
+            zv, zv, zs, zs,                                  # read queue
+            zv, zv, jnp.zeros((d,) + data.shape[1:], data.dtype),
+            zs, zs,                                          # write queue
+            zs, zs, zs, zs, zs, zs)                          # counters
+
+# _port_carry0 tuple indices (shared by the program and the stats fill)
+_P_DATA, _P_RADDR, _P_RDUE, _P_RHEAD, _P_RSIZE = 0, 1, 2, 3, 4
+_P_WADDR, _P_WDUE, _P_WVAL, _P_WHEAD, _P_WSIZE = 5, 6, 7, 8, 9
+_P_ACC_R, _P_DEL_R, _P_ACC_W, _P_DEL_W, _P_MAX_R, _P_MAX_W = \
+    10, 11, 12, 13, 14, 15
+
+
 def _build_program(plan: _Plan, resumable: bool = False) -> Callable:
     """One jitted function for the whole graph.
 
-    carry = (chans, states, mmaps, fires, progress, sweeps, maxocc); one
-    while_loop iteration is one *sweep*: every task instance gets one
-    guarded chance to fire.  The loop runs until every task exhausted its
-    firing budget, or a full sweep made no progress (the compiled analogue
-    of the engines' deadlock detection).
+    carry = (chans, states, mmaps, ports, fires, progress, sweeps,
+    maxocc); one while_loop iteration is one *sweep*: every task instance
+    gets one guarded chance to fire, then every async port gets one
+    service step.  The loop runs until every task exhausted its firing
+    budget and every port drained its in-flight window, or a full sweep
+    made no progress (the compiled analogue of the engines' deadlock
+    detection).
+
+    Firing guards are evaluated *fused at sweep start*: one
+    :func:`repro.kernels.ring.eval_guards` call computes every task's
+    fire predicate from the occupancy vector.  This is sound — and
+    stall-for-stall equivalent to the old sequential mid-sweep guards —
+    because each channel has one producer and one consumer: a consumer's
+    available tokens can only shrink through its own firing, and a
+    producer's free space only through its own, so a guard true at sweep
+    start is still true when the task's effects apply in task order.
+
+    Each async port is a fixed-``depth`` latency queue: the service step
+    accepts queued requests issue-ahead (up to ``depth`` outstanding per
+    direction), stamps them due ``latency`` sweeps ahead, and delivers
+    due responses in per-port FIFO order — deferring, never dropping,
+    when the response ring is full.  That is exactly the simulator's
+    ``AsyncMMap.pump`` contract, so a port-using graph keeps its
+    bit-identical coroutine twin.
 
     With ``resumable=True`` the program instead takes the full channel
     state, the firing counters and a sweep budget as inputs and returns
@@ -677,50 +876,185 @@ def _build_program(plan: _Plan, resumable: bool = False) -> Callable:
     runs between carry sweeps.  Both variants trace the identical sweep
     body, so a chunked resumable run lands on the same fires — and
     therefore bit-identical channel/mmap contents — as one uninterrupted
-    program."""
+    program.  Resumable programs refuse ports (the recovery snapshot
+    schema has no latency-queue rows yet)."""
     caps = [c.capacity for c in plan.channels]
     totals = np.asarray([tp.total for tp in plan.tasks], np.int32)
     n_chans = len(plan.channels)
+    n_tasks = len(plan.tasks)
+    ring_impl = plan.ring_impl
+    if resumable and plan.ports:
+        raise SynthesisError(
+            f"resumable synthesis does not cover async_mmap ports yet "
+            f"(in-flight requests are not in the snapshot schema); ports: "
+            f"{[p.name for p in plan.ports]}")
 
-    def _run_loop(chans0, states0, mmaps0, fires0, budget):
+    # static fused-guard tables: per (task, phase) read/write token needs
+    # over every channel, and the cumulative phase bounds (padded with
+    # int32-max so shorter tasks never advance past their last phase)
+    n_ph_max = max((len(tp.phases) for tp in plan.tasks), default=1)
+    need_r_np = np.zeros((n_tasks, n_ph_max, max(n_chans, 1)), np.int32)
+    need_w_np = np.zeros_like(need_r_np)
+    for ti, tp in enumerate(plan.tasks):
+        for pi, ph in enumerate(tp.phases):
+            for ci, r in ph.reads.items():
+                need_r_np[ti, pi, ci] = r
+            for ci, w in ph.writes.items():
+                need_w_np[ti, pi, ci] = w
+    if n_ph_max > 1:
+        bounds_np = np.full((n_tasks, n_ph_max - 1),
+                            np.iinfo(np.int32).max, np.int32)
+        for ti, tp in enumerate(plan.tasks):
+            b = tp.bounds[:-1]
+            bounds_np[ti, :len(b)] = b
+
+    def _service_ports(chans, ports, sweeps):
+        """One per-sweep service step for every port: deliver due
+        responses (FIFO, reads then writes), then accept queued requests
+        into freed window slots (reads then writes) — the order
+        ``AsyncMMap.pump`` re-pumps after each delivery."""
+        chans = list(chans)
+        ports = list(ports)
+        activity = jnp.zeros((), jnp.bool_)
+        waiting = jnp.zeros((), jnp.bool_)
+        for pi, port in enumerate(plan.ports):
+            d, lat = port.depth, port.latency
+            ra, rd, wa, wd, wr = plan.port_chan_ids[pi]
+            (data, r_addr, r_due, r_head, r_size,
+             w_addr, w_due, w_val, w_head, w_size,
+             acc_r, del_r, acc_w, del_w, max_r, max_w) = ports[pi]
+            nrow = data.shape[0]
+            # deliver due reads (up to ``depth`` per sweep, as response
+            # ring space allows)
+            rd_buf, rd_head, rd_size = chans[rd]
+            for _ in range(d):
+                can = ((r_size > 0) & (r_due[r_head] <= sweeps)
+                       & (rd_size < caps[rd]))
+                addr = jnp.clip(r_addr[r_head], 0, nrow - 1)
+                slot = (rd_head + rd_size) % caps[rd]
+                rd_buf = rd_buf.at[slot].set(
+                    jnp.where(can, data[addr], rd_buf[slot]))
+                rd_size = rd_size + can.astype(jnp.int32)
+                r_head = jnp.where(can, (r_head + 1) % d, r_head)
+                r_size = r_size - can.astype(jnp.int32)
+                del_r = del_r + can.astype(jnp.int32)
+                activity = activity | can
+            chans[rd] = (rd_buf, rd_head, rd_size)
+            # deliver due writes
+            wr_buf, wr_head, wr_size = chans[wr]
+            for _ in range(d):
+                can = ((w_size > 0) & (w_due[w_head] <= sweeps)
+                       & (wr_size < caps[wr]))
+                addr = jnp.clip(w_addr[w_head], 0, nrow - 1)
+                data = data.at[addr].set(
+                    jnp.where(can, w_val[w_head], data[addr]))
+                slot = (wr_head + wr_size) % caps[wr]
+                wr_buf = wr_buf.at[slot].set(
+                    jnp.where(can, True, wr_buf[slot]))
+                wr_size = wr_size + can.astype(jnp.int32)
+                w_head = jnp.where(can, (w_head + 1) % d, w_head)
+                w_size = w_size - can.astype(jnp.int32)
+                del_w = del_w + can.astype(jnp.int32)
+                activity = activity | can
+            chans[wr] = (wr_buf, wr_head, wr_size)
+            # accept queued reads into the in-flight window
+            ra_buf, ra_head, ra_size = chans[ra]
+            for _ in range(d):
+                can = (ra_size > 0) & (r_size < d)
+                addr = ra_buf[ra_head]
+                ra_head = jnp.where(can, (ra_head + 1) % caps[ra], ra_head)
+                ra_size = ra_size - can.astype(jnp.int32)
+                slot = (r_head + r_size) % d
+                r_addr = r_addr.at[slot].set(
+                    jnp.where(can, addr, r_addr[slot]))
+                r_due = r_due.at[slot].set(
+                    jnp.where(can, sweeps + lat, r_due[slot]))
+                r_size = r_size + can.astype(jnp.int32)
+                acc_r = acc_r + can.astype(jnp.int32)
+                activity = activity | can
+            chans[ra] = (ra_buf, ra_head, ra_size)
+            max_r = jnp.maximum(max_r, r_size)
+            # accept queued writes (need an address AND a value token)
+            wa_buf, wa_head, wa_size = chans[wa]
+            wd_buf, wd_head, wd_size = chans[wd]
+            for _ in range(d):
+                can = (wa_size > 0) & (wd_size > 0) & (w_size < d)
+                addr = wa_buf[wa_head]
+                val = wd_buf[wd_head]
+                wa_head = jnp.where(can, (wa_head + 1) % caps[wa], wa_head)
+                wa_size = wa_size - can.astype(jnp.int32)
+                wd_head = jnp.where(can, (wd_head + 1) % caps[wd], wd_head)
+                wd_size = wd_size - can.astype(jnp.int32)
+                slot = (w_head + w_size) % d
+                w_addr = w_addr.at[slot].set(
+                    jnp.where(can, addr, w_addr[slot]))
+                w_due = w_due.at[slot].set(
+                    jnp.where(can, sweeps + lat, w_due[slot]))
+                w_val = w_val.at[slot].set(
+                    jnp.where(can, val, w_val[slot]))
+                w_size = w_size + can.astype(jnp.int32)
+                acc_w = acc_w + can.astype(jnp.int32)
+                activity = activity | can
+            chans[wa] = (wa_buf, wa_head, wa_size)
+            chans[wd] = (wd_buf, wd_head, wd_size)
+            max_w = jnp.maximum(max_w, w_size)
+            # liveness: an in-flight request due in the future is progress
+            # pending — keep sweeping (the compiled analogue of the
+            # simulators fast-forwarding the clock to the next delivery)
+            iota = jnp.arange(d, dtype=jnp.int32)
+            waiting = waiting | jnp.any(
+                (iota < r_size) & (r_due[(r_head + iota) % d] > sweeps))
+            waiting = waiting | jnp.any(
+                (iota < w_size) & (w_due[(w_head + iota) % d] > sweeps))
+            ports[pi] = (data, r_addr, r_due, r_head, r_size,
+                         w_addr, w_due, w_val, w_head, w_size,
+                         acc_r, del_r, acc_w, del_w, max_r, max_w)
+        return chans, tuple(ports), activity, waiting
+
+    def _run_loop(chans0, states0, mmaps0, ports0, fires0, budget):
         totals_v = jnp.asarray(totals)
         maxocc0 = jnp.zeros((max(n_chans, 1),), jnp.int32)
 
         def cond(carry):
-            _, _, _, fires, progress, sweeps, _ = carry
-            live = progress & jnp.any(fires < totals_v)
+            _, _, _, ports, fires, progress, sweeps, _ = carry
+            pending = jnp.zeros((), jnp.bool_)
+            for p in ports:
+                pending = pending | (p[_P_RSIZE] > 0) | (p[_P_WSIZE] > 0)
+            live = progress & (jnp.any(fires < totals_v) | pending)
             if budget is not None:
                 live = live & (sweeps < budget)
             return live
 
         def body(carry):
-            chans, states, mmaps, fires, _, sweeps, maxocc = carry
+            chans, states, mmaps, ports, fires, _, sweeps, maxocc = carry
             chans = list(chans)
             states = list(states)
             mmaps = list(mmaps)
-            fired_any = jnp.zeros((), jnp.bool_)
+            # fused start-of-sweep guard evaluation: one kernel for every
+            # task's fire predicate
+            if n_ph_max > 1:
+                phase_vec = jnp.sum(
+                    (fires[:, None] >= jnp.asarray(bounds_np))
+                    .astype(jnp.int32), axis=1)
+            else:
+                phase_vec = jnp.zeros((n_tasks,), jnp.int32)
+            live = fires < totals_v
+            if n_chans:
+                sizes_vec = jnp.stack([c[2] for c in chans])
+                nr = jnp.take_along_axis(
+                    jnp.asarray(need_r_np), phase_vec[:, None, None],
+                    axis=1)[:, 0, :]
+                nw = jnp.take_along_axis(
+                    jnp.asarray(need_w_np), phase_vec[:, None, None],
+                    axis=1)[:, 0, :]
+                fire_vec = eval_guards(
+                    sizes_vec, jnp.asarray(caps, jnp.int32), nr, nw, live,
+                    impl=ring_impl)
+            else:
+                fire_vec = live
             for ti, tp in enumerate(plan.tasks):
-                f = fires[ti]
-                guards = []
-                for ph in tp.phases:
-                    g = jnp.ones((), jnp.bool_)
-                    for ci, r in ph.reads.items():
-                        g = g & (chans[ci][2] >= r)
-                    for ci, w in ph.writes.items():
-                        g = g & (caps[ci] - chans[ci][2] >= w)
-                    guards.append(g)
-                n_ph = len(tp.phases)
-                if n_ph > 1:
-                    phase = sum(
-                        (f >= jnp.int32(b)).astype(jnp.int32)
-                        for b in tp.bounds[:-1])
-                    guard = guards[0]
-                    for k in range(1, n_ph):
-                        guard = jnp.where(phase == k, guards[k], guard)
-                else:
-                    phase = None
-                    guard = guards[0]
-                fire = (f < jnp.int32(tp.total)) & guard
+                fire = fire_vec[ti]
+                phase = phase_vec[ti] if len(tp.phases) > 1 else None
 
                 branches = [
                     _fire_branch(plan, tp, ph.fn) for ph in tp.phases]
@@ -739,44 +1073,52 @@ def _build_program(plan: _Plan, resumable: bool = False) -> Callable:
                     chans[ci] = new_sub[1][k]
                 for k, mi in enumerate(tp.mmap_ids):
                     mmaps[mi] = new_sub[2][k]
-                fires = fires.at[ti].add(fire.astype(jnp.int32))
-                fired_any = fired_any | fire
                 if tp.chan_ids:
                     # occupancy highwater sampled after every firing (a
                     # sweep-boundary sample would always see drained FIFOs)
                     maxocc = maxocc.at[jnp.asarray(tp.chan_ids)].max(
                         jnp.stack([chans[ci][2] for ci in tp.chan_ids]))
-            return (tuple(chans), tuple(states), tuple(mmaps), fires,
-                    fired_any, sweeps + 1, maxocc)
+            fires = fires + fire_vec.astype(jnp.int32)
+            fired_any = jnp.any(fire_vec)
+            if plan.ports:
+                chans, ports, activity, waiting = _service_ports(
+                    chans, ports, sweeps)
+                progress = fired_any | activity | waiting
+                maxocc = jnp.maximum(
+                    maxocc, jnp.stack([c[2] for c in chans]))
+            else:
+                progress = fired_any
+            return (tuple(chans), tuple(states), tuple(mmaps), ports,
+                    fires, progress, sweeps + 1, maxocc)
 
-        carry0 = (chans0, tuple(states0), tuple(mmaps0), fires0,
-                  jnp.ones((), jnp.bool_), jnp.zeros((), jnp.int32),
-                  maxocc0)
+        carry0 = (chans0, tuple(states0), tuple(mmaps0), tuple(ports0),
+                  fires0, jnp.ones((), jnp.bool_),
+                  jnp.zeros((), jnp.int32), maxocc0)
         return jax.lax.while_loop(cond, body, carry0)
 
     if resumable:
         def program(states0: tuple, mmaps0: tuple, chans0: tuple,
                     fires0, max_sweeps):
-            chans, states, mmaps, fires, progress, sweeps, maxocc = \
+            chans, states, mmaps, _, fires, progress, sweeps, maxocc = \
                 _run_loop(tuple(tuple(c) for c in chans0), states0, mmaps0,
-                          jnp.asarray(fires0, jnp.int32),
+                          (), jnp.asarray(fires0, jnp.int32),
                           jnp.asarray(max_sweeps, jnp.int32))
             sizes = (jnp.stack([c[2] for c in chans]) if n_chans
                      else jnp.zeros((1,), jnp.int32))
             return (tuple(chans), tuple(states), tuple(mmaps), fires,
                     progress, sweeps, maxocc, sizes)
     else:
-        def program(states0: tuple, mmaps0: tuple):
+        def program(states0: tuple, mmaps0: tuple, ports0: tuple):
             chans0 = tuple(
                 (jnp.zeros((c.capacity,) + c.shape, _canon_dtype(c.dtype)),
                  jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
                 for c in plan.channels)
             fires0 = jnp.zeros((len(plan.tasks),), jnp.int32)
-            chans, states, mmaps, fires, _, sweeps, maxocc = _run_loop(
-                chans0, states0, mmaps0, fires0, None)
+            chans, states, mmaps, ports, fires, _, sweeps, maxocc = \
+                _run_loop(chans0, states0, mmaps0, ports0, fires0, None)
             sizes = (jnp.stack([c[2] for c in chans]) if n_chans
                      else jnp.zeros((max(n_chans, 1),), jnp.int32))
-            return tuple(mmaps), fires, sweeps, maxocc, sizes
+            return tuple(mmaps), ports, fires, sweeps, maxocc, sizes
 
     return program
 
@@ -815,9 +1157,13 @@ class CompiledEngine(EngineBase):
 
     name = "compiled"
 
-    def __init__(self, track_stats: bool = False, cache: Any = None, **kw):
+    def __init__(self, track_stats: bool = False, cache: Any = None,
+                 ring_impl: Optional[str] = None, **kw):
         super().__init__(track_stats, **kw)
         self.cache = cache          # CompileCache | None=default | False=off
+        # interconnect kernel backend: "pallas" | "interpret" | "xla";
+        # None defers to $REPRO_RING_IMPL / the backend default
+        self.ring_impl = ring_impl
         self._cur: Optional[TaskInstance] = None
         # post-run introspection (tests / benchmarks)
         self.compile_source: Optional[str] = None
@@ -854,10 +1200,16 @@ class CompiledEngine(EngineBase):
         self._refuse("read_burst")
 
     def schedule_async(self, delay, deliver):
+        # compiled runs service async_mmap ports inside the lowered
+        # program (the latency queue in the while_loop carry); a live
+        # delivery callback during elaboration means a *wiring body*
+        # performed memory I/O, which is not step-function form
+        name = self._cur.name if self._cur is not None else "<top>"
         raise SynthesisError(
-            "async_mmap ports are not synthesizable yet (ROADMAP: "
-            "async_mmap pipelining in synth); use mmap or a simulation "
-            "engine")
+            f"task {name!r} issued an async_mmap request during synthesis "
+            f"elaboration: memory I/O belongs in StepTask phase bodies "
+            f"(where it lowers to the compiled latency queue), not in "
+            f"wiring bodies; see docs/synthesis.md")
 
     # -- elaboration ---------------------------------------------------------
     def spawn(self, inst: TaskInstance) -> None:
@@ -899,12 +1251,10 @@ class CompiledEngine(EngineBase):
             raise SynthesisError(
                 "graph contains no step-function tasks; CompiledEngine "
                 "lowers StepTask leaves (see docs/synthesis.md)")
-        for it in self.interface_set:
-            if isinstance(it, AsyncMMap):
-                raise SynthesisError(
-                    f"async_mmap {it.name!r} is not synthesizable yet "
-                    f"(ROADMAP: async_mmap pipelining in synth)")
         plan = _Plan()
+        plan.ring_impl = resolve_impl("ring", RING_ENV, RING_CHOICES,
+                                      fallback="xla",
+                                      impl=getattr(self, "ring_impl", None))
         bound = []
         for inst in step_insts:
             a, k = bind_streams(inst)
@@ -935,6 +1285,31 @@ class CompiledEngine(EngineBase):
             if not tp.phases:
                 raise SynthesisError(
                     f"task {tp.inst.name!r} has zero total firings")
+        # async ports: record each port's direction from its member-channel
+        # traffic, and refuse read+write ports — a read racing an in-flight
+        # write to the same buffer resolves by response timing, which the
+        # sweep schedule must not be allowed to decide
+        for tp in plan.tasks:
+            for ph in tp.phases:
+                for ci in list(ph.reads) + list(ph.writes):
+                    c = plan.channels[ci]
+                    pi = plan._port_idx.get(id(c.iface)) \
+                        if c.iface is not None else None
+                    if pi is None:
+                        continue
+                    p = plan.ports[pi]
+                    if c is p._raddr or c is p._rdata:
+                        plan.port_dirs[pi].add("read")
+                    else:
+                        plan.port_dirs[pi].add("write")
+        for pi, dirs in enumerate(plan.port_dirs):
+            if dirs >= {"read", "write"}:
+                raise SynthesisError(
+                    f"async_mmap {plan.ports[pi].name!r} is both read and "
+                    f"written in the synthesized graph: read-after-write "
+                    f"through an async port depends on response timing; "
+                    f"use one port per direction (or route the value "
+                    f"through a channel)")
         # schedule-independence: an mmap written by one task and read by
         # another would make results depend on sweep order — refuse
         readers: dict[int, set] = {}
@@ -965,12 +1340,13 @@ class CompiledEngine(EngineBase):
             raise SynthesisError(f"graph failed validation: {e}") from e
         return plan, graph
 
-    def _cache_key(self, graph, args: tuple) -> str:
+    def _cache_key(self, graph, args: tuple,
+                   ring_impl: str = "xla") -> str:
         h = hashlib.sha256()
         h.update(graph.structural_hash().encode())
         h.update(_stable_repr(aval_signature(args, {})).encode())
         h.update(f"jax:{jax.__version__}:{jax.default_backend()}:"
-                 f"{SYNTH_SCHEMA}".encode())
+                 f"{SYNTH_SCHEMA}:ring={ring_impl}".encode())
         return h.hexdigest()
 
     # -- run -----------------------------------------------------------------
@@ -994,25 +1370,31 @@ class CompiledEngine(EngineBase):
             plan, graph, result = self._elaborate(top, *args, **kwargs)
             states0 = tuple(tp.state0 for tp in plan.tasks)
             mmaps0 = tuple(jnp.asarray(m.data) for m in plan.mmaps)
+            ports0 = tuple(_port_carry0(p) for p in plan.ports)
             program = _build_program(plan)
-            key = self._cache_key(graph, (states0, mmaps0))
+            key = self._cache_key(graph, (states0, mmaps0, ports0),
+                                  plan.ring_impl)
             self.compile_key = key
             if self.cache is False:
-                exe = jax.jit(program).lower(states0, mmaps0).compile()
+                exe = jax.jit(program).lower(
+                    states0, mmaps0, ports0).compile()
                 source = "compiled"
             else:
                 cc = self.cache if self.cache is not None \
                     else default_cache()
                 exe, source = cc.compile_cached(
-                    program, (states0, mmaps0), key=key)
+                    program, (states0, mmaps0, ports0), key=key)
             self.compile_source = source
-            mm_final, fires, sweeps, maxocc, sizes = exe(states0, mmaps0)
+            mm_final, ports_final, fires, sweeps, maxocc, sizes = exe(
+                states0, mmaps0, ports0)
             fires = np.asarray(fires)
             maxocc = np.asarray(maxocc)
             sizes = np.asarray(sizes)
             self.n_sweeps = self.switches = int(sweeps)
             self._writeback(plan, mm_final)
+            self._writeback_ports(plan, ports_final)
             self._fill_stats(plan, fires, maxocc)
+            self._fill_port_stats(plan, ports_final)
             totals = np.asarray([tp.total for tp in plan.tasks], np.int32)
             stuck = bool(np.any(fires < totals))
             for tp, f, tot in zip(plan.tasks, fires, totals):
@@ -1054,6 +1436,35 @@ class CompiledEngine(EngineBase):
                 np.copyto(m.data, out)
             else:
                 m.data = out
+
+    def _writeback_ports(self, plan: _Plan, ports_final: tuple) -> None:
+        for pi, (p, pc) in enumerate(zip(plan.ports, ports_final)):
+            if "write" not in plan.port_dirs[pi]:
+                continue
+            out = np.asarray(pc[_P_DATA])
+            if isinstance(p.data, np.ndarray):
+                np.copyto(p.data, out)
+            else:
+                p.data = out
+
+    def _fill_port_stats(self, plan: _Plan, ports_final: tuple) -> None:
+        """Fill each port's always-on request counters from the compiled
+        carry, so ``SimReport.interfaces`` carries real numbers — the
+        compiled twin of ``AsyncMMap.pump``'s bookkeeping."""
+        for p, pc in zip(plan.ports, ports_final):
+            p.read_reqs = int(pc[_P_ACC_R])
+            p.read_resps = int(pc[_P_DEL_R])
+            p.write_reqs = int(pc[_P_ACC_W])
+            p.write_resps = int(pc[_P_DEL_W])
+            p.max_outstanding_reads = int(pc[_P_MAX_R])
+            p.max_outstanding_writes = int(pc[_P_MAX_W])
+            # service-side member-channel totals (the task side is
+            # reconstructed from firing counters in _fill_stats)
+            p._raddr.total_read += p.read_reqs
+            p._rdata.total_written += p.read_resps
+            p._waddr.total_read += p.write_reqs
+            p._wdata.total_read += p.write_reqs
+            p._wresp.total_written += p.write_resps
 
     def _fill_stats(self, plan: _Plan, fires: np.ndarray,
                     maxocc: np.ndarray) -> None:

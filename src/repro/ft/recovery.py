@@ -339,12 +339,15 @@ def _abstract_schedule(plan) -> tuple[list, bool]:
 
     Returns ``(cuts, stalled)``: ``cuts[s]`` is the per-task firing vector
     after ``s`` sweeps (``cuts[0]`` all-zero), mirroring the compiled body
-    exactly — plan-order task iteration, within-sweep size visibility,
-    bounds-based phase selection, read-available / write-fits guards —
-    so ``cuts[s]`` equals the compiled ``fires`` after ``s`` sweeps and is
-    a consistent cut for every engine.  ``stalled`` is True when the
-    schedule stopped making progress before every task fired out (the
-    abstract twin of the compiled stall / simulated deadlock)."""
+    exactly — plan-order task iteration, *start-of-sweep* guard
+    visibility (the fused ``eval_guards`` semantics: every task's fire
+    predicate is computed from the occupancy vector as the sweep begins,
+    then effects apply in task order), bounds-based phase selection,
+    read-available / write-fits guards — so ``cuts[s]`` equals the
+    compiled ``fires`` after ``s`` sweeps and is a consistent cut for
+    every engine.  ``stalled`` is True when the schedule stopped making
+    progress before every task fired out (the abstract twin of the
+    compiled stall / simulated deadlock)."""
     caps = [c.capacity for c in plan.channels]
     sizes = [0] * len(caps)
     fires = [0] * len(plan.tasks)
@@ -352,14 +355,15 @@ def _abstract_schedule(plan) -> tuple[list, bool]:
     cuts = [tuple(fires)]
     while any(f < t for f, t in zip(fires, totals)):
         progress = False
+        sizes0 = list(sizes)    # start-of-sweep snapshot (fused guards)
         for ti, tp in enumerate(plan.tasks):
             f = fires[ti]
             if f >= totals[ti]:
                 continue
             phase = sum(f >= b for b in tp.bounds[:-1])
             ph = tp.phases[phase]
-            ok = all(sizes[ci] >= r for ci, r in ph.reads.items()) and \
-                all(caps[ci] - sizes[ci] >= w
+            ok = all(sizes0[ci] >= r for ci, r in ph.reads.items()) and \
+                all(caps[ci] - sizes0[ci] >= w
                     for ci, w in ph.writes.items())
             if ok:
                 for ci, r in ph.reads.items():
@@ -466,6 +470,16 @@ def run_recoverable(engine: str, top: Callable, *args,
     inj = faults.injector() if isinstance(faults, FaultPlan) else faults
     t0 = time.perf_counter()
     plan, graph, result = elaborate_step_graph(top, *args, **kwargs)
+    if getattr(plan, "ports", None):
+        # the abstract schedule replays token counts only — it cannot see
+        # the port service step's deliveries, and in-flight latency-queue
+        # requests have no rows in the snapshot schema yet.  Refuse so the
+        # supervisor degrades to restart-from-scratch (run_supervised).
+        raise SynthesisError(
+            f"recoverable execution does not cover async_mmap ports yet "
+            f"({[p.name for p in plan.ports]}): in-flight requests are "
+            f"outside the snapshot schema; run unsupervised on "
+            f"CompiledEngine or under restart-from-scratch supervision")
     ghash = graph.structural_hash()
     caps = [c.capacity for c in plan.channels]
     cuts, stalled = _abstract_schedule(plan)

@@ -1,0 +1,50 @@
+"""Shared backend dispatch for the Pallas kernels.
+
+Every kernel-backed op in this package answers the same three questions:
+
+1. did the caller force an implementation (``impl=``)?
+2. did the environment force one (a per-op ``REPRO_*`` variable, so CI
+   jobs and parity harnesses can steer a whole process)?
+3. otherwise, are we on a TPU backend (real Mosaic lowering) or not
+   (fall back to a reference implementation — on CPU the Pallas
+   interpreter's sequential grid emulation is slower than the fused
+   XLA reference, and the hot paths are latency-critical)?
+
+The pattern used to live inline in :func:`ops.decode_attention`; it is
+extracted here so the ring-buffer kernels (:mod:`repro.kernels.ring`)
+and any future op resolve their backend identically.  ``"interpret"``
+is always one of the choices: it runs the *kernel* semantics under the
+Pallas interpreter on any backend, which is how the parity tests pin
+bit-exactness without TPU hardware.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
+
+import jax
+
+
+def is_tpu() -> bool:
+    """True when jax will actually lower Pallas kernels through Mosaic."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_impl(op: str, env: str, choices: Sequence[str], *,
+                 fallback: str, tpu_default: str = "pallas",
+                 impl: Optional[str] = None) -> str:
+    """Resolve a kernel implementation name.
+
+    Precedence: explicit ``impl=`` argument > ``$<env>`` > backend
+    default (``tpu_default`` on TPU, ``fallback`` elsewhere).  Raises
+    ``ValueError`` naming the op, the offending value and both override
+    channels when the result is not one of ``choices``.
+    """
+    resolved = impl or os.environ.get(env) or \
+        (tpu_default if is_tpu() else fallback)
+    if resolved not in choices:
+        raise ValueError(
+            f"{op} impl {resolved!r}: expected one of "
+            f"{tuple(choices)} (from impl= or ${env})")
+    return resolved

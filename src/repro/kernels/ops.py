@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .decode_attention import decode_attention_fwd
+from .dispatch import resolve_impl
 from .flash_attention import flash_attention_fwd
 from .ssd_scan import ssd_scan_fwd
 
@@ -138,7 +139,6 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     ``kv_len == 0`` rows (dead serving slots) contribute no HBM traffic on
     the kernel paths.
     """
-    import os
     squeeze = q.ndim == 4
     if squeeze:
         q = q[:, 0]
@@ -146,12 +146,9 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     Smax, nkv = k.shape[1], k.shape[2]
     g = nh // nkv
     lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
-    impl = impl or os.environ.get("REPRO_DECODE_ATTN") or \
-        ("pallas" if not _interpret() else "ref")
-    if impl not in ("pallas", "interpret", "ref"):
-        raise ValueError(
-            f"decode_attention impl {impl!r}: expected 'pallas', "
-            f"'interpret' or 'ref' (from impl= or $REPRO_DECODE_ATTN)")
+    impl = resolve_impl("decode_attention", "REPRO_DECODE_ATTN",
+                        ("pallas", "interpret", "ref"), fallback="ref",
+                        impl=impl)
     bk = min(block_k, Smax)
     if impl == "ref":
         out = ref.decode_attention_ref(q, k, v, lens)

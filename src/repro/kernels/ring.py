@@ -1,0 +1,244 @@
+"""Pallas kernels for the compiled interconnect (channel ring buffers).
+
+``CompiledEngine`` lowers every channel to ``(buf[cap, *elem], head,
+size)`` carried through a ``lax.while_loop`` — see ``core/synth.py``.
+This module provides the three hot ops of that sweep loop as Pallas
+kernels with a bit-exact XLA reference:
+
+* :func:`ring_pop`   — pop ``n`` tokens: burst slice out of the ring
+  with the head/size update fused into the same op.  The contiguous
+  case (``head + n <= cap``) is ONE VMEM slice copy; the wraparound
+  case splits into per-row copies of the two contiguous segments
+  (the double-buffer halves of a hardware FIFO burst).
+* :func:`ring_push`  — push ``n`` tokens at ``(head + size) % cap``,
+  same contiguous-fast-path / wrap-split structure, writing through a
+  full-ring VMEM copy so the op stays functional.
+* :func:`eval_guards` — fused firing-predicate evaluation: ONE kernel
+  computes every task's fire guard from the channel occupancy vector
+  (``need_r <= size`` and ``need_w <= cap - size`` reduced over the
+  channel axis), replacing N·C scalar ops per sweep with one tiled
+  compare-and-reduce.
+
+Backend dispatch mirrors :func:`repro.kernels.ops.decode_attention`
+via :mod:`repro.kernels.dispatch`:
+
+* ``"pallas"``    — Mosaic-lowered kernels (TPU default);
+* ``"interpret"`` — the same kernels under the Pallas interpreter
+  (bit-exact kernel semantics on any backend; the CI parity path);
+* ``"xla"``       — the vectorized gather/scatter reference (non-TPU
+  default; identical integer index math to the kernels, so every
+  graph keeps a bit-exact reference lowering).
+
+Select with ``impl=`` or ``$REPRO_RING_IMPL``.  All three impls are
+exact integer/copy ops — no arithmetic reassociation — so parity is
+bitwise, not approximate.
+"""
+
+from __future__ import annotations
+
+from functools import partial, reduce
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .dispatch import resolve_impl
+
+RING_ENV = "REPRO_RING_IMPL"
+RING_CHOICES = ("pallas", "interpret", "xla")
+
+_SUB = 8      # sublane multiple for fp32/int32 VMEM tiles
+_LANE = 128   # lane multiple
+
+
+def _resolve(impl: Optional[str]) -> str:
+    return resolve_impl("ring", RING_ENV, RING_CHOICES,
+                        fallback="xla", impl=impl)
+
+
+def _ceil(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _flat(buf: jax.Array) -> tuple[jax.Array, int]:
+    """[cap, *elem] -> [cap, E] (E >= 1) for the 2-D kernels."""
+    cap = buf.shape[0]
+    e = int(np.prod(buf.shape[1:], dtype=np.int64)) if buf.ndim > 1 else 1
+    return buf.reshape(cap, max(e, 1)), max(e, 1)
+
+
+def _kernel_dtype(dtype) -> np.dtype:
+    """bools ride the kernels as int32 (TPU vregs have no 1-bit lanes);
+    the wrappers cast back, which is exact for {0, 1}."""
+    d = np.dtype(dtype)
+    return np.dtype(np.int32) if d == np.bool_ else d
+
+
+# ---------------------------------------------------------------------------
+# pop
+# ---------------------------------------------------------------------------
+
+def _pop_kernel(n: int, cap: int, s_ref, buf_ref, out_ref):
+    head = s_ref[0]
+
+    @pl.when(head + n <= cap)
+    def _contig():
+        out_ref[pl.ds(0, n), :] = buf_ref[pl.ds(head, n), :]
+
+    @pl.when(head + n > cap)
+    def _wrap():
+        for i in range(n):
+            idx = jax.lax.rem(head + jnp.int32(i), jnp.int32(cap))
+            out_ref[pl.ds(i, 1), :] = buf_ref[pl.ds(idx, 1), :]
+
+
+def ring_pop(buf: jax.Array, head: jax.Array, size: jax.Array, n: int, *,
+             impl: Optional[str] = None):
+    """Pop ``n`` tokens from a ring buffer.
+
+    Returns ``(toks[n, *elem], new_head, new_size)`` with the head/size
+    update fused: ``new_head = (head + n) % cap``, ``new_size = size - n``.
+    ``n`` is static (synthesis enforces static I/O rates).
+    """
+    impl = _resolve(impl)
+    cap = buf.shape[0]
+    elem = buf.shape[1:]
+    n = int(n)
+    new_head = (head + n) % cap
+    new_size = size - n
+    if n == 0:
+        return buf[0:0], new_head, new_size
+    if impl == "xla":
+        idx = (head + jnp.arange(n, dtype=jnp.int32)) % cap
+        return buf[idx], new_head, new_size
+    flat, e = _flat(buf)
+    kdt = _kernel_dtype(flat.dtype)
+    flat = flat.astype(kdt)
+    cap_p, n_p, e_p = _ceil(cap, _SUB), _ceil(n, _SUB), _ceil(e, _LANE)
+    flat = jnp.pad(flat, ((0, cap_p - cap), (0, e_p - e)))
+    scalars = jnp.asarray(head, jnp.int32).reshape(1)
+    out = pl.pallas_call(
+        partial(_pop_kernel, n, cap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(1,),
+            in_specs=[pl.BlockSpec((cap_p, e_p), lambda i, s: (0, 0))],
+            out_specs=pl.BlockSpec((n_p, e_p), lambda i, s: (0, 0))),
+        out_shape=jax.ShapeDtypeStruct((n_p, e_p), kdt),
+        interpret=impl == "interpret",
+    )(scalars, flat)
+    toks = out[:n, :e].astype(buf.dtype).reshape((n,) + elem)
+    return toks, new_head, new_size
+
+
+# ---------------------------------------------------------------------------
+# push
+# ---------------------------------------------------------------------------
+
+def _push_kernel(n: int, cap: int, s_ref, buf_ref, arr_ref, out_ref):
+    out_ref[...] = buf_ref[...]
+    start = s_ref[0]
+
+    @pl.when(start + n <= cap)
+    def _contig():
+        out_ref[pl.ds(start, n), :] = arr_ref[pl.ds(0, n), :]
+
+    @pl.when(start + n > cap)
+    def _wrap():
+        for i in range(n):
+            idx = jax.lax.rem(start + jnp.int32(i), jnp.int32(cap))
+            out_ref[pl.ds(idx, 1), :] = arr_ref[pl.ds(i, 1), :]
+
+
+def ring_push(buf: jax.Array, head: jax.Array, size: jax.Array,
+              arr: jax.Array, *, impl: Optional[str] = None):
+    """Push ``arr[n, *elem]`` onto a ring buffer at the tail.
+
+    Returns ``(new_buf, head, new_size)`` — the head is unchanged, the
+    size update (``size + n``) is fused with the buffer write.
+    """
+    impl = _resolve(impl)
+    cap = buf.shape[0]
+    n = int(arr.shape[0])
+    new_size = size + n
+    if n == 0:
+        return buf, head, new_size
+    if impl == "xla":
+        idx = (head + size + jnp.arange(n, dtype=jnp.int32)) % cap
+        return buf.at[idx].set(arr), head, new_size
+    flat, e = _flat(buf)
+    aflat, _ = _flat(arr)
+    kdt = _kernel_dtype(flat.dtype)
+    flat = flat.astype(kdt)
+    aflat = aflat.astype(kdt)
+    cap_p, n_p, e_p = _ceil(cap, _SUB), _ceil(n, _SUB), _ceil(e, _LANE)
+    flat = jnp.pad(flat, ((0, cap_p - cap), (0, e_p - e)))
+    aflat = jnp.pad(aflat, ((0, n_p - n), (0, e_p - e)))
+    start = jnp.asarray((head + size) % cap, jnp.int32).reshape(1)
+    out = pl.pallas_call(
+        partial(_push_kernel, n, cap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(1,),
+            in_specs=[pl.BlockSpec((cap_p, e_p), lambda i, s: (0, 0)),
+                      pl.BlockSpec((n_p, e_p), lambda i, s: (0, 0))],
+            out_specs=pl.BlockSpec((cap_p, e_p), lambda i, s: (0, 0))),
+        out_shape=jax.ShapeDtypeStruct((cap_p, e_p), kdt),
+        interpret=impl == "interpret",
+    )(start, flat, aflat)
+    new_buf = out[:cap, :e].astype(buf.dtype).reshape(buf.shape)
+    return new_buf, head, new_size
+
+
+# ---------------------------------------------------------------------------
+# fused guard evaluation
+# ---------------------------------------------------------------------------
+
+def _guard_kernel(nr_ref, nw_ref, occ_ref, spc_ref, live_ref, out_ref):
+    ok = (nr_ref[...] <= occ_ref[...]) & (nw_ref[...] <= spc_ref[...])
+    allok = jnp.all(ok, axis=1, keepdims=True)            # [Tp, 1]
+    out_ref[...] = jnp.where(allok & (live_ref[...] > 0), 1, 0)
+
+
+def eval_guards(sizes: jax.Array, caps, need_r: jax.Array,
+                need_w: jax.Array, live: jax.Array, *,
+                impl: Optional[str] = None) -> jax.Array:
+    """Fused firing predicates for every task in one op.
+
+    ``sizes[C]`` is the current channel occupancy vector, ``caps[C]``
+    the static capacities, ``need_r/need_w[T, C]`` each task's
+    *current-phase* per-firing token needs, ``live[T]`` the
+    still-has-firings mask.  Returns ``fire[T]`` bool:
+
+        ``fire[t] = live[t] & all_c(need_r[t,c] <= sizes[c])
+                            & all_c(need_w[t,c] <= caps[c] - sizes[c])``
+
+    Pure integer comparisons — bit-identical across all impls.
+    """
+    impl = _resolve(impl)
+    caps = jnp.asarray(caps, jnp.int32)
+    t, c = need_r.shape
+    if impl == "xla" or c == 0:
+        if c == 0:
+            return live
+        space = caps - sizes
+        ok_r = jnp.all(need_r <= sizes[None, :], axis=1)
+        ok_w = jnp.all(need_w <= space[None, :], axis=1)
+        return live & ok_r & ok_w
+    t_p, c_p = _ceil(t, _SUB), _ceil(c, _LANE)
+    pad2 = lambda a: jnp.pad(a.astype(jnp.int32),
+                             ((0, t_p - t), (0, c_p - c)))
+    row = lambda v: jnp.broadcast_to(
+        jnp.pad(v.astype(jnp.int32), (0, c_p - c))[None, :], (t_p, c_p))
+    live_m = jnp.broadcast_to(
+        jnp.pad(live.astype(jnp.int32), (0, t_p - t))[:, None],
+        (t_p, _LANE))
+    out = pl.pallas_call(
+        _guard_kernel,
+        out_shape=jax.ShapeDtypeStruct((t_p, _LANE), jnp.int32),
+        interpret=impl == "interpret",
+    )(pad2(need_r), pad2(need_w), row(sizes), row(caps - sizes), live_m)
+    return out[:t, 0] > 0

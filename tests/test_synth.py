@@ -171,20 +171,87 @@ def test_refuses_unspecced_channel():
         repro.ENGINES["compiled"]().run(top, *args)
 
 
-def test_refuses_async_mmap():
+def test_refuses_unbounded_async_depth():
+    # bounded-depth ports lower to the compiled latency queue; only an
+    # unbounded in-flight window (depth=None) has no static carry shape
     from repro.core import async_mmap
 
     def s(state, port):
         return state
 
     S = StepTask(s, steps=1, name="S")
-    port = async_mmap(np.zeros(4, np.float32))
+    port = async_mmap(np.zeros(4, np.float32), depth=None)
 
     def Top(port):
         repro.task().invoke(S, port)
 
-    with pytest.raises(SynthesisError, match="async_mmap"):
+    with pytest.raises(SynthesisError, match="bounded depth"):
         repro.ENGINES["compiled"]().run(Top, port)
+
+
+def test_refuses_read_write_async_port():
+    # read-after-write through one port resolves by response timing, so a
+    # port is read-only or write-only per synthesized graph
+    from repro.core import async_mmap
+
+    def s(k, port):
+        port.read_addr.write(jnp.int32(0))
+        port.write_addr.write(jnp.int32(1))
+        port.write_data.write(port.read_data.read())
+        port.write_resp.read()
+        return k
+
+    S = StepTask(s, steps=1, init=jnp.int32(0), name="S")
+    port = async_mmap(np.zeros(4, np.float32), depth=2)
+
+    def Top(port):
+        repro.task().invoke(S, port)
+
+    with pytest.raises(SynthesisError, match="one port per direction"):
+        repro.ENGINES["compiled"]().run(Top, port)
+
+
+def test_refuses_read_pipelined_in_step_body():
+    from repro.core import async_mmap
+
+    def s(k, port):
+        port.read_pipelined(jnp.arange(2))
+        return k
+
+    S = StepTask(s, steps=1, init=jnp.int32(0), name="S")
+    port = async_mmap(np.zeros(4, np.float32), depth=2)
+
+    def Top(port):
+        repro.task().invoke(S, port)
+
+    with pytest.raises(SynthesisError, match="read_pipelined"):
+        repro.ENGINES["compiled"]().run(Top, port)
+
+
+def test_async_depth_in_structural_hash():
+    # latency/depth size the lowered queue: twins differing only there
+    # must not share a compiled program
+    from repro.core import async_mmap
+    from repro.core.synth import elaborate_step_graph
+
+    def s(k, port):
+        port.read_addr.write(k)
+        port.read_data.read()
+        return k + 1
+
+    def build(depth, latency=4):
+        S = StepTask(s, steps=1, init=jnp.int32(0), name="S")
+        port = async_mmap(np.zeros(4, np.float32), depth=depth,
+                          latency=latency, name="m")
+
+        def Top(port):
+            repro.task().invoke(S, port)
+        _, graph, _ = elaborate_step_graph(Top, port)
+        return graph.structural_hash()
+
+    assert build(1) != build(4)
+    assert build(4, latency=2) != build(4, latency=8)
+    assert build(4) == build(4)
 
 
 def test_refuses_data_dependent_burst_size():
@@ -589,3 +656,88 @@ def test_second_process_performs_zero_xla_compiles(tmp_path):
     key0 = outs[0].split("KEY ")[1].strip()
     key1 = outs[1].split("KEY ")[1].strip()
     assert key0 == key1
+
+
+# ---------------------------------------------------------------------------
+# async_mmap synthesis: the compiled latency queue (slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("depth", [1, 4])
+def test_gemm_async_compiled_matches_twin(depth):
+    """The compiled latency queue must be a *data* twin of the simulator's
+    AsyncMMap pump: the C blocks written through the ports are bit-
+    identical, and the issue-ahead window actually opens at depth > 1."""
+    from repro.apps import gemm
+    outs = {}
+    for eng in ("coroutine", "compiled"):
+        top, args, check = gemm.build_step_async(P=2, n=4, K=4, depth=depth)
+        rep = repro.ENGINES[eng]().run(top, *args)
+        assert rep.ok, rep.error
+        assert check()[0]
+        _, a_ports, c_ports = args
+        outs[eng] = np.stack([np.asarray(p.data) for p in c_ports])
+        if eng == "compiled":
+            for p in a_ports:
+                assert p.read_reqs == p.read_resps == 4
+                if depth == 1:
+                    assert p.max_outstanding_reads == 1
+                else:
+                    assert p.max_outstanding_reads > 1
+            for p in c_ports:
+                assert p.write_reqs == p.write_resps == 2
+    assert outs["coroutine"].tobytes() == outs["compiled"].tobytes()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("depth", [1, 4])
+def test_page_rank_async_compiled_matches_twin(depth):
+    """Async-fed edges around the rank feedback loop: compiled ranks are
+    bit-identical to the coroutine twin's at any in-flight depth."""
+    from repro.apps import page_rank
+    outs = {}
+    for eng in ("coroutine", "compiled"):
+        top, args, check = page_rank.build_step_async(
+            n_vertices=16, n_edges=48, n_pe=2, n_iters=4, edge_depth=depth)
+        rep = repro.ENGINES[eng]().run(top, *args)
+        assert rep.ok, rep.error
+        assert check()[0]
+        _, out_mm, _, eports, _ = args
+        outs[eng] = np.asarray(out_mm.data).copy()
+        if eng == "compiled":
+            for p in eports:
+                assert p.read_reqs == p.read_resps == 4 * len(p)
+                if depth == 1:
+                    assert p.max_outstanding_reads == 1
+                else:
+                    assert p.max_outstanding_reads > 1
+    assert outs["coroutine"].tobytes() == outs["compiled"].tobytes()
+
+
+@pytest.mark.slow
+def test_ring_impl_interpret_matches_xla_pipeline():
+    """The same graph lowered with the Pallas interconnect kernels (under
+    the interpreter off-TPU) produces the XLA reference path's exact
+    output buffer."""
+    bufs = {}
+    for impl in ("xla", "interpret"):
+        top, args, buf = relay_pipeline(n_tokens=32, stages=2, burst=4,
+                                        capacity=8)
+        rep = repro.ENGINES["compiled"](cache=False, ring_impl=impl).run(
+            top, *args)
+        assert rep.ok, rep.error
+        bufs[impl] = buf.copy()
+    assert np.array_equal(bufs["xla"], bufs["interpret"])
+
+
+@pytest.mark.slow
+def test_ring_impl_env_override(monkeypatch):
+    """$REPRO_RING_IMPL selects the interconnect path when the engine
+    doesn't force one."""
+    from repro.kernels.ring import RING_ENV
+    monkeypatch.setenv(RING_ENV, "interpret")
+    top, args, buf = relay_pipeline(n_tokens=16, stages=1, burst=4,
+                                    capacity=8)
+    rep = repro.ENGINES["compiled"](cache=False).run(top, *args)
+    assert rep.ok, rep.error
+    assert np.array_equal(buf, np.arange(16))
