@@ -38,6 +38,13 @@ def machine_info() -> dict:
         import jax
         info["jax"] = jax.__version__
         info["jax_backend"] = jax.default_backend()
+        # partition benches depend on how many devices were visible
+        # (host devices under --xla_force_host_platform_device_count
+        # count too) — record it so a 1-device record is never compared
+        # against an 8-device one.
+        info["device_count"] = jax.device_count()
+        info["device_platform"] = jax.devices()[0].platform
+        info["xla_flags"] = os.environ.get("XLA_FLAGS", "")
     except Exception:  # noqa: BLE001 - benches that never import jax
         pass
     return info

@@ -40,8 +40,7 @@ try:
 except ImportError:                     # script mode: python benchmarks/...
     from _bench import read_bench, write_bench
 
-HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9,
-      "hbm_capacity": 16e9}
+from repro.core.cost import HW          # shared with the floorplanner
 
 _CODE_SALT = None
 
@@ -77,52 +76,32 @@ def _measure_variant(cfg, shape, mesh, *, pol=None, scan_layers=True,
     the structural hash of its step function (which bakes in cfg via its
     closure) + sharding/mesh geometry: the incremental path.  An edited
     variant hashes different and re-measures; everything untouched is a
-    digest lookup.
+    digest lookup.  The probe itself is ``repro.core.cost.probe_compiled``
+    — the same machinery that prices step tasks for the floorplanner.
     """
-    import jax
     from benchmarks import roofline as RL
-    from repro.core.compile_cache import default_cache, instance_key
-    from repro.launch.dryrun import collective_bytes
+    from repro.core.compile_cache import instance_key
+    from repro.core.cost import probe_compiled
     from repro.launch.steps import input_specs
-
-    cc = default_cache() if memo else None
 
     # fit-corrected flops/bytes/coll (handles the scan single-count)
     def meas(c, scan):
         spec = input_specs(c, shape, mesh, pol=pol, scan_layers=scan,
                            remat=remat, opt=opt)
         key = None
-        if cc is not None:
+        if memo:
             key = instance_key(
                 spec["fn"], spec["args"], {},
                 extra=("perf_iter", _code_salt(), repr(pol), bool(scan),
                        bool(remat), repr(opt), repr(shape),
                        tuple(sorted((k, int(v))
                              for k, v in mesh.shape.items()))))
-            hit = cc.memo_get(key)
-            if hit is not None:
-                return hit
-        with mesh:
-            compiled = jax.jit(
-                spec["fn"], in_shardings=spec["in_shardings"],
-                out_shardings=spec["out_shardings"],
-                donate_argnums=spec["donate_argnums"]).lower(
-                    *spec["args"]).compile()
-        cost = compiled.cost_analysis()
-        if isinstance(cost, (list, tuple)):      # per-device list on 0.4.x
-            cost = cost[0] if cost else {}
-        coll = collective_bytes(compiled.as_text())
-        mem = compiled.memory_analysis()
-        if isinstance(mem, (list, tuple)):
-            mem = mem[0] if mem else None
-        out = {"flops": float(cost.get("flops", 0.0)),
-               "bytes": float(cost.get("bytes accessed", 0.0)),
-               "coll": float(coll["total_bytes"]),
-               "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
-               "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0))}
-        if cc is not None:
-            cc.memo_put(key, out)
-        return out
+        return probe_compiled(
+            spec["fn"], spec["args"], mesh=mesh,
+            in_shardings=spec["in_shardings"],
+            out_shardings=spec["out_shardings"],
+            donate_argnums=spec["donate_argnums"],
+            memo_key=key, cache=None if memo else False)
 
     keys = ("flops", "bytes", "coll")
     L = cfg.n_layers

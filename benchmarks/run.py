@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from pathlib import Path
 
@@ -114,6 +115,11 @@ def main(argv=None) -> int:
                     help="CI smoke: shrink the simulation/throughput sizes")
     args = ap.parse_args(argv)
 
+    # before anything imports jax: the synth partition section needs a
+    # multi-device host platform (real accelerators are unaffected)
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
     from benchmarks import (codegen_time, loc, serve_time, sim_time,
                             synth_time)
 
@@ -149,6 +155,8 @@ def main(argv=None) -> int:
                  or synth_res["gate"]["synth_regression"]
                  or synth_res["gate"].get("pallas_regression")
                  or synth_res["gate"].get("async_depth_regression")
+                 or synth_res["gate"].get("partition_regression")
+                 or synth_res["gate"].get("partition_model_regression")
                  or serve_res["gate"]["serve_regression"]
                  or serve_res["gate"].get("overload_regression")) else 0
 

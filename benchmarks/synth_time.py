@@ -32,11 +32,24 @@ Two further sections ride on the same record:
                         latency queue), outstanding depth 1 vs 4.  Gate:
                         depth-4 tokens/sec >= depth-1 (the issue-ahead
                         window must hide round-trips, paper S3.1.2).
+  partition             the wide systolic gemm floorplanned across 1/2/4
+                        mesh devices (cut channels -> ppermute
+                        interconnect).  Two relative gates: the measured
+                        4-device tokens/sec must be >= 1.5x 1-device
+                        when the devices are real (waived on forced
+                        host-platform devices sharing fewer physical
+                        cores — emulated parallelism cannot move wall
+                        clock), and the floorplanner's own objective
+                        must *predict* >= 1.5x at 4 devices (enforced
+                        everywhere 4 devices are visible: it is a
+                        deterministic property of the placement, not of
+                        the machine).
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -49,6 +62,7 @@ except ImportError:                     # script mode: python benchmarks/...
 BENCH_JSON = bench_path("synth_time")
 
 GATE_X = 10.0
+PARTITION_GATE_X = 1.5
 
 
 def build_pipeline(n_tokens: int, stages: int, burst: int, capacity: int):
@@ -278,7 +292,99 @@ def measure_async_depth(n_tokens: int, latency: int, repeats: int,
     }
 
 
+def measure_partition(P: int, n: int, K: int, repeats: int,
+                      device_counts=(1, 2, 4)) -> dict:
+    """The wide systolic gemm compiled single-device and floorplanned
+    over each visible device count; every partitioned run must be a
+    bit-twin of the 1-device program.  Tokens are the P*P*K block-MACs
+    the PE array retires."""
+    import jax
+
+    import repro
+    from repro.apps import gemm
+
+    visible = jax.device_count()
+    counts = [c for c in device_counts if c <= visible]
+    tokens = P * P * K
+    rows = []
+    tps = {}
+    predicted = {}
+    golden = None
+    for nd in counts:
+        kw = {} if nd == 1 else {"mesh": nd}
+        top, args, check = gemm.build_step(P=P, n=n, K=K)
+        eng = repro.ENGINES["compiled"](**kw)
+        rep = eng.run(top, *args)                                  # cold
+        assert rep.ok, rep.error
+        assert check()[0]
+        got = np.concatenate([np.asarray(m.data) for m in args[2]])
+        if golden is None:
+            golden = got.copy()
+        else:
+            assert got.tobytes() == golden.tobytes(), \
+                f"{nd}-device result is not a bit-twin of 1-device"
+        placement = eng.placement_used
+        best = None
+        sweeps = None
+        for _ in range(repeats):
+            top, args, check = gemm.build_step(P=P, n=n, K=K)
+            eng = repro.ENGINES["compiled"](**kw)
+            t0 = time.perf_counter()
+            rep = eng.run(top, *args)
+            wall = time.perf_counter() - t0
+            assert rep.ok, rep.error
+            if best is None or wall < best:
+                best, sweeps = wall, eng.n_sweeps
+        tps[nd] = tokens / best
+        row = {"variant": f"dev{nd}",
+               "tokens_per_sec": round(tps[nd], 1),
+               "sweeps": sweeps, "wall_s": round(best, 6),
+               "vs_dev1_x": round(tps[nd] / tps[counts[0]], 3)}
+        if placement is not None:
+            ob = placement.objective
+            predicted[nd] = sum(ob["loads_s"]) / ob["objective_s"]
+            row.update({
+                "partition_source": eng.partition_source,
+                "cut_channels": len(ob["cut_channels"]),
+                "cut_bytes": int(ob["cut_bytes"]),
+                "max_load_s": ob["max_load_s"],
+                "predicted_speedup_x": round(predicted[nd], 3)})
+        rows.append(row)
+    sec = {
+        "config": {"P": P, "n": n, "K": K, "repeats": repeats,
+                   "device_counts": counts, "tokens": tokens},
+        "rows": rows,
+        "devices_visible": visible,
+        "host_cores": os.cpu_count(),
+        "bit_identical": True,
+        "measured_4dev_vs_1dev_x": (round(tps[4] / tps[1], 3)
+                                    if 4 in tps else None),
+        "predicted_4dev_vs_1dev_x": (round(predicted[4], 3)
+                                     if 4 in predicted else None),
+    }
+    # the wall gate only means something when each device is real
+    # compute: forced host-platform devices multiplex the same cores
+    # (often ONE in CI), so device-level parallelism cannot improve
+    # wall clock there
+    real_parallelism = (jax.devices()[0].platform != "cpu"
+                        or (os.cpu_count() or 1) >= 4)
+    if 4 not in tps:
+        sec["gate_waived"] = (f"only {visible} device(s) visible; the "
+                              f"4-device gates need 4 (set XLA_FLAGS="
+                              f"--xla_force_host_platform_device_count=8)")
+    elif not real_parallelism:
+        sec["gate_waived"] = (
+            f"forced host-platform devices share {os.cpu_count()} "
+            f"physical core(s): emulated device parallelism cannot "
+            f"improve wall clock, so the measured "
+            f"{sec['measured_4dev_vs_1dev_x']}x is recorded without "
+            f"gating; the predicted-speedup gate still applies")
+    return sec
+
+
 def main(argv=None) -> dict:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: smaller token volume, single repeat")
@@ -296,6 +402,8 @@ def main(argv=None) -> dict:
             n_tokens=1024, stages=8, burst=32, capacity=32, repeats=1)
         out["async_depth"] = measure_async_depth(n_tokens=128, latency=8,
                                                  repeats=1)
+        out["partition"] = measure_partition(P=4, n=64, K=16, repeats=1,
+                                             device_counts=(1, 4))
     else:
         out = measure(n_tokens=16384, stages=8, burst=64, capacity=64,
                       repeats=2)
@@ -303,6 +411,8 @@ def main(argv=None) -> dict:
             n_tokens=2048, stages=8, burst=32, capacity=32, repeats=2)
         out["async_depth"] = measure_async_depth(n_tokens=512, latency=8,
                                                  repeats=2)
+        out["partition"] = measure_partition(P=4, n=64, K=16, repeats=2,
+                                             device_counts=(1, 2, 4))
 
     cfg = out["config"]
     print(f"pipeline: {cfg['stages']} stages x {cfg['n_tokens']} tokens, "
@@ -334,12 +444,40 @@ def main(argv=None) -> dict:
     print(f"depth-4 vs depth-1: {ad['depth4_vs_depth1_x']}x "
           f"(gate: >= 1.0x)")
 
+    pt = out["partition"]
+    pcfg = pt["config"]
+    print(f"\npartitioned gemm (P={pcfg['P']} n={pcfg['n']} K={pcfg['K']}, "
+          f"{pt['devices_visible']} devices visible, "
+          f"{pt['host_cores']} host core(s)):")
+    for r in pt["rows"]:
+        extra = (f"  cut={r['cut_channels']}ch/{r['cut_bytes']}B "
+                 f"pred={r['predicted_speedup_x']}x "
+                 f"[{r['partition_source']}]"
+                 if "cut_channels" in r else "")
+        print(f"{r['variant']:<16} {r['tokens_per_sec']:>14.0f} "
+              f"{r['wall_s']*1e3:>9.1f}  x{r['vs_dev1_x']}{extra}")
+    print(f"4-dev vs 1-dev: measured {pt['measured_4dev_vs_1dev_x']}x, "
+          f"predicted {pt['predicted_4dev_vs_1dev_x']}x "
+          f"(gate: >= {PARTITION_GATE_X}x)"
+          + (f"  [wall gate waived: {pt['gate_waived']}]"
+             if "gate_waived" in pt else ""))
+
     out["gate"] = {
         "required_x": GATE_X,
         "synth_regression": out["compiled_speedup_vs_twin"] < GATE_X,
         "pallas_regression": bool(ic["on_tpu"]
                                   and ic["kernel_vs_xla_x"] < 1.0),
         "async_depth_regression": ad["depth4_vs_depth1_x"] < 1.0,
+        # measured-wall gate: only where device parallelism is real
+        "partition_regression": bool(
+            "gate_waived" not in pt
+            and pt["measured_4dev_vs_1dev_x"] < PARTITION_GATE_X),
+        # model gate: the floorplanner must FIND a placement whose own
+        # objective predicts >= 1.5x at 4 devices — deterministic, so
+        # enforced anywhere 4 devices are visible
+        "partition_model_regression": bool(
+            pt["predicted_4dev_vs_1dev_x"] is not None
+            and pt["predicted_4dev_vs_1dev_x"] < PARTITION_GATE_X),
     }
     if out["gate"]["synth_regression"] and ambient_impl == "interpret":
         # $REPRO_RING_IMPL=interpret routes every channel op through the
@@ -361,6 +499,14 @@ def main(argv=None) -> dict:
     if out["gate"]["async_depth_regression"]:
         print(f"ASYNC DEPTH REGRESSION: depth-4 "
               f"{ad['depth4_vs_depth1_x']}x < 1.0x depth-1")
+    if out["gate"]["partition_regression"]:
+        print(f"PARTITION REGRESSION: 4-device "
+              f"{pt['measured_4dev_vs_1dev_x']}x < required "
+              f"{PARTITION_GATE_X}x 1-device")
+    if out["gate"]["partition_model_regression"]:
+        print(f"PARTITION MODEL REGRESSION: floorplanner predicts "
+              f"{pt['predicted_4dev_vs_1dev_x']}x < required "
+              f"{PARTITION_GATE_X}x at 4 devices")
     return out
 
 
@@ -368,4 +514,7 @@ if __name__ == "__main__":
     res = main()
     raise SystemExit(1 if (res["gate"]["synth_regression"]
                            or res["gate"]["pallas_regression"]
-                           or res["gate"]["async_depth_regression"]) else 0)
+                           or res["gate"]["async_depth_regression"]
+                           or res["gate"]["partition_regression"]
+                           or res["gate"]["partition_model_regression"])
+                     else 0)

@@ -30,8 +30,12 @@ class AppResult:
 
 
 def simulate(name: str, top: Callable, args: tuple, engine: str,
-             check: Callable[[], tuple[bool, float]]) -> AppResult:
-    rep = ENGINES[engine]().run(top, *args)
+             check: Callable[[], tuple[bool, float]],
+             engine_kwargs: Optional[dict] = None) -> AppResult:
+    """``engine_kwargs`` go to the engine constructor — e.g.
+    ``{"mesh": 4}`` runs the compiled engine partitioned over 4
+    devices."""
+    rep = ENGINES[engine](**(engine_kwargs or {})).run(top, *args)
     if not rep.ok:
         return AppResult(name=name, report=rep, correct=None)
     good, err = check()

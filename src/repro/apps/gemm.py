@@ -217,10 +217,12 @@ def build_step(P: int = 4, n: int = 8, K: int = 4, seed: int = 0):
 
 
 def run_step(engine: str = "coroutine", P: int = 4, n: int = 8, K: int = 4,
-             seed: int = 0) -> AppResult:
-    """Run the step-form graph — ``engine="compiled"`` synthesizes it."""
+             seed: int = 0, engine_kwargs: dict = None) -> AppResult:
+    """Run the step-form graph — ``engine="compiled"`` synthesizes it;
+    ``engine_kwargs={"mesh": N}`` floorplans it over N devices."""
     top, args, check = build_step(P=P, n=n, K=K, seed=seed)
-    return simulate("gemm_step", top, args, engine, check)
+    return simulate("gemm_step", top, args, engine, check,
+                    engine_kwargs=engine_kwargs)
 
 
 def build_step_async(P: int = 4, n: int = 8, K: int = 4, seed: int = 0,

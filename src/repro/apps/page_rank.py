@@ -300,10 +300,13 @@ def build_step(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,
     return Top, (r0_mm, out_mm, deg_mm, edge_mms, plan_mms), check
 
 
-def run_step(engine: str = "coroutine", **kw) -> AppResult:
-    """Run the step-form graph — ``engine="compiled"`` synthesizes it."""
+def run_step(engine: str = "coroutine", engine_kwargs: dict = None,
+             **kw) -> AppResult:
+    """Run the step-form graph — ``engine="compiled"`` synthesizes it;
+    ``engine_kwargs={"mesh": N}`` floorplans it over N devices."""
     top, args, check = build_step(**kw)
-    return simulate("page_rank_step", top, args, engine, check)
+    return simulate("page_rank_step", top, args, engine, check,
+                    engine_kwargs=engine_kwargs)
 
 
 def build_step_async(n_vertices: int = 32, n_edges: int = 128, n_pe: int = 2,

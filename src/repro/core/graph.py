@@ -290,10 +290,27 @@ class Graph:
             raise GraphValidationError("; ".join(errs))
 
     # ------------------------------------------------------------------
-    def to_dot(self) -> str:
+    def to_dot(self, placement=None) -> str:
+        """GraphViz rendering; pass a ``floorplan.Placement`` (or any
+        object with parallel ``task_names`` / ``owners``) to color leaf
+        tasks by their assigned device and bold the cut channels."""
+        owner_of = {}
+        if placement is not None:
+            owner_of = dict(zip(placement.task_names, placement.owners))
+        # one fill per device, cycled: readable up to ~8-way meshes
+        palette = ["lightblue", "palegreen", "lightsalmon", "plum",
+                   "khaki", "lightpink", "aquamarine", "wheat"]
         lines = ["digraph G {", "  rankdir=LR;"]
         for i in self.instances:
             shape = "box" if i.children else "ellipse"
+            style = ""
+            if i.name in owner_of:
+                d = int(owner_of[i.name])
+                style = (f', style=filled, '
+                         f'fillcolor="{palette[d % len(palette)]}"')
+                lines.append(f'  t{i.uid} [label="{i.name}\\ndev{d}", '
+                             f'shape={shape}{style}];')
+                continue
             lines.append(f'  t{i.uid} [label="{i.name}", shape={shape}];')
         for m in self.interfaces:
             lines.append(f'  m{m.uid} [label="{m.name}\\n{m.iface_kind}", '
@@ -302,9 +319,14 @@ class Graph:
             if c.iface is not None:
                 continue    # drawn as one memory edge per port, below
             if c.producer is not None and c.consumer is not None:
+                cut = (owner_of.get(c.producer.name) is not None
+                       and owner_of.get(c.consumer.name) is not None
+                       and owner_of[c.producer.name]
+                       != owner_of[c.consumer.name])
+                style = ', style=bold, color=red' if cut else ''
                 lines.append(
                     f'  t{c.producer.uid} -> t{c.consumer.uid} '
-                    f'[label="{c.name}/{c.capacity}"];')
+                    f'[label="{c.name}/{c.capacity}"{style}];')
         for m in self.interfaces:
             if isinstance(m, AsyncMMap):
                 if m.owner is not None:

@@ -34,6 +34,15 @@ Whole-graph lowerings are keyed in the PR-2 compile cache by the graph's
 structural hash + input avals: a second process re-running the same graph
 performs **zero XLA compiles**.
 
+Since schema ``synth3`` a graph can also be **partitioned** across a
+1-D device mesh (``CompiledEngine(mesh=N)``): the floorplanner
+(:mod:`repro.core.floorplan`) assigns tasks to devices on real per-task
+costs, and ``_build_partitioned_program`` lowers the cut channels to
+``lax.ppermute`` exchanges inside a sweep-synchronous ``shard_map``
+body that is a bit-twin of the single-device program.  Placements are
+content-addressed artifacts; the owners vector folds into the compile
+key, so re-partitioning and recompiling are both zero on reuse.
+
 The ring-buffer ops themselves (pop/push bursts, fused guard
 evaluation) dispatch through :mod:`repro.kernels.ring` — Pallas kernels
 on TPU, a bit-exact vectorized XLA reference elsewhere, interpret mode
@@ -84,7 +93,16 @@ from ..kernels.dispatch import resolve_impl
 from ..kernels.ring import (RING_CHOICES, RING_ENV, eval_guards, ring_pop,
                             ring_push)
 
-SYNTH_SCHEMA = "synth2"
+SYNTH_SCHEMA = "synth3"
+
+try:                                    # moved to jax.shard_map in 0.5+
+    _shard_map = jax.shard_map
+except AttributeError:                  # pragma: no cover - version compat
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
 
 
 def _canon_dtype(dtype: Any) -> np.dtype:
@@ -838,6 +856,48 @@ _P_ACC_R, _P_DEL_R, _P_ACC_W, _P_DEL_W, _P_MAX_R, _P_MAX_W = \
     10, 11, 12, 13, 14, 15
 
 
+def _guard_tables(plan: _Plan):
+    """Static fused-guard tables shared by the single-device and
+    partitioned programs: per (task, phase) read/write token needs over
+    every channel, and the cumulative phase bounds (padded with
+    int32-max so shorter tasks never advance past their last phase).
+    Returns ``(need_r, need_w, bounds_or_None, n_ph_max)``."""
+    n_tasks = len(plan.tasks)
+    n_chans = len(plan.channels)
+    n_ph_max = max((len(tp.phases) for tp in plan.tasks), default=1)
+    need_r_np = np.zeros((n_tasks, n_ph_max, max(n_chans, 1)), np.int32)
+    need_w_np = np.zeros_like(need_r_np)
+    for ti, tp in enumerate(plan.tasks):
+        for pi, ph in enumerate(tp.phases):
+            for ci, r in ph.reads.items():
+                need_r_np[ti, pi, ci] = r
+            for ci, w in ph.writes.items():
+                need_w_np[ti, pi, ci] = w
+    bounds_np = None
+    if n_ph_max > 1:
+        bounds_np = np.full((n_tasks, n_ph_max - 1),
+                            np.iinfo(np.int32).max, np.int32)
+        for ti, tp in enumerate(plan.tasks):
+            b = tp.bounds[:-1]
+            bounds_np[ti, :len(b)] = b
+    return need_r_np, need_w_np, bounds_np, n_ph_max
+
+
+def _rebase_port_dues(pc: tuple, sweeps) -> tuple:
+    """Rewrite one port carry's due stamps from chunk-local absolute
+    sweeps to "sweeps remaining" (in-use slots only; free slots zero),
+    so a restored snapshot replays response timing against a fresh
+    chunk's counter."""
+    d = pc[_P_RADDR].shape[0]
+    iota = jnp.arange(d, dtype=jnp.int32)
+    in_r = ((iota - pc[_P_RHEAD]) % d) < pc[_P_RSIZE]
+    in_w = ((iota - pc[_P_WHEAD]) % d) < pc[_P_WSIZE]
+    out = list(pc)
+    out[_P_RDUE] = jnp.where(in_r, pc[_P_RDUE] - sweeps, 0)
+    out[_P_WDUE] = jnp.where(in_w, pc[_P_WDUE] - sweeps, 0)
+    return tuple(out)
+
+
 def _build_program(plan: _Plan, resumable: bool = False) -> Callable:
     """One jitted function for the whole graph.
 
@@ -867,46 +927,26 @@ def _build_program(plan: _Plan, resumable: bool = False) -> Callable:
     bit-identical coroutine twin.
 
     With ``resumable=True`` the program instead takes the full channel
-    state, the firing counters and a sweep budget as inputs and returns
-    the complete carry: ``program(states0, mmaps0, chans0, fires0,
-    max_sweeps)`` runs at most ``max_sweeps`` sweeps and hands back
-    ``(chans, states, mmaps, fires, progress, sweeps, maxocc, sizes)`` —
-    the ``lax.while_loop`` carry *is* the snapshot, which is how the
-    recovery subsystem (:mod:`repro.ft.recovery`) checkpoints compiled
-    runs between carry sweeps.  Both variants trace the identical sweep
-    body, so a chunked resumable run lands on the same fires — and
-    therefore bit-identical channel/mmap contents — as one uninterrupted
-    program.  Resumable programs refuse ports (the recovery snapshot
-    schema has no latency-queue rows yet)."""
+    and port state, the firing counters and a sweep budget as inputs and
+    returns the complete carry: ``program(states0, mmaps0, chans0,
+    ports0, fires0, max_sweeps)`` runs at most ``max_sweeps`` sweeps and
+    hands back ``(chans, states, mmaps, ports, fires, progress, sweeps,
+    maxocc, sizes)`` — the ``lax.while_loop`` carry *is* the snapshot,
+    which is how the recovery subsystem (:mod:`repro.ft.recovery`)
+    checkpoints compiled runs between carry sweeps.  In-flight port
+    requests stamp their due sweep against the *chunk-local* sweep
+    counter, so before returning, every latency-queue due entry is
+    rebased to "sweeps remaining" (``due - sweeps`` for in-use slots) —
+    a snapshot restored into a fresh chunk replays delivery timing
+    exactly.  Both variants trace the identical sweep body, so a chunked
+    resumable run lands on the same fires — and therefore bit-identical
+    channel/mmap/port contents — as one uninterrupted program."""
     caps = [c.capacity for c in plan.channels]
     totals = np.asarray([tp.total for tp in plan.tasks], np.int32)
     n_chans = len(plan.channels)
     n_tasks = len(plan.tasks)
     ring_impl = plan.ring_impl
-    if resumable and plan.ports:
-        raise SynthesisError(
-            f"resumable synthesis does not cover async_mmap ports yet "
-            f"(in-flight requests are not in the snapshot schema); ports: "
-            f"{[p.name for p in plan.ports]}")
-
-    # static fused-guard tables: per (task, phase) read/write token needs
-    # over every channel, and the cumulative phase bounds (padded with
-    # int32-max so shorter tasks never advance past their last phase)
-    n_ph_max = max((len(tp.phases) for tp in plan.tasks), default=1)
-    need_r_np = np.zeros((n_tasks, n_ph_max, max(n_chans, 1)), np.int32)
-    need_w_np = np.zeros_like(need_r_np)
-    for ti, tp in enumerate(plan.tasks):
-        for pi, ph in enumerate(tp.phases):
-            for ci, r in ph.reads.items():
-                need_r_np[ti, pi, ci] = r
-            for ci, w in ph.writes.items():
-                need_w_np[ti, pi, ci] = w
-    if n_ph_max > 1:
-        bounds_np = np.full((n_tasks, n_ph_max - 1),
-                            np.iinfo(np.int32).max, np.int32)
-        for ti, tp in enumerate(plan.tasks):
-            b = tp.bounds[:-1]
-            bounds_np[ti, :len(b)] = b
+    need_r_np, need_w_np, bounds_np, n_ph_max = _guard_tables(plan)
 
     def _service_ports(chans, ports, sweeps):
         """One per-sweep service step for every port: deliver due
@@ -1098,15 +1138,17 @@ def _build_program(plan: _Plan, resumable: bool = False) -> Callable:
 
     if resumable:
         def program(states0: tuple, mmaps0: tuple, chans0: tuple,
-                    fires0, max_sweeps):
-            chans, states, mmaps, _, fires, progress, sweeps, maxocc = \
-                _run_loop(tuple(tuple(c) for c in chans0), states0, mmaps0,
-                          (), jnp.asarray(fires0, jnp.int32),
-                          jnp.asarray(max_sweeps, jnp.int32))
+                    ports0: tuple, fires0, max_sweeps):
+            chans, states, mmaps, ports, fires, progress, sweeps, maxocc \
+                = _run_loop(tuple(tuple(c) for c in chans0), states0,
+                            mmaps0, tuple(tuple(p) for p in ports0),
+                            jnp.asarray(fires0, jnp.int32),
+                            jnp.asarray(max_sweeps, jnp.int32))
+            ports = tuple(_rebase_port_dues(p, sweeps) for p in ports)
             sizes = (jnp.stack([c[2] for c in chans]) if n_chans
                      else jnp.zeros((1,), jnp.int32))
-            return (tuple(chans), tuple(states), tuple(mmaps), fires,
-                    progress, sweeps, maxocc, sizes)
+            return (tuple(chans), tuple(states), tuple(mmaps), ports,
+                    fires, progress, sweeps, maxocc, sizes)
     else:
         def program(states0: tuple, mmaps0: tuple, ports0: tuple):
             chans0 = tuple(
@@ -1131,6 +1173,177 @@ def _fire_branch(plan: _Plan, tp: _TaskPlan, fn: Callable) -> Callable:
         return probe(state, chs, mms)
 
     return branch
+
+
+def _build_partitioned_program(plan: _Plan, owners, mesh,
+                               axis: str = "dev") -> Callable:
+    """The multi-device twin of :func:`_build_program`: one
+    ``shard_map`` whose per-device body runs the whole-graph while_loop,
+    firing only the tasks ``owners`` assigns to that device.
+
+    The partition invariant is *sweep-synchronous SPMD*: at every sweep
+    start, all devices agree on every channel's head/size and every
+    task's firing count, and agree on the buffer contents of every
+    channel they might touch.  The sweep body maintains it with zero
+    mid-sweep communication:
+
+    * **guards/fires are replicated by construction** — ``eval_guards``
+      reads only head/size vectors, which every device carries and
+      advances identically, so the fire vector (and hence phase indices
+      and the loop condition) needs no collective;
+    * **a device executes only its own tasks** (``lax.cond`` on
+      ``owner == axis_index``), paying compute only for its partition;
+    * **head/size are re-synchronized by arithmetic, not exchange**: a
+      firing's pops/pushes move head/size by the *static* per-phase
+      token counts, so sweep-end metadata is recomputed globally as
+      ``head += Σ fired·reads``, ``size += Σ fired·(writes - reads)``
+      and overwritten on every device — for locally-fired tasks this
+      lands exactly where the local ring ops already did;
+    * **cut channels ship their ring once per sweep**: pops never
+      mutate buffer contents and pushes land at ``(head+size+i) % cap``
+      — invariant under the consumer's concurrent pops — so sending the
+      producer's post-push buffer to the consumer via ``lax.ppermute``
+      (and adopting it with a ``where`` on the receiver) restores full
+      agreement.  Intra-device channels never hit the interconnect.
+
+    Under this invariant the partitioned run executes the identical
+    firing schedule, pops the identical values and writes the identical
+    mmap cells as the single-device lowering — bit-identical outputs.
+    (Channel ``max_occupancy`` becomes sweep-granular: sampled from
+    sweep-end sizes rather than after every firing.)
+
+    Outputs are stacked across the mesh axis (every leaf gains a
+    leading device dimension); the caller selects the authoritative row
+    — the writer task's owner for each written mmap, any row for the
+    replicated fires/sweeps/maxocc/sizes.
+    """
+    if plan.ports:
+        raise SynthesisError(
+            "partitioned lowering does not cover async_mmap ports")
+    caps = [c.capacity for c in plan.channels]
+    totals = np.asarray([tp.total for tp in plan.tasks], np.int32)
+    n_chans = len(plan.channels)
+    n_tasks = len(plan.tasks)
+    ring_impl = plan.ring_impl
+    need_r_np, need_w_np, bounds_np, n_ph_max = _guard_tables(plan)
+    owners_np = np.asarray(owners, np.int32)
+    caps_np = np.asarray(caps, np.int32) if n_chans else \
+        np.zeros((1,), np.int32)
+    # cut edges: (channel, producer device, consumer device)
+    prod = [-1] * n_chans
+    cons = [-1] * n_chans
+    for ti, tp in enumerate(plan.tasks):
+        for ph in tp.phases:
+            for ci in ph.writes:
+                prod[ci] = ti
+            for ci in ph.reads:
+                cons[ci] = ti
+    cuts = [(ci, int(owners_np[prod[ci]]), int(owners_np[cons[ci]]))
+            for ci in range(n_chans)
+            if prod[ci] >= 0 and cons[ci] >= 0
+            and owners_np[prod[ci]] != owners_np[cons[ci]]]
+
+    def device_body(states0, mmaps0):
+        me = jax.lax.axis_index(axis)
+        owners_v = jnp.asarray(owners_np)
+        totals_v = jnp.asarray(totals)
+        caps_v = jnp.asarray(caps_np)
+        chans0 = tuple(
+            (jnp.zeros((c.capacity,) + c.shape, _canon_dtype(c.dtype)),
+             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+            for c in plan.channels)
+        fires0 = jnp.zeros((n_tasks,), jnp.int32)
+        maxocc0 = jnp.zeros((max(n_chans, 1),), jnp.int32)
+
+        def cond(carry):
+            _, _, _, fires, progress, sweeps, _ = carry
+            return progress & jnp.any(fires < totals_v)
+
+        def body(carry):
+            chans, states, mmaps, fires, _, sweeps, maxocc = carry
+            chans = list(chans)
+            states = list(states)
+            mmaps = list(mmaps)
+            if n_ph_max > 1:
+                phase_vec = jnp.sum(
+                    (fires[:, None] >= jnp.asarray(bounds_np))
+                    .astype(jnp.int32), axis=1)
+            else:
+                phase_vec = jnp.zeros((n_tasks,), jnp.int32)
+            live = fires < totals_v
+            if n_chans:
+                heads0 = jnp.stack([c[1] for c in chans])
+                sizes0 = jnp.stack([c[2] for c in chans])
+                nr = jnp.take_along_axis(
+                    jnp.asarray(need_r_np), phase_vec[:, None, None],
+                    axis=1)[:, 0, :]
+                nw = jnp.take_along_axis(
+                    jnp.asarray(need_w_np), phase_vec[:, None, None],
+                    axis=1)[:, 0, :]
+                fire_vec = eval_guards(
+                    sizes0, jnp.asarray(caps, jnp.int32), nr, nw, live,
+                    impl=ring_impl)
+            else:
+                fire_vec = live
+            for ti, tp in enumerate(plan.tasks):
+                fire = fire_vec[ti] & (owners_v[ti] == me)
+                phase = phase_vec[ti] if len(tp.phases) > 1 else None
+
+                branches = [
+                    _fire_branch(plan, tp, ph.fn) for ph in tp.phases]
+
+                def fire_fn(sub, branches=branches, phase=phase):
+                    if len(branches) == 1:
+                        return branches[0](sub)
+                    return jax.lax.switch(phase, branches, sub)
+
+                sub = (states[ti],
+                       tuple(chans[ci] for ci in tp.chan_ids),
+                       tuple(mmaps[mi] for mi in tp.mmap_ids))
+                new_sub = jax.lax.cond(fire, fire_fn, lambda s: s, sub)
+                states[ti] = new_sub[0]
+                for k, ci in enumerate(tp.chan_ids):
+                    chans[ci] = new_sub[1][k]
+                for k, mi in enumerate(tp.mmap_ids):
+                    mmaps[mi] = new_sub[2][k]
+            if n_chans:
+                fv = fire_vec.astype(jnp.int32)
+                delta_r = jnp.sum(fv[:, None] * nr, axis=0)
+                delta_w = jnp.sum(fv[:, None] * nw, axis=0)
+                new_heads = (heads0 + delta_r) % jnp.maximum(caps_v, 1)
+                new_sizes = sizes0 + delta_w - delta_r
+                for ci, src, dst in cuts:
+                    buf = chans[ci][0]
+                    recv = jax.lax.ppermute(buf, axis, [(src, dst)])
+                    chans[ci] = (jnp.where(me == dst, recv, buf),) \
+                        + chans[ci][1:]
+                chans = [(chans[ci][0], new_heads[ci], new_sizes[ci])
+                         for ci in range(n_chans)]
+                maxocc = jnp.maximum(maxocc, new_sizes)
+            fires = fires + fire_vec.astype(jnp.int32)
+            return (tuple(chans), tuple(states), tuple(mmaps), fires,
+                    jnp.any(fire_vec), sweeps + 1, maxocc)
+
+        carry0 = (chans0, tuple(states0), tuple(mmaps0), fires0,
+                  jnp.ones((), jnp.bool_), jnp.zeros((), jnp.int32),
+                  maxocc0)
+        chans, states, mmaps, fires, _, sweeps, maxocc = \
+            jax.lax.while_loop(cond, body, carry0)
+        sizes = (jnp.stack([c[2] for c in chans]) if n_chans
+                 else jnp.zeros((max(n_chans, 1),), jnp.int32))
+        out = (tuple(mmaps), fires, sweeps, maxocc, sizes)
+        # every leaf gains a leading device axis; the concatenated
+        # global view lets the host pick the authoritative row
+        return jax.tree.map(lambda x: jnp.asarray(x)[None], out)
+
+    from jax.sharding import PartitionSpec as _P
+
+    def program(states0: tuple, mmaps0: tuple):
+        return _shard_map(device_body, mesh=mesh,
+                          in_specs=(_P(), _P()), out_specs=_P(axis),
+                          check_vma=False)(states0, mmaps0)
+
+    return program
 
 
 # ---------------------------------------------------------------------------
@@ -1158,17 +1371,25 @@ class CompiledEngine(EngineBase):
     name = "compiled"
 
     def __init__(self, track_stats: bool = False, cache: Any = None,
-                 ring_impl: Optional[str] = None, **kw):
+                 ring_impl: Optional[str] = None, mesh: Any = None,
+                 placement: Any = None, **kw):
         super().__init__(track_stats, **kw)
         self.cache = cache          # CompileCache | None=default | False=off
         # interconnect kernel backend: "pallas" | "interpret" | "xla";
         # None defers to $REPRO_RING_IMPL / the backend default
         self.ring_impl = ring_impl
+        # multi-device floorplan: mesh = device count (int) or a 1-D
+        # jax.sharding.Mesh; placement = manual {task_name: device}
+        # overrides (partial pins OK) or a floorplan.Placement to reuse
+        self.mesh = mesh
+        self.placement = placement
         self._cur: Optional[TaskInstance] = None
         # post-run introspection (tests / benchmarks)
         self.compile_source: Optional[str] = None
         self.compile_key: Optional[str] = None
         self.n_sweeps = 0
+        self.placement_used = None      # floorplan.Placement after a run
+        self.partition_source = None    # "partitioned" | "memo" | None
 
     # -- runtime protocol: any live stream op means "not step form" ----------
     def _refuse(self, op: str):
@@ -1340,13 +1561,13 @@ class CompiledEngine(EngineBase):
             raise SynthesisError(f"graph failed validation: {e}") from e
         return plan, graph
 
-    def _cache_key(self, graph, args: tuple,
-                   ring_impl: str = "xla") -> str:
+    def _cache_key(self, graph, args: tuple, ring_impl: str = "xla",
+                   extra: str = "") -> str:
         h = hashlib.sha256()
         h.update(graph.structural_hash().encode())
         h.update(_stable_repr(aval_signature(args, {})).encode())
         h.update(f"jax:{jax.__version__}:{jax.default_backend()}:"
-                 f"{SYNTH_SCHEMA}:ring={ring_impl}".encode())
+                 f"{SYNTH_SCHEMA}:ring={ring_impl}:{extra}".encode())
         return h.hexdigest()
 
     # -- run -----------------------------------------------------------------
@@ -1368,6 +1589,8 @@ class CompiledEngine(EngineBase):
         t0 = time.perf_counter()
         try:
             plan, graph, result = self._elaborate(top, *args, **kwargs)
+            if self.mesh is not None:
+                return self._run_partitioned(plan, graph, result, t0)
             states0 = tuple(tp.state0 for tp in plan.tasks)
             mmaps0 = tuple(jnp.asarray(m.data) for m in plan.mmaps)
             ports0 = tuple(_port_carry0(p) for p in plan.ports)
@@ -1387,39 +1610,131 @@ class CompiledEngine(EngineBase):
             self.compile_source = source
             mm_final, ports_final, fires, sweeps, maxocc, sizes = exe(
                 states0, mmaps0, ports0)
-            fires = np.asarray(fires)
-            maxocc = np.asarray(maxocc)
-            sizes = np.asarray(sizes)
-            self.n_sweeps = self.switches = int(sweeps)
-            self._writeback(plan, mm_final)
             self._writeback_ports(plan, ports_final)
-            self._fill_stats(plan, fires, maxocc)
             self._fill_port_stats(plan, ports_final)
-            totals = np.asarray([tp.total for tp in plan.tasks], np.int32)
-            stuck = bool(np.any(fires < totals))
-            for tp, f, tot in zip(plan.tasks, fires, totals):
-                tp.inst.state = "finished" if f >= tot else "blocked"
-            err = None
-            if stuck:
-                blocked = [tp.inst.name for tp, f, tot
-                           in zip(plan.tasks, fires, totals) if f < tot]
-                occ = {c.name: int(s)
-                       for c, s in zip(plan.channels, sizes)}
-                err = (f"synthesized graph stalled after {self.switches} "
-                       f"sweeps; blocked tasks: {blocked}; channel "
-                       f"occupancy at stall: {occ}")
-                # unified diagnostic (docs/robustness.md): the same
-                # structured payload the simulation engines attach
-                self._deadlock_report = DeadlockReport(
-                    engine=self.name, reason="stall",
-                    blocked=[(n, "stalled") for n in blocked],
-                    occupancy=occ, clock=self.switches,
-                    switches=self.switches,
-                    wall_s=time.perf_counter() - t0)
-            return self._report(not stuck, time.perf_counter() - t0, err,
-                                result)
+            return self._finish(plan, mm_final, fires, sweeps, maxocc,
+                                sizes, result, t0)
         finally:
             clear_context()
+
+    def _resolve_mesh(self):
+        """``self.mesh`` as a validated 1-D Mesh: an int means "the
+        first N visible devices on a fresh axis" (see
+        ``distributed.sharding.device_mesh``)."""
+        from jax.sharding import Mesh
+        if isinstance(self.mesh, Mesh):
+            mesh = self.mesh
+            if len(mesh.axis_names) != 1:
+                raise SynthesisError(
+                    f"partitioned synthesis takes a 1-D mesh; got axes "
+                    f"{mesh.axis_names!r} — task graphs are placed along "
+                    f"one device axis")
+            return mesh
+        from ..distributed.sharding import device_mesh
+        return device_mesh(int(self.mesh))
+
+    def _run_partitioned(self, plan: _Plan, graph, result,
+                         t0: float) -> SimReport:
+        """The mesh floorplan path: place tasks (cached artifact), lower
+        the partitioned program (cached executable), pick authoritative
+        output rows, and finish exactly like the single-device path."""
+        from .floorplan import Placement, plan_placement
+        mesh = self._resolve_mesh()
+        axis = mesh.axis_names[0]
+        n_dev = mesh.devices.size
+        if plan.ports:
+            users = sorted({tp.inst.name for tp in plan.tasks
+                            if tp.port_ids})
+            raise SynthesisError(
+                f"partitioned synthesis does not cover async_mmap ports "
+                f"yet: port(s) {[p.name for p in plan.ports]} bound by "
+                f"task(s) {users} — the latency queue is serviced by one "
+                f"device's sweep and has no cut protocol; run the graph "
+                f"single-device (mesh=None) or route the memory traffic "
+                f"through channels")
+        if isinstance(self.placement, Placement):
+            placement = self.placement
+            if placement.n_devices != n_dev or \
+                    len(placement.owners) != len(plan.tasks):
+                raise SynthesisError(
+                    f"placement reuse mismatch: placement is for "
+                    f"{placement.n_devices} devices / "
+                    f"{len(placement.owners)} tasks, graph has "
+                    f"{len(plan.tasks)} tasks on a {n_dev}-device mesh")
+        else:
+            placement = plan_placement(
+                plan, graph, n_dev, overrides=self.placement,
+                cache=self.cache)
+        self.placement_used = placement
+        self.partition_source = placement.source
+        owners = np.asarray(placement.owners, np.int32)
+
+        states0 = tuple(tp.state0 for tp in plan.tasks)
+        mmaps0 = tuple(jnp.asarray(m.data) for m in plan.mmaps)
+        program = _build_partitioned_program(plan, owners, mesh, axis)
+        key = self._cache_key(
+            graph, (states0, mmaps0), plan.ring_impl,
+            extra=f"mesh={axis}:{n_dev}:owners={owners.tolist()}")
+        self.compile_key = key
+        if self.cache is False:
+            exe = jax.jit(program).lower(states0, mmaps0).compile()
+            source = "compiled"
+        else:
+            cc = self.cache if self.cache is not None else default_cache()
+            exe, source = cc.compile_cached(
+                program, (states0, mmaps0), key=key)
+        self.compile_source = source
+        mm_st, fires_st, sweeps_st, maxocc_st, sizes_st = exe(
+            states0, mmaps0)
+        # authoritative rows: the writer's owner per written mmap (the
+        # one-writer rule makes it unique); anything replicated -> row 0
+        writer_of = {}
+        for ti, tp in enumerate(plan.tasks):
+            for ph in tp.phases:
+                for mi in ph.mmap_stores:
+                    writer_of[mi] = int(owners[ti])
+        mm_final = tuple(np.asarray(m)[writer_of.get(mi, 0)]
+                         for mi, m in enumerate(mm_st))
+        fires = np.asarray(fires_st)[0]
+        sweeps = np.asarray(sweeps_st)[0]
+        maxocc = np.asarray(maxocc_st)[0]
+        sizes = np.asarray(sizes_st)[0]
+        return self._finish(plan, mm_final, fires, sweeps, maxocc, sizes,
+                            result, t0)
+
+    def _finish(self, plan: _Plan, mm_final, fires, sweeps, maxocc,
+                sizes, result, t0: float) -> SimReport:
+        """Shared back half of a compiled run: write mmaps back to host,
+        fill stats, diagnose stalls, build the report."""
+        fires = np.asarray(fires)
+        maxocc = np.asarray(maxocc)
+        sizes = np.asarray(sizes)
+        self.n_sweeps = self.switches = int(sweeps)
+        self._writeback(plan, mm_final)
+        self._fill_stats(plan, fires, maxocc)
+        totals = np.asarray([tp.total for tp in plan.tasks], np.int32)
+        stuck = bool(np.any(fires < totals))
+        for tp, f, tot in zip(plan.tasks, fires, totals):
+            tp.inst.state = "finished" if f >= tot else "blocked"
+        err = None
+        if stuck:
+            blocked = [tp.inst.name for tp, f, tot
+                       in zip(plan.tasks, fires, totals) if f < tot]
+            occ = {c.name: int(s)
+                   for c, s in zip(plan.channels, sizes)}
+            err = (f"synthesized graph stalled after {self.switches} "
+                   f"sweeps; blocked tasks: {blocked}; channel "
+                   f"occupancy at stall: {occ}")
+            # unified diagnostic (docs/robustness.md): the same
+            # structured payload the simulation engines attach
+            self._deadlock_report = DeadlockReport(
+                engine=self.name, reason="stall",
+                blocked=[(n, "stalled") for n in blocked],
+                occupancy=occ, clock=self.switches,
+                switches=self.switches,
+                wall_s=time.perf_counter() - t0)
+        return self._report(not stuck, time.perf_counter() - t0, err,
+                            result)
 
     def _writeback(self, plan: _Plan, mm_final: tuple) -> None:
         """Copy device results back into the host mmap buffers, so the

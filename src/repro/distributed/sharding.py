@@ -69,6 +69,22 @@ def for_mesh(mesh: Mesh, fsdp: bool = False) -> ShardingPolicy:
     return ShardingPolicy(dp_axes=dp_axes, fsdp=fsdp)
 
 
+def device_mesh(n_devices: Optional[int] = None, axis: str = "dev",
+                devices: Optional[list] = None) -> Mesh:
+    """A 1-D mesh over the first ``n_devices`` visible devices — the
+    floorplanner's device axis (``CompiledEngine(mesh=N)`` resolves
+    through here).  ``n_devices=None`` takes every visible device."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    n = len(devs) if n_devices is None else int(n_devices)
+    if n < 1 or n > len(devs):
+        raise ValueError(
+            f"requested a {n}-device mesh but {len(devs)} device(s) are "
+            f"visible (platform {jax.default_backend()!r}); on CPU, "
+            f"simulate more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
 def _axis_size(mesh: Mesh, axis) -> int:
     if axis is None:
         return 1

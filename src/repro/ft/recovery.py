@@ -35,9 +35,19 @@ reachable under every fair blocking engine (the KPN argument: firing counts
 determine channel contents, task states and mmap contents deterministically
 for the step-function subset — no peek/select/EoT, static I/O rates).
 
-What is *not* recoverable this way (documented in docs/robustness.md):
+``async_mmap`` ports are recoverable on the compiled engine: the port's
+latency queue (per-direction addr/due/value rings, FIFO heads/sizes, and
+request counters) lives in the resumable while_loop carry, so snapshots
+carry those rows verbatim — due stamps rebased to "sweeps remaining" at
+each chunk boundary — and the abstract schedule replays the port service
+step (accept/deliver, FIFO order, latency stamping) over token counts.
+On the *Python* engines port graphs still refuse: a per-chunk firing
+quota cannot bound the simulators' event-driven port pumps at a sweep
+boundary.
+
+What is *not* recoverable at all (documented in docs/robustness.md):
 graphs outside the step subset (EoT termination, ``peek``/``select``
-routing, async_mmap ports) have no schedule-independent cut; for those
+routing) have no schedule-independent cut; for those
 :func:`run_supervised` degrades to restart-from-scratch supervision.  The
 container-level :func:`capture_port` / :func:`restore_port` helpers still
 snapshot an ``AsyncMMap``'s outstanding-request state (accepted-but-
@@ -62,8 +72,8 @@ from ..core.engines import ENGINES, SimReport
 from ..core.errors import CrashFault, SynthesisError
 from ..core.faults import FaultInjector, FaultPlan
 from ..core.interface import AsyncMMap
-from ..core.synth import (_build_program, _canon_dtype, _twin_view,
-                          elaborate_step_graph)
+from ..core.synth import (_build_program, _canon_dtype, _port_carry0,
+                          _twin_view, elaborate_step_graph)
 from ..core.task import task
 
 
@@ -164,6 +174,11 @@ class GraphSnapshot:
     mmaps: list                        # [ndarray copy] per plan mmap
     engine: str = ""
     meta: dict = field(default_factory=dict)
+    # per-port latency-queue rows: the 16-entry ``_port_carry0`` tuple as
+    # np arrays (data buffer; read addr/due rings + head/size; write
+    # addr/due/value rings + head/size; 6 request counters), with due
+    # stamps rebased to "sweeps remaining" by the resumable program
+    ports: list = field(default_factory=list)
 
 
 def _snapshot_python(plan, graph_hash: str, sweep: int, fires, states,
@@ -191,9 +206,12 @@ def _snapshot_python(plan, graph_hash: str, sweep: int, fires, states,
 
 
 def _snapshot_carry(plan, graph_hash: str, sweep: int, chans, states,
-                    mmaps, fires, engine: str) -> GraphSnapshot:
+                    mmaps, fires, engine: str,
+                    ports: tuple = ()) -> GraphSnapshot:
     """Capture from a resumable compiled carry — the carry *is* the
-    snapshot; this only head-normalizes the rings and host-copies."""
+    snapshot; this only head-normalizes the rings and host-copies.
+    Port rows copy verbatim (the program already rebased their due
+    stamps to chunk-relative form)."""
     out_chans = []
     for (buf, head, size), c in zip(chans, plan.channels):
         b = np.asarray(buf)
@@ -207,7 +225,8 @@ def _snapshot_carry(plan, graph_hash: str, sweep: int, chans, states,
         fires=np.asarray(fires, np.int32),
         states=[jax.tree.map(np.asarray, s) for s in states],
         mmaps=[np.array(np.asarray(m), copy=True) for m in mmaps],
-        chans=out_chans, engine=engine)
+        chans=out_chans, engine=engine,
+        ports=[[np.asarray(x) for x in pc] for pc in ports])
 
 
 def _restore_python(plan, snap: GraphSnapshot, caps: list) -> None:
@@ -238,14 +257,20 @@ def _carry_from_snapshot(plan, snap: GraphSnapshot):
     states = tuple(jax.tree.map(jnp.asarray, s) for s in snap.states)
     mmaps = tuple(jnp.asarray(m) for m in snap.mmaps)
     fires = jnp.asarray(snap.fires, jnp.int32)
-    return chans, states, mmaps, fires
+    if len(snap.ports) == len(plan.ports):
+        ports = tuple(tuple(jnp.asarray(x) for x in pc)
+                      for pc in snap.ports)
+    else:                               # pre-port snapshot of a port graph
+        ports = tuple(_port_carry0(p) for p in plan.ports)
+    return chans, states, mmaps, ports, fires
 
 
 def _initial_snapshot(plan, graph_hash: str, caps: list,
                       engine: str) -> GraphSnapshot:
     """The sweep-0 snapshot: empty channels, initial states, and — the
-    load-bearing part — a copy of every mmap's *initial* contents, so a
-    restart can heal host buffers torn by a crash mid-chunk."""
+    load-bearing part — a copy of every mmap's *initial* contents (and
+    every port's backing buffer), so a restart can heal host buffers
+    torn by a crash mid-chunk."""
     chans = [(np.zeros((caps[ci],) + c.shape, _canon_dtype(c.dtype)), 0)
              for ci, c in enumerate(plan.channels)]
     return GraphSnapshot(
@@ -255,7 +280,9 @@ def _initial_snapshot(plan, graph_hash: str, caps: list,
         chans=chans,
         mmaps=[np.array(np.asarray(jnp.asarray(m.data)), copy=True)
                for m in plan.mmaps],
-        engine=engine)
+        engine=engine,
+        ports=[[np.asarray(x) for x in _port_carry0(p)]
+               for p in plan.ports])
 
 
 # ---------------------------------------------------------------------------
@@ -275,7 +302,7 @@ class SnapshotStore:
 
     @staticmethod
     def _like(plan, caps: list) -> dict:
-        return {
+        tree = {
             "fires": jnp.zeros((len(plan.tasks),), jnp.int32),
             "chans": [
                 {"buf": jnp.zeros((caps[ci],) + c.shape,
@@ -289,6 +316,15 @@ class SnapshotStore:
                                     np.dtype(m.dtype)))
                       for m in plan.mmaps],
         }
+        if plan.ports:
+            # schema rows for the latency queue — present only for port
+            # graphs, so port-free snapshots stay byte-compatible with
+            # every earlier store
+            tree["ports"] = [
+                [jnp.zeros_like(jnp.asarray(x))
+                 for x in _port_carry0(p)]
+                for p in plan.ports]
+        return tree
 
     def save(self, snap: GraphSnapshot) -> None:
         tree = {
@@ -299,6 +335,9 @@ class SnapshotStore:
             "states": [jax.tree.map(jnp.asarray, s) for s in snap.states],
             "mmaps": [jnp.asarray(m) for m in snap.mmaps],
         }
+        if snap.ports:
+            tree["ports"] = [[jnp.asarray(x) for x in pc]
+                             for pc in snap.ports]
         self.mgr.save(snap.sweep, tree, {}, extra={
             "graph_hash": snap.graph_hash, "sweep": snap.sweep,
             "engine": snap.engine, **snap.meta})
@@ -327,7 +366,9 @@ class SnapshotStore:
             chans=[(np.asarray(c["buf"]), int(c["size"]))
                    for c in tree["chans"]],
             mmaps=[np.asarray(m) for m in tree["mmaps"]],
-            engine=str(extra.get("engine", "")))
+            engine=str(extra.get("engine", "")),
+            ports=[[np.asarray(x) for x in pc]
+                   for pc in tree.get("ports", [])])
 
 
 # ---------------------------------------------------------------------------
@@ -345,15 +386,28 @@ def _abstract_schedule(plan) -> tuple[list, bool]:
     then effects apply in task order), bounds-based phase selection,
     read-available / write-fits guards — so ``cuts[s]`` equals the
     compiled ``fires`` after ``s`` sweeps and is a consistent cut for
-    every engine.  ``stalled`` is True when the schedule stopped making
-    progress before every task fired out (the abstract twin of the
-    compiled stall / simulated deadlock)."""
+    every engine.
+
+    Port graphs replay the service step too (after the task loop, in
+    ``_service_ports``'s exact order: deliver due reads, deliver due
+    writes, accept reads, accept writes — up to ``depth`` each): the
+    in-flight windows are pure-Python FIFOs of due sweeps, and sweeps
+    where the only progress is an in-flight request maturing ("waiting")
+    append duplicate cut entries, exactly like the compiled loop.
+
+    ``stalled`` is True when the schedule stopped making progress before
+    every task fired out (the abstract twin of the compiled stall /
+    simulated deadlock)."""
     caps = [c.capacity for c in plan.channels]
     sizes = [0] * len(caps)
     fires = [0] * len(plan.tasks)
     totals = [tp.total for tp in plan.tasks]
     cuts = [tuple(fires)]
-    while any(f < t for f, t in zip(fires, totals)):
+    read_q = [[] for _ in plan.ports]     # due sweeps, FIFO per port
+    write_q = [[] for _ in plan.ports]
+    sweeps = 0
+    while any(f < t for f, t in zip(fires, totals)) or \
+            any(read_q[pi] or write_q[pi] for pi in range(len(plan.ports))):
         progress = False
         sizes0 = list(sizes)    # start-of-sweep snapshot (fused guards)
         for ti, tp in enumerate(plan.tasks):
@@ -372,9 +426,40 @@ def _abstract_schedule(plan) -> tuple[list, bool]:
                     sizes[ci] += w
                 fires[ti] = f + 1
                 progress = True
+        for pi, port in enumerate(plan.ports):
+            d, lat = port.depth, port.latency
+            ra, rd, wa, wd, wr = plan.port_chan_ids[pi]
+            for _ in range(d):          # deliver due reads
+                if read_q[pi] and read_q[pi][0] <= sweeps \
+                        and sizes[rd] < caps[rd]:
+                    read_q[pi].pop(0)
+                    sizes[rd] += 1
+                    progress = True
+            for _ in range(d):          # deliver due writes
+                if write_q[pi] and write_q[pi][0] <= sweeps \
+                        and sizes[wr] < caps[wr]:
+                    write_q[pi].pop(0)
+                    sizes[wr] += 1
+                    progress = True
+            for _ in range(d):          # accept queued reads
+                if sizes[ra] > 0 and len(read_q[pi]) < d:
+                    sizes[ra] -= 1
+                    read_q[pi].append(sweeps + lat)
+                    progress = True
+            for _ in range(d):          # accept queued writes (addr+value)
+                if sizes[wa] > 0 and sizes[wd] > 0 and len(write_q[pi]) < d:
+                    sizes[wa] -= 1
+                    sizes[wd] -= 1
+                    write_q[pi].append(sweeps + lat)
+                    progress = True
+            # an in-flight request due in the future counts as progress
+            # pending, same as the compiled ``waiting`` flag
+            progress = progress or any(
+                due > sweeps for due in read_q[pi] + write_q[pi])
         if not progress:
             return cuts, True
         cuts.append(tuple(fires))
+        sweeps += 1
     return cuts, False
 
 
@@ -470,16 +555,19 @@ def run_recoverable(engine: str, top: Callable, *args,
     inj = faults.injector() if isinstance(faults, FaultPlan) else faults
     t0 = time.perf_counter()
     plan, graph, result = elaborate_step_graph(top, *args, **kwargs)
-    if getattr(plan, "ports", None):
-        # the abstract schedule replays token counts only — it cannot see
-        # the port service step's deliveries, and in-flight latency-queue
-        # requests have no rows in the snapshot schema yet.  Refuse so the
-        # supervisor degrades to restart-from-scratch (run_supervised).
+    if getattr(plan, "ports", None) and engine != "compiled":
+        # compiled chunks carry the latency queue in the resumable
+        # while_loop carry (snapshot rows since this schema); the Python
+        # engines' event-driven port pumps cannot be cut at a sweep
+        # boundary by a firing quota.  Refuse so the supervisor degrades
+        # to restart-from-scratch (run_supervised).
         raise SynthesisError(
-            f"recoverable execution does not cover async_mmap ports yet "
-            f"({[p.name for p in plan.ports]}): in-flight requests are "
-            f"outside the snapshot schema; run unsupervised on "
-            f"CompiledEngine or under restart-from-scratch supervision")
+            f"recoverable execution of async_mmap ports "
+            f"({[p.name for p in plan.ports]}) requires "
+            f"engine='compiled': the simulation engines' in-flight port "
+            f"requests live in the event heap, outside the sweep-"
+            f"boundary snapshot; run engine='compiled' or under "
+            f"restart-from-scratch supervision")
     ghash = graph.structural_hash()
     caps = [c.capacity for c in plan.channels]
     cuts, stalled = _abstract_schedule(plan)
@@ -503,19 +591,22 @@ def run_recoverable(engine: str, top: Callable, *args,
     switches = 0
     if engine == "compiled":
         program = jax.jit(_build_program(plan, resumable=True))
-        chans, states, mmaps, fires = _carry_from_snapshot(plan, snap)
+        chans, states, mmaps, ports, fires = _carry_from_snapshot(plan,
+                                                                  snap)
         s0 = snap.sweep
         while s0 < total_sweeps:
             if inj is not None:
                 inj.crash_point("chunk")
             s1 = min(s0 + every, total_sweeps)
-            chans, states, mmaps, fires, progress, sweeps, _, _ = program(
-                states, mmaps, chans, fires, np.int32(s1 - s0))
+            (chans, states, mmaps, ports, fires, progress, sweeps, _,
+             _) = program(states, mmaps, chans, ports, fires,
+                          np.int32(s1 - s0))
             switches += int(sweeps)
             s0 = s1
             if store is not None:
                 store.save(_snapshot_carry(plan, ghash, s0, chans, states,
-                                           mmaps, fires, engine))
+                                           mmaps, fires, engine,
+                                           ports=ports))
             if not bool(progress):
                 break
         # write device results back into the host buffers (all mmaps: for
@@ -526,6 +617,12 @@ def run_recoverable(engine: str, top: Callable, *args,
                 np.copyto(m.data, out)
             else:
                 m.data = out
+        for p, pc in zip(plan.ports, ports):
+            out = np.asarray(pc[0])     # _P_DATA: the port's buffer
+            if isinstance(p.data, np.ndarray):
+                np.copyto(p.data, out)
+            else:
+                p.data = out
         fires = np.asarray(fires)
     else:
         _restore_python(plan, snap, caps)

@@ -424,6 +424,78 @@ def test_capture_restore_port_inflight_write():
 
 
 # ---------------------------------------------------------------------------
+# compiled latency queues in snapshots (resumable async_mmap)
+# ---------------------------------------------------------------------------
+
+
+def _async_gemm():
+    from repro.apps import gemm
+    return gemm.build_step_async(P=2, n=4, K=4, depth=4)
+
+
+def _c_bytes(args):
+    _, _, c_ports = args
+    return np.stack([np.asarray(p.data) for p in c_ports]).tobytes()
+
+
+@pytest.mark.slow
+def test_python_engines_refuse_port_graphs(tmp_path):
+    from repro.core import SynthesisError
+    top, args, _ = _async_gemm()
+    store = SnapshotStore(tmp_path)
+    with pytest.raises(SynthesisError, match="async_mmap ports .*compiled"):
+        run_recoverable("coroutine", top, *args, store=store,
+                        snapshot_every=2)
+
+
+@pytest.mark.slow
+def test_compiled_port_chunks_match_plain(tmp_path):
+    """Depth-4 async gemm run in snapshot chunks is a bit-twin of the
+    unchunked compiled run, and the snapshot rows carry the four ports'
+    full 16-row latency-queue carry."""
+    top, args, check = _async_gemm()
+    rep = repro.ENGINES["compiled"]().run(top, *args)
+    assert rep.ok and check()[0]
+    golden = _c_bytes(args)
+
+    store = SnapshotStore(tmp_path)
+    top2, args2, check2 = _async_gemm()
+    rep2 = run_recoverable("compiled", top2, *args2, store=store,
+                           snapshot_every=3)
+    assert rep2.ok, rep2.error
+    assert check2()[0]
+    assert _c_bytes(args2) == golden
+
+    from repro.core.synth import elaborate_step_graph
+    plan, graph, _ = elaborate_step_graph(top2, *args2)
+    snap = store.load_latest(plan, graph.structural_hash(),
+                             [c.capacity for c in plan.channels])
+    assert snap is not None
+    assert len(snap.ports) == len(plan.ports) == 4
+    assert all(len(pc) == 16 for pc in snap.ports)
+
+
+@pytest.mark.slow
+def test_compiled_port_crash_resume_supervised(tmp_path):
+    """A crash between chunks resumes from the port-bearing snapshot and
+    still produces the plain run's exact output bytes."""
+    top, args, check = _async_gemm()
+    rep = repro.ENGINES["compiled"]().run(top, *args)
+    assert rep.ok and check()[0]
+    golden = _c_bytes(args)
+
+    store = SnapshotStore(tmp_path)
+    top2, args2, check2 = _async_gemm()
+    rep2 = run_supervised("compiled", top2, *args2, store=store,
+                          snapshot_every=3,
+                          faults=FaultPlan(seed=7, crash={"chunk": 2}),
+                          policy=RestartPolicy(max_restarts=2, backoff_s=0.0))
+    assert rep2.ok, rep2.error
+    assert check2()[0]
+    assert _c_bytes(args2) == golden
+
+
+# ---------------------------------------------------------------------------
 # serving journal
 # ---------------------------------------------------------------------------
 
